@@ -1,0 +1,31 @@
+"""Shared benchmark state: one profiler + derived configuration reused by
+every table/figure benchmark (mirrors one VStore configuration process)."""
+
+from __future__ import annotations
+
+import functools
+import time
+
+from repro.core import Profiler, derive_config
+from repro.core.knobs import IngestSpec
+
+SPEC = IngestSpec()
+ACCURACIES = (0.9, 0.8)       # reduced ladder keeps the suite CPU-affordable
+N_SEGMENTS = 2
+
+
+@functools.cache
+def profiler() -> Profiler:
+    return Profiler(SPEC, n_segments=N_SEGMENTS, repeats=1)
+
+
+@functools.cache
+def config():
+    t0 = time.perf_counter()
+    cfg = derive_config(profiler(), accuracies=ACCURACIES)
+    cfg.derive_seconds = time.perf_counter() - t0
+    return cfg
+
+
+def row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,59 @@
+"""Benchmark harness: one function per paper table/figure, plus the
+roofline summary from the dry-run artifacts.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+import traceback
+
+
+def bench_roofline():
+    """§Roofline: three-term table from the compiled dry-run artifacts."""
+    from repro.launch.roofline import load
+
+    from .common import row
+    path = "experiments/dryrun"
+    if not os.path.isdir(path):
+        row("roofline", 0.0, "status=missing;hint=run repro.launch.dryrun")
+        return
+    rows = load(path, "pod16x16")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        row("roofline", r["compute_s"] * 1e6 if r["compute_s"] else 0.0,
+            f"arch={r['arch']};shape={r['shape']};"
+            f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+            f"collective_s={r['collective_s']:.3e};dominant={r['dominant']};"
+            f"useful={r['useful_flops_ratio']:.3f};"
+            f"roofline_frac={r['roofline_fraction']:.4f}")
+
+
+def main() -> None:
+    from . import paper_benches as B
+    benches = [
+        B.bench_fig3_coding,
+        B.bench_fig4_knobs,
+        B.bench_fig6_retrieval_bottleneck,
+        B.bench_table2_configuration,
+        B.bench_fig11_end_to_end,
+        B.bench_fig12_erosion,
+        B.bench_table3_ingest_budget,
+        B.bench_fig13_overhead,
+        bench_roofline,
+    ]
+    print("name,us_per_call,derived")
+    for bench in benches:
+        t0 = time.perf_counter()
+        try:
+            bench()
+        except Exception as e:  # noqa: BLE001
+            print(f"{bench.__name__},0.0,ERROR={type(e).__name__}:{e}")
+            traceback.print_exc()
+        print(f"_{bench.__name__}_wall,"
+              f"{(time.perf_counter() - t0) * 1e6:.0f},done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Resource-budget adaptation (paper §6.3): the same consumer set derives
+different configurations as ingestion/storage budgets tighten.
+
+    PYTHONPATH=src python examples/budget_adaptation.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import Profiler, coalesce, derive_config
+from repro.core.erosion import plan_erosion
+from repro.core.knobs import IngestSpec
+
+
+def main():
+    spec = IngestSpec()
+    prof = Profiler(spec, n_segments=2, repeats=1)
+    cfg = derive_config(prof, ops=("nn", "ocr", "license"),
+                        accuracies=(0.9, 0.8))
+
+    print("== ingestion budget sweep (paper Table 3) ==")
+    free = coalesce(prof, cfg.plans)
+    print(f"unconstrained: ingest={free.ingest_cost:.3f} enc-s/vid-s, "
+          f"storage={free.storage_cost / 1e3:.1f} KB/vid-s, "
+          f"SFs={[n.sf.name() for n in free.nodes]}")
+    for frac in (0.7, 0.4):
+        res = coalesce(prof, cfg.plans,
+                       ingest_budget=free.ingest_cost * frac)
+        print(f"budget x{frac}: ingest={res.ingest_cost:.3f} "
+              f"(met={res.budget_met}) storage={res.storage_cost / 1e3:.1f} "
+              f"KB/vid-s, SFs={[n.sf.name() for n in res.nodes]}")
+
+    print("\n== storage budget sweep (paper Fig. 12) ==")
+    subs = {}
+    for i, node in enumerate(cfg.nodes):
+        for p in node.plans:
+            subs[p] = i
+    daily = [prof.storage_profile(n.sf)[1] * 86400 for n in cfg.nodes]
+    full = sum(daily) * 10
+    for frac in (1.2, 0.6, 0.4):
+        plan = plan_erosion(prof, cfg.nodes, subs, daily, 10, frac * full)
+        print(f"budget x{frac}: k={plan.k:.2f} feasible={plan.feasible} "
+              f"speeds day1..10: {plan.overall_speed[0]:.2f}"
+              f"..{plan.overall_speed[-1]:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Train a reduced model-zoo architecture for a few hundred steps with the
+production training machinery (checkpoint/restart, watchdog, AdamW).
+
+    PYTHONPATH=src python examples/train_lm.py [--arch gemma2-2b --steps 300]
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["--arch", "smollm-135m", "--steps", "200"])

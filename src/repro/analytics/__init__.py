@@ -1,0 +1,5 @@
+from .accuracy import f1_score
+from .operators import OPERATORS, Operator
+from .scene import STREAMS, generate_segment
+
+__all__ = ["OPERATORS", "Operator", "f1_score", "generate_segment", "STREAMS"]

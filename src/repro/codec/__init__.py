@@ -1,0 +1,8 @@
+from .segment import (decode_segment, decoded_chunks, encode_raw,
+                      encode_segment, segment_info)
+from .transform import convert_fidelity, resize, sample_indices
+
+__all__ = [
+    "encode_segment", "encode_raw", "decode_segment", "segment_info",
+    "decoded_chunks", "convert_fidelity", "resize", "sample_indices",
+]

@@ -1,0 +1,186 @@
+"""Transform-coding primitives: 8x8 block DCT on the MXU, quantization,
+fidelity conversion (crop / resize / temporal sampling).
+
+The DCT of an 8x8 block X is D @ X @ D.T with the orthonormal DCT-II basis D —
+i.e. batched 8x8 matmuls, the native shape of the TPU MXU.  The Pallas kernel
+(src/repro/kernels/dct8) tiles frames into VMEM and fuses quantization; this
+module is the pure-jnp implementation used as its oracle and as the CPU path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 8
+
+
+@functools.cache
+def dct_basis() -> np.ndarray:
+    """Orthonormal 8x8 DCT-II basis matrix D (D @ D.T = I)."""
+    k = np.arange(BLOCK)[:, None]
+    n = np.arange(BLOCK)[None, :]
+    d = np.cos(np.pi * (2 * n + 1) * k / (2 * BLOCK))
+    d[0] *= 1.0 / np.sqrt(2)
+    d *= np.sqrt(2.0 / BLOCK)
+    return d.astype(np.float32)
+
+
+@functools.cache
+def quant_table() -> np.ndarray:
+    """JPEG-like base quantization table scaled to unit DC step: higher
+    frequencies quantized more coarsely."""
+    i = np.arange(BLOCK)[:, None]
+    j = np.arange(BLOCK)[None, :]
+    return (1.0 + (i + j) * 1.5).astype(np.float32)
+
+
+def to_blocks(frames: jnp.ndarray) -> jnp.ndarray:
+    """(n, h, w) -> (n, h//8, w//8, 8, 8)."""
+    n, h, w = frames.shape
+    x = frames.reshape(n, h // BLOCK, BLOCK, w // BLOCK, BLOCK)
+    return x.transpose(0, 1, 3, 2, 4)
+
+
+def from_blocks(blocks: jnp.ndarray) -> jnp.ndarray:
+    """(n, hb, wb, 8, 8) -> (n, h, w)."""
+    n, hb, wb, _, _ = blocks.shape
+    return blocks.transpose(0, 1, 3, 2, 4).reshape(n, hb * BLOCK, wb * BLOCK)
+
+
+def dct2(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Forward 2D DCT over trailing (8, 8) dims."""
+    d = jnp.asarray(dct_basis())
+    return jnp.einsum("ij,...jk,lk->...il", d, blocks, d)
+
+
+def idct2(coefs: jnp.ndarray) -> jnp.ndarray:
+    """Inverse 2D DCT over trailing (8, 8) dims."""
+    d = jnp.asarray(dct_basis())
+    return jnp.einsum("ji,...jk,kl->...il", d, coefs, d)
+
+
+def quantize(coefs: jnp.ndarray, quant_scale: float) -> jnp.ndarray:
+    q = jnp.asarray(quant_table()) * quant_scale
+    return jnp.round(coefs / q).astype(jnp.int16)
+
+
+def dequantize(symbols: jnp.ndarray, quant_scale: float) -> jnp.ndarray:
+    q = jnp.asarray(quant_table()) * quant_scale
+    return symbols.astype(jnp.float32) * q
+
+
+def frame_to_symbols(frame_f32: jnp.ndarray, quant_scale: float) -> jnp.ndarray:
+    """(h, w) float32 -> quantized DCT symbols (hb, wb, 8, 8) int16."""
+    blocks = to_blocks(frame_f32[None])[0]
+    return quantize(dct2(blocks), quant_scale)
+
+
+def symbols_to_frame(symbols: jnp.ndarray, quant_scale: float) -> jnp.ndarray:
+    """Inverse of frame_to_symbols (reconstruction, float32)."""
+    return from_blocks(idct2(dequantize(symbols, quant_scale))[None])[0]
+
+
+# ---------------------------------------------------------------------------
+# Fidelity conversion
+# ---------------------------------------------------------------------------
+
+def sample_indices(n_total: int, sampling: float) -> np.ndarray:
+    """Deterministic frame-sampling index set (monotone in ``sampling``:
+    richer sampling consumes a superset-density of the timeline)."""
+    n_keep = max(1, round(n_total * sampling))
+    return np.floor(np.arange(n_keep) * (n_total / n_keep)).astype(np.int64)
+
+
+def center_crop(frames: jnp.ndarray, crop: float) -> jnp.ndarray:
+    """Central crop to ``crop`` fraction on both axes, snapped to x8."""
+    if crop >= 1.0:
+        return frames
+    n, h, w = frames.shape
+    ch = max(8, int(round(h * crop / 8)) * 8)
+    cw = max(8, int(round(w * crop / 8)) * 8)
+    top, left = (h - ch) // 2, (w - cw) // 2
+    return frames[:, top:top + ch, left:left + cw]
+
+
+@functools.partial(jax.jit, static_argnames=("h", "w"))
+def _resize(frames: jnp.ndarray, h: int, w: int) -> jnp.ndarray:
+    return jax.image.resize(frames, (frames.shape[0], h, w), method="bilinear")
+
+
+def resize(frames: jnp.ndarray, h: int, w: int) -> jnp.ndarray:
+    if frames.shape[1:] == (h, w):
+        return frames
+    return _resize(frames.astype(jnp.float32), h, w)
+
+
+@jax.jit
+def _quality_roundtrip(frames_f32: jnp.ndarray, quant_scale: jnp.ndarray):
+    blocks = to_blocks(frames_f32)
+    sym = quantize(dct2(blocks), quant_scale)
+    return from_blocks(idct2(dequantize(sym, quant_scale)))
+
+
+def apply_quality(frames_u8, quant_scale: float):
+    """Intra-frame quantization roundtrip — the image-quality knob's effect on
+    pixels, used when materializing consumption-fidelity samples for
+    profiling (full DPCM coding adds only second-order differences)."""
+    if quant_scale <= 1.0:
+        return jnp.asarray(frames_u8, jnp.uint8)
+    x = _quality_roundtrip(jnp.asarray(frames_u8, jnp.float32),
+                           jnp.float32(quant_scale))
+    return jnp.clip(jnp.round(x), 0, 255).astype(jnp.uint8)
+
+
+def materialize(frames_u8, cf, spec, src=None):
+    """Ingest-fidelity frames -> consumption-fidelity frames (sampling, crop,
+    resolution, then image-quality loss)."""
+    from ..core.knobs import FidelityOption
+    src = src or FidelityOption()
+    out = convert_fidelity(frames_u8, src, cf, spec)
+    return apply_quality(out, cf.quant_scale)
+
+
+def temporal_indices(f_from, f_to, spec) -> np.ndarray:
+    """Indices into a segment stored at fidelity ``f_from`` that realize the
+    (sparser) sampling of ``f_to`` — the stored frames nearest to the target
+    timeline points.  These drive chunk-skip decoding."""
+    n_from, _, _ = spec.resolve(f_from)
+    n_to, _, _ = spec.resolve(f_to)
+    if n_to == n_from:
+        return np.arange(n_from)
+    src_pos = sample_indices(spec.frames_per_segment, f_from.sampling)
+    dst_pos = sample_indices(spec.frames_per_segment, f_to.sampling)
+    nearest = np.searchsorted(src_pos, dst_pos, side="right") - 1
+    return np.clip(nearest, 0, n_from - 1)
+
+
+def spatial_convert(frames, f_from, f_to, spec):
+    """Crop + resize a (already temporally sampled) frame stack from
+    ``f_from``'s grid to ``f_to``'s.  Returns uint8."""
+    _, h_to, w_to = spec.resolve(f_to)
+    rel_crop = f_to.crop / f_from.crop
+    x = center_crop(jnp.asarray(frames, jnp.float32), min(1.0, rel_crop))
+    x = resize(x, h_to, w_to)
+    return jnp.clip(jnp.round(x), 0, 255).astype(jnp.uint8)
+
+
+def convert_fidelity(frames_u8, f_from, f_to, spec):
+    """Convert a segment from fidelity ``f_from`` to ``f_to``.
+
+    ``f_from`` must be richer-than-or-equal ``f_to`` (R1).  Applies temporal
+    re-sampling, central re-crop and spatial resize.  Image-quality loss is a
+    coding-time effect and needs no conversion here (a higher-quality source
+    simply over-delivers).  Returns uint8 frames shaped per spec.resolve(f_to).
+    """
+    if not f_from.richer_eq(f_to):
+        raise ValueError(f"fidelity {f_from.name()} cannot serve {f_to.name()}")
+    n_from, _, _ = spec.resolve(f_from)
+    frames = jnp.asarray(frames_u8)
+    if frames.shape[0] != n_from:
+        raise ValueError(f"segment has {frames.shape[0]} frames, spec says {n_from}")
+    frames = frames[temporal_indices(f_from, f_to, spec)]
+    return spatial_convert(frames, f_from, f_to, spec)

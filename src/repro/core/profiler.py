@@ -1,0 +1,222 @@
+"""Profiling harness (paper §4.2/§4.3): measures, per fidelity option, an
+operator's accuracy and consumption speed, and per storage format, its
+ingestion cost, storage cost, and retrieval speed for a downstream consumer.
+
+All results are memoized — the paper's configuration overhead reductions
+(Fig. 13, §6.4) come from (a) profiling only boundary fidelity options and
+(b) memoizing storage-format profiles across coalescing rounds.  The counters
+here feed the overhead benchmark.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from ..codec import segment as codec
+from ..codec import transform as T
+from .knobs import FidelityOption, IngestSpec, StorageFormat
+
+
+def _analytics():
+    """Deferred import: analytics depends on core.knobs, so importing it at
+    module scope would cycle through the package inits."""
+    from ..analytics.accuracy import f1_score
+    from ..analytics.operators import OPERATORS
+    from ..analytics.scene import generate_segment
+    return f1_score, OPERATORS, generate_segment
+
+GOLDEN_F = FidelityOption("best", 1.0, 720, 1.0)
+
+# Paper §6.1: ops of query A profiled on jackson, query B on dashcam.
+DEFAULT_PROFILE_STREAMS = {
+    "diff": "jackson", "snn": "jackson", "nn": "jackson",
+    "motion": "dashcam", "license": "dashcam", "ocr": "dashcam",
+}
+
+
+@dataclasses.dataclass
+class ProfilerStats:
+    consumption_runs: int = 0
+    storage_runs: int = 0
+    memo_hits: int = 0
+    wall_seconds: float = 0.0
+
+
+class Profiler:
+    """Measured profiling over procedurally generated sample segments."""
+
+    def __init__(self, spec: IngestSpec | None = None, n_segments: int = 3,
+                 streams: dict[str, str] | None = None, repeats: int = 2):
+        self.spec = spec or IngestSpec()
+        self.n_segments = n_segments
+        self.streams = streams or dict(DEFAULT_PROFILE_STREAMS)
+        self.repeats = repeats
+        self.stats = ProfilerStats()
+        self._samples: dict[str, list[np.ndarray]] = {}
+        self._golden: dict[tuple, set] = {}
+        self._consume: dict[tuple, tuple[float, float]] = {}
+        self._storage: dict[tuple, tuple[float, float]] = {}
+        self._retrieve: dict[tuple, float] = {}
+        self._blob_cache: dict[tuple, list[bytes]] = {}
+
+    # -- samples -------------------------------------------------------------
+    def _segments(self, stream: str) -> list[np.ndarray]:
+        if stream not in self._samples:
+            _, _, generate_segment = _analytics()
+            self._samples[stream] = [
+                generate_segment(stream, i, self.spec)[0]
+                for i in range(self.n_segments)]
+        return self._samples[stream]
+
+    def _golden_items(self, op_name: str, stream: str, i: int) -> set:
+        key = (op_name, stream, i)
+        if key not in self._golden:
+            _, OPERATORS, _ = _analytics()
+            seg = self._segments(stream)[i]
+            self._golden[key] = OPERATORS[op_name].detect(seg, GOLDEN_F,
+                                                          self.spec)
+        return self._golden[key]
+
+    # -- consumer profile (accuracy + consumption speed) ----------------------
+    def consumer_profile(self, op_name: str, f: FidelityOption
+                         ) -> tuple[float, float]:
+        """Returns (accuracy F1, consumption speed in x-realtime)."""
+        key = (op_name, f)
+        if key in self._consume:
+            self.stats.memo_hits += 1
+            return self._consume[key]
+        t_start = time.perf_counter()
+        f1_score, OPERATORS, _ = _analytics()
+        op = OPERATORS[op_name]
+        stream = self.streams.get(op_name, "jackson")
+        accs, best_t = [], []
+        for i, seg in enumerate(self._segments(stream)):
+            frames = np.asarray(T.materialize(seg, f, self.spec))
+            times = []
+            pred = None
+            for _ in range(self.repeats):
+                t0 = time.perf_counter()
+                pred = op.detect(frames, f, self.spec)
+                times.append(time.perf_counter() - t0)
+            accs.append(f1_score(pred, self._golden_items(op_name, stream, i)))
+            best_t.append(min(times))
+        acc = float(np.mean(accs))
+        speed = self.spec.segment_seconds * len(accs) / max(sum(best_t), 1e-9)
+        self._consume[key] = (acc, speed)
+        self.stats.consumption_runs += 1
+        self.stats.wall_seconds += time.perf_counter() - t_start
+        return acc, speed
+
+    def accuracy(self, op_name: str, f: FidelityOption) -> float:
+        return self.consumer_profile(op_name, f)[0]
+
+    def consumption_speed(self, op_name: str, f: FidelityOption) -> float:
+        return self.consumer_profile(op_name, f)[1]
+
+    # -- storage-format profile ------------------------------------------------
+    def _blobs(self, sf: StorageFormat) -> tuple[list[bytes], float]:
+        """Encoded sample blobs for a storage format + encode seconds."""
+        key = (sf.fidelity, sf.coding)
+        if key in self._blob_cache:
+            return self._blob_cache[key]
+        stream = "jackson"
+        blobs, enc_t = [], 0.0
+        for seg in self._segments(stream):
+            frames = np.asarray(
+                T.convert_fidelity(frames_u8=seg, f_from=GOLDEN_F,
+                                   f_to=sf.fidelity, spec=self.spec))
+            t0 = time.perf_counter()
+            if sf.coding.bypass:
+                blob = codec.encode_raw(frames)
+            else:
+                blob = codec.encode_segment(
+                    frames, quant_scale=sf.fidelity.quant_scale,
+                    keyframe_interval=sf.coding.keyframe,
+                    zstd_level=sf.coding.zstd_level)
+            enc_t += time.perf_counter() - t0
+            blobs.append(blob)
+        self._blob_cache[key] = (blobs, enc_t)
+        return blobs, enc_t
+
+    def storage_profile(self, sf: StorageFormat) -> tuple[float, float]:
+        """Returns (ingest cost: encode-seconds per video-second,
+        storage cost: bytes per video-second)."""
+        key = (sf.fidelity, sf.coding)
+        if key in self._storage:
+            self.stats.memo_hits += 1
+            return self._storage[key]
+        t_start = time.perf_counter()
+        blobs, enc_t = self._blobs(sf)
+        dur = self.n_segments * self.spec.segment_seconds
+        res = (enc_t / dur, sum(len(b) for b in blobs) / dur)
+        self._storage[key] = res
+        self.stats.storage_runs += 1
+        self.stats.wall_seconds += time.perf_counter() - t_start
+        return res
+
+    def retrieval_speed(self, sf: StorageFormat, cf: FidelityOption) -> float:
+        """x-realtime speed of decoding SF (with chunk-skip for the CF's
+        sampling) and converting to CF."""
+        key = (sf.fidelity, sf.coding, cf)
+        if key in self._retrieve:
+            self.stats.memo_hits += 1
+            return self._retrieve[key]
+        t_start = time.perf_counter()
+        blobs, _ = self._blobs(sf)
+        want = T.temporal_indices(sf.fidelity, cf, self.spec)
+        times = []
+        for blob in blobs:
+            for _ in range(self.repeats):
+                t0 = time.perf_counter()
+                frames = codec.decode_segment(blob, want)
+                np.asarray(T.spatial_convert(frames, sf.fidelity, cf, self.spec))
+                times.append(time.perf_counter() - t0)
+        per_seg = np.median(np.asarray(times).reshape(len(blobs), -1).min(axis=1))
+        speed = self.spec.segment_seconds / max(float(per_seg), 1e-9)
+        self._retrieve[key] = speed
+        self.stats.storage_runs += 1
+        self.stats.wall_seconds += time.perf_counter() - t_start
+        return speed
+
+
+class TableProfiler:
+    """Profiler backed by explicit tables — used by unit/property tests and
+    by exhaustive-vs-search validation (deterministic, no wall clock)."""
+
+    def __init__(self, acc: dict, cost: dict, storage: dict | None = None,
+                 retrieve: dict | None = None):
+        self._acc, self._cost = acc, cost
+        self._storage = storage or {}
+        self._retrieve = retrieve or {}
+        self.stats = ProfilerStats()
+        self._seen_consumer = set()
+        self._seen_storage = set()
+
+    def consumer_profile(self, op, f):
+        if (op, f) in self._seen_consumer:
+            self.stats.memo_hits += 1
+        else:
+            self._seen_consumer.add((op, f))
+            self.stats.consumption_runs += 1
+        return self._acc[(op, f)], self._cost[(op, f)]
+
+    def accuracy(self, op, f):
+        return self.consumer_profile(op, f)[0]
+
+    def consumption_speed(self, op, f):
+        return self.consumer_profile(op, f)[1]
+
+    def storage_profile(self, sf):
+        key = (sf.fidelity, sf.coding)
+        if key in self._seen_storage:
+            self.stats.memo_hits += 1
+        else:
+            self._seen_storage.add(key)
+            self.stats.storage_runs += 1
+        return self._storage[key]
+
+    def retrieval_speed(self, sf, cf):
+        return self._retrieve[(sf.fidelity, sf.coding, cf)]

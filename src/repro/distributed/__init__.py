@@ -1,0 +1,12 @@
+from .checkpoint import (checkpoint_steps, latest_step, restore_checkpoint,
+                         save_checkpoint)
+from .fault import StragglerWatchdog, TrainSupervisor
+from .sharding import (batch_specs, cache_specs, moment_specs, param_specs,
+                       shardings, zero1_spec)
+
+__all__ = [
+    "param_specs", "moment_specs", "batch_specs", "cache_specs",
+    "shardings", "zero1_spec", "save_checkpoint", "restore_checkpoint",
+    "latest_step", "checkpoint_steps", "StragglerWatchdog",
+    "TrainSupervisor",
+]

@@ -1,0 +1,131 @@
+"""Fault-tolerant checkpointing with elastic restore.
+
+Layout:  root/step-<N>/  holding one ``.npy`` per leaf plus a msgpack
+manifest; a top-level ``LATEST`` file names the newest *complete* checkpoint.
+Writes go to a temp directory first and are published with an atomic rename,
+so a crash mid-save can never corrupt the restore path (the previous
+checkpoint stays LATEST).
+
+Elastic restore: leaves are saved as full logical arrays (on multi-host,
+each process writes its addressable shards and the manifest records the
+global shape; this single-process build writes whole arrays).  On restore,
+``device_put`` with the *target* mesh's shardings redistributes — the
+restoring job may use a different mesh shape than the saving job.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import shutil
+
+import jax
+import msgpack
+import numpy as np
+
+from .sharding import tree_paths
+
+
+def _leaf_file(i: int) -> str:
+    return f"leaf-{i:05d}.npy"
+
+
+def save_checkpoint(root: str, step: int, tree, keep: int = 3) -> str:
+    os.makedirs(root, exist_ok=True)
+    tmp = os.path.join(root, f".tmp-step-{step}")
+    final = os.path.join(root, f"step-{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves = tree_paths(tree)
+    manifest = []
+    for i, (path, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(tmp, _leaf_file(i)), arr)
+        manifest.append({"path": path, "shape": list(arr.shape),
+                         "dtype": str(arr.dtype), "file": _leaf_file(i)})
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb({"step": step, "leaves": manifest}))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)                       # atomic publish
+    _write_latest(root, step)
+    _gc(root, keep)
+    return final
+
+
+def _write_latest(root: str, step: int):
+    tmp = os.path.join(root, ".LATEST.tmp")
+    with open(tmp, "w") as f:
+        f.write(str(step))
+    os.replace(tmp, os.path.join(root, "LATEST"))
+
+
+def latest_step(root: str) -> int | None:
+    p = os.path.join(root, "LATEST")
+    if not os.path.exists(p):
+        return None
+    step = int(open(p).read().strip())
+    if not os.path.exists(os.path.join(root, f"step-{step}",
+                                       "manifest.msgpack")):
+        # LATEST points at a missing/incomplete checkpoint; fall back
+        steps = checkpoint_steps(root)
+        return steps[-1] if steps else None
+    return step
+
+
+def checkpoint_steps(root: str) -> list[int]:
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        m = re.fullmatch(r"step-(\d+)", name)
+        if m and os.path.exists(os.path.join(root, name, "manifest.msgpack")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def restore_checkpoint(root: str, tree_like, step: int | None = None,
+                       shardings=None):
+    """Restore into the structure of ``tree_like``.  ``shardings``: optional
+    pytree of NamedSharding for elastic redistribution onto the current
+    mesh."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+    d = os.path.join(root, f"step-{step}")
+    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    by_path = {e["path"]: e for e in manifest["leaves"]}
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
+                  if shardings is not None else [None] * len(flat))
+    leaves = []
+    for (kp, like), shard in zip(flat, shard_flat):
+        path = ".".join(_k(k) for k in kp)
+        e = by_path[path]
+        arr = np.load(os.path.join(d, e["file"]), mmap_mode="r")
+        if list(arr.shape) != list(like.shape):
+            raise ValueError(f"{path}: ckpt shape {arr.shape} != {like.shape}")
+        if shard is not None:
+            leaves.append(jax.device_put(np.asarray(arr), shard))
+        else:
+            leaves.append(jax.numpy.asarray(np.asarray(arr),
+                                            dtype=like.dtype))
+    return step, jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _k(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def _gc(root: str, keep: int):
+    steps = checkpoint_steps(root)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(root, f"step-{s}"), ignore_errors=True)

@@ -1,0 +1,14 @@
+"""Process-global mesh context: lets deep model code (e.g. the expert-
+parallel MoE shard_map) find the active mesh without threading it through
+every call signature.  Set by launchers/dryrun; None on single-device runs."""
+
+_MESH = None
+
+
+def set_mesh(mesh):
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH

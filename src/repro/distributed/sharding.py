@@ -1,0 +1,269 @@
+"""Sharding rules: parameter/optimizer/activation PartitionSpecs.
+
+Mesh axes: ``pod`` (inter-pod, pure data parallel), ``data`` (intra-pod data
+parallel / ZeRO / FSDP), ``model`` (tensor + expert parallel).
+
+Weight-sharding presets:
+
+* ``tp``      — weights sharded over ``model`` only (replicated across data).
+* ``fsdp_tp`` — weights additionally sharded over ``data`` on a second dim
+  (all-gathered at use).  Needed to fit arctic-480b / qwen2-vl-72b.
+
+pjit requires every sharded dim to divide the axis size exactly, so every
+rule is a *candidate list*: the first layout whose dims divide wins, with
+replication as the final fallback (e.g. smollm's 9 heads don't divide a
+16-way model axis — its attention falls back to d_model row-parallel).
+
+Optimizer moments use ZeRO-1: the param spec plus ``data`` sharding on the
+largest still-free divisible dim.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+DATA_AXES = ("pod", "data")  # batch shards over both where divisible
+
+
+# ---------------------------------------------------------------------------
+# fitting machinery
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh_sizes: dict, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, str):
+        return mesh_sizes.get(entry, 1)
+    n = 1
+    for a in entry:
+        n *= mesh_sizes.get(a, 1)
+    return n
+
+
+def _filter_entry(entry, mesh_sizes):
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return entry if entry in mesh_sizes else None
+    kept = tuple(a for a in entry if a in mesh_sizes)
+    return kept if len(kept) > 1 else (kept[0] if kept else None)
+
+
+def fit_spec(shape: tuple[int, ...], spec: P, mesh_sizes: dict) -> P | None:
+    """Filter absent axes; return None if any dim doesn't divide or the
+    spec has more entries than the value has dims."""
+    entries = [_filter_entry(e, mesh_sizes) for e in spec]
+    if len(entries) > len(shape):
+        return None
+    entries += [None] * (len(shape) - len(entries))
+    for dim, entry in zip(shape, entries):
+        n = _axis_size(mesh_sizes, entry)
+        if n > 1 and dim % n != 0:
+            return None
+    return P(*entries)
+
+
+def first_fit(shape: tuple[int, ...], candidates: list[P],
+              mesh_sizes: dict) -> P:
+    for c in candidates:
+        got = fit_spec(shape, c, mesh_sizes)
+        if got is not None:
+            return got
+    return P(*([None] * len(shape)))
+
+
+def _mesh_sizes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def _match(path: str, *keys: str) -> bool:
+    return any(path.endswith(k) or f".{k}." in path for k in keys)
+
+
+def _is_stacked(path: str) -> bool:
+    return ".blocks." in path or path.startswith("blocks")
+
+
+def param_candidates(path: str, ndim: int, preset: str) -> list[P]:
+    """Candidate layouts, best first.  Specs are written WITHOUT the stacked
+    layer dim; the caller prepends it."""
+    fsdp = preset == "fsdp_tp"
+    d2 = "data" if fsdp else None
+
+    if _match(path, "embed"):                     # (V, d)
+        return [P("model", d2), P("model", None), P(None, "model"), P()]
+    if _match(path, "lm_head"):                   # (d, V)
+        return [P(d2, "model"), P(None, "model"), P("model", None), P()]
+    if _match(path, "wq", "wk", "wv") and ndim == 3:   # (d, H, hd)
+        return [P(d2, "model", None), P(None, "model", None),
+                P("model", None, None), P()]
+    if _match(path, "attn.wo"):                   # (H, hd, d)
+        return [P("model", None, d2), P("model", None, None),
+                P(None, None, "model"), P()]
+    if _match(path, "bq", "bk", "bv"):            # (H, hd)
+        return [P("model", None), P()]
+    if _match(path, "moe.wi", "moe.wg"):          # (E, d, ff)
+        return [P("model", d2, None), P("model", None, None),
+                P(None, None, "model"), P()]
+    if _match(path, "moe.wo"):                    # (E, ff, d)
+        return [P("model", None, d2), P("model", None, None),
+                P(None, "model", None), P()]
+    if _match(path, "router"):                    # (d, E)
+        return [P()]
+    if _match(path, "in_proj", "wi", "wg", "wx", "wy"):   # (d, ff)
+        return [P(d2, "model"), P(None, "model"), P("model", None), P()]
+    if _match(path, "out_proj", "wo"):            # (ff, d)
+        return [P("model", d2), P("model", None), P(None, "model"), P()]
+    if _match(path, "x_proj"):                    # (inner, dt_rank+2n)
+        return [P("model", None), P()]
+    if _match(path, "dt_proj"):                   # (dt_rank, inner)
+        return [P(None, "model"), P()]
+    if _match(path, "a_log"):                     # (inner, n)
+        return [P("model", None), P()]
+    if _match(path, "conv"):                      # (cw, width)
+        return [P(None, "model"), P()]
+    if _match(path, "dt_bias", "ssm.d", "a_param"):  # (width,)
+        return [P("model"), P()]
+    if _match(path, "w_input_gate", "w_rec_gate"):   # (w, w)
+        return [P(None, "model"), P()]
+    return [P()]
+
+
+def param_spec(path: str, shape: tuple[int, ...], preset: str,
+               mesh_sizes: dict) -> P:
+    if preset == "dp":  # pure data parallelism: weights replicated
+        return P(*([None] * len(shape)))
+    stacked = _is_stacked(path)
+    body = shape[1:] if stacked else shape
+    cands = param_candidates(path, len(body), preset)
+    got = first_fit(body, cands, mesh_sizes)
+    if stacked:
+        got = P(None, *got)
+    return got
+
+
+def tree_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(".".join(_key_str(k) for k in kp), leaf) for kp, leaf in flat]
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def _map_with_path(tree, fn):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = [fn(".".join(_key_str(k) for k in kp), leaf) for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_specs(params_shape, mesh, preset: str = "tp"):
+    ms = _mesh_sizes(mesh)
+    return _map_with_path(params_shape,
+                          lambda p, leaf: param_spec(p, leaf.shape, preset,
+                                                     ms))
+
+
+# ---------------------------------------------------------------------------
+# optimizer (ZeRO-1)
+# ---------------------------------------------------------------------------
+
+def zero1_spec(spec: P, shape: tuple[int, ...], mesh_sizes: dict) -> P:
+    used = set()
+    for s in spec:
+        if isinstance(s, str):
+            used.add(s)
+        elif s:
+            used.update(s)
+    if "data" in used:
+        return spec
+    data_size = mesh_sizes.get("data", 1)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    best, best_dim = None, 0
+    for i, (s, dim) in enumerate(zip(entries, shape)):
+        if s is None and dim % data_size == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best is None:
+        return spec
+    entries[best] = "data"
+    return P(*entries)
+
+
+def moment_specs(params_shape, mesh, preset: str = "tp"):
+    ms = _mesh_sizes(mesh)
+
+    def one(path, leaf):
+        ps = param_spec(path, leaf.shape, preset, ms)
+        return zero1_spec(ps, leaf.shape, ms)
+
+    return _map_with_path(params_shape, one)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_shape, mesh, seq_shard: bool = False,
+                axes: tuple = DATA_AXES):
+    """Batch dim over ``axes`` ((pod, data) by default; all three for the
+    pure-DP preset) when divisible; optional sequence sharding over 'model'
+    (SP for long-context cells with tiny batch)."""
+    ms = _mesh_sizes(mesh)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        if len(shape) >= 3 and shape[0] == 3 and "mrope" in path:
+            cands = [P(None, axes, "model" if seq_shard else None),
+                     P(None, axes, None), P(None, None, None)]
+            return first_fit(shape, cands, ms)
+        seq_entry = "model" if seq_shard and len(shape) >= 2 else None
+        cands = [P(axes, seq_entry), P(axes,), P("data",), P()]
+        return first_fit(shape, cands, ms)
+
+    return _map_with_path(batch_shape, one)
+
+
+def cache_specs(cache_shape, mesh):
+    """Decode caches: batch over (pod,data); kv-heads over model when
+    divisible else sequence over model; recurrent states width over model."""
+    ms = _mesh_sizes(mesh)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 5:   # (L, B, S, KV, hd)
+            cands = [P(None, DATA_AXES, None, "model", None),
+                     P(None, DATA_AXES, "model", None, None),
+                     P(None, None, None, "model", None),
+                     P(None, None, "model", None, None), P()]
+            return first_fit(shape, cands, ms)
+        if len(shape) == 4 and "conv" in path:  # conv state (L, B, cw-1, W)
+            cands = [P(None, DATA_AXES, None, "model"),
+                     P(None, None, None, "model"), P()]
+            return first_fit(shape, cands, ms)
+        if len(shape) == 4:   # mamba h (L, B, inner, n)
+            cands = [P(None, DATA_AXES, "model", None),
+                     P(None, None, "model", None), P()]
+            return first_fit(shape, cands, ms)
+        if len(shape) == 3:   # conv state / rglru h (L, B, w)
+            cands = [P(None, DATA_AXES, "model"),
+                     P(None, None, "model"), P()]
+            return first_fit(shape, cands, ms)
+        return P(*([None] * len(shape)))
+
+    return _map_with_path(cache_shape, one)
+
+
+def shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

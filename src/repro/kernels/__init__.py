@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel subpackage has: <name>.py (pl.pallas_call + BlockSpec VMEM
+tiling), ops.py (jit'd wrapper with backend dispatch), ref.py (pure-jnp
+oracle).  On this CPU container kernels run in interpret mode; on TPU the
+same pallas_call compiles natively.
+"""

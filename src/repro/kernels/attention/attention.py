@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: flash attention (online-softmax, VMEM-tiled).
+
+Grid: (B*H, num_q_blocks, num_k_blocks) — the k dimension is sequential
+("arbitrary"): running max / sum / accumulator live in VMEM scratch and
+persist across k steps; the output block is written on the last k step.
+
+Block shapes default to (q=512, k=512) x head_dim — MXU-aligned (multiples
+of 128 in the contracted/lane dims when head_dim is 64/128/256) and well
+inside VMEM: q,k,v,acc tiles at 512x256 f32 are 0.5 MiB each.
+
+Supports causal masking, sliding windows (gemma2 local layers), and logit
+soft-capping.  GQA is handled by the ops.py wrapper (kv head broadcast).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+                 sq: int, sk: int, q_block: int, k_block: int,
+                 causal: bool, window: int, logit_cap: float, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (qb, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (kb, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (qb, kb)
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (q_block, k_block), 0)
+    k_pos = ki * k_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (q_block, k_block), 1)
+    ok = k_pos < sk
+    if causal:
+        ok &= q_pos >= k_pos
+    if window:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * alpha + p.sum(axis=1)
+    v = v_ref[0].astype(jnp.float32)
+    acc_s[...] = acc_s[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_s[...] /
+                    jnp.maximum(l_s[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "logit_cap", "q_block",
+                              "k_block", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    logit_cap: float = 0.0, q_block: int = 512,
+                    k_block: int = 512, interpret: bool = True
+                    ) -> jnp.ndarray:
+    """q, k, v: (B, H, S, hd) with equal head counts (GQA pre-broadcast).
+    Returns (B, H, Sq, hd)."""
+    b, h, sq, hd = q.shape
+    sk = k.shape[2]
+    scale = hd ** -0.5
+    q_block = min(q_block, sq)
+    k_block = min(k_block, sk)
+    nq, nk = -(-sq // q_block), -(-sk // k_block)
+
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, nq * q_block - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, nk * k_block - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, nk * k_block - sk), (0, 0)))
+    qf = qp.reshape(b * h, nq * q_block, hd)
+    kf = kp.reshape(b * h, nk * k_block, hd)
+    vf = vp.reshape(b * h, nk * k_block, hd)
+
+    kernel = functools.partial(
+        _attn_kernel, sq=sq, sk=sk, q_block=q_block, k_block=k_block,
+        causal=causal, window=window, logit_cap=logit_cap, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, k_block, hd), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, k_block, hd), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, nq * q_block, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, nq * q_block, hd)[:, :, :sq]

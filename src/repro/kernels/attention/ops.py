@@ -1,0 +1,31 @@
+"""Jit'd wrapper: model layout (B, S, H, hd) + GQA -> kernel layout, with
+backend dispatch (Pallas on TPU; interpret-mode / jnp-blocked elsewhere)."""
+import jax
+import jax.numpy as jnp
+
+from .attention import flash_attention
+from .ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gqa_attention(q, k, v, *, causal=True, window=0, logit_cap=0.0,
+                  use_pallas: bool | None = None, interpret=None):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd).  Returns (B, Sq, H, hd)."""
+    b, sq, hct, hd = q.shape
+    kv = k.shape[2]
+    groups = hct // kv
+    qt = q.transpose(0, 2, 1, 3)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), groups, axis=1)
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), groups, axis=1)
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        interp = (not _on_tpu()) if interpret is None else interpret
+        o = flash_attention(qt, kt, vt, causal=causal, window=window,
+                            logit_cap=logit_cap, interpret=interp)
+    else:
+        o = attention_ref(qt, kt, vt, causal=causal, window=window,
+                          logit_cap=logit_cap)
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle: naive full-matrix attention."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, logit_cap=0.0):
+    """q, k, v: (B, H, S, hd) equal head counts."""
+    b, h, sq, hd = q.shape
+    sk = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)) \
+        .astype(v.dtype)

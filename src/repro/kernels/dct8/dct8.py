@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: fused 8x8 block DCT + quantization (codec hot spot).
+
+The 2D DCT of an 8x8 block is D @ X @ D.T — per frame row-band this is a
+pair of small matmuls that map straight onto the MXU.  The kernel tiles a
+frame stack (n, h, w) into VMEM row-bands of 8 rows x the full width
+(<= 8 x 1280 f32 = 40 KiB, comfortably inside the ~16 MiB VMEM), computes
+the transform for all w/8 blocks of the band at once, fuses the
+quantization (divide by table, round), and writes int16 symbols.
+
+Grid: (n, h//8) — both parallel.  The inverse kernel fuses dequantize+IDCT.
+The DCT basis and quantization table are passed as (tiny, replicated) VMEM
+inputs — Pallas kernels cannot close over host constants.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...codec.transform import dct_basis, quant_table
+
+BLOCK = 8
+
+
+def _dct_kernel(x_ref, d_ref, q_ref, qs_ref, out_ref, *, width: int):
+    wb = width // BLOCK
+    x = x_ref[0]                               # (8, W)
+    d = d_ref[...]                             # (8, 8)
+    q = q_ref[...] * qs_ref[0]                 # (8, 8)
+    blocks = x.reshape(BLOCK, wb, BLOCK).transpose(1, 0, 2)   # (wb, 8, 8)
+    coef = jnp.einsum("ij,wjk,lk->wil", d, blocks, d,
+                      preferred_element_type=jnp.float32)
+    out_ref[0, 0] = jnp.round(coef / q).astype(jnp.int16)     # fused quant
+
+
+def _idct_kernel(sym_ref, d_ref, q_ref, qs_ref, out_ref, *, width: int):
+    wb = width // BLOCK
+    d = d_ref[...]
+    q = q_ref[...] * qs_ref[0]
+    coef = sym_ref[0, 0].astype(jnp.float32) * q              # (wb, 8, 8)
+    blocks = jnp.einsum("ji,wjk,kl->wil", d, coef, d,
+                        preferred_element_type=jnp.float32)
+    out_ref[0] = blocks.transpose(1, 0, 2).reshape(BLOCK, wb * BLOCK)
+
+
+def _consts(quant_scale):
+    d = jnp.asarray(dct_basis())
+    q = jnp.asarray(quant_table())
+    qs = jnp.broadcast_to(jnp.asarray(quant_scale, jnp.float32), (1,))
+    return d, q, qs
+
+
+_CONST_SPECS = [
+    pl.BlockSpec((BLOCK, BLOCK), lambda i, j: (0, 0)),
+    pl.BlockSpec((BLOCK, BLOCK), lambda i, j: (0, 0)),
+    pl.BlockSpec((1,), lambda i, j: (0,)),
+]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dct8_quantize(frames: jnp.ndarray, quant_scale: jnp.ndarray,
+                  interpret: bool = True) -> jnp.ndarray:
+    """(n, h, w) f32 -> (n, h//8, w//8, 8, 8) int16 quantized symbols."""
+    n, h, w = frames.shape
+    assert h % BLOCK == 0 and w % BLOCK == 0
+    d, q, qs = _consts(quant_scale)
+    kernel = functools.partial(_dct_kernel, width=w)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, h // BLOCK),
+        in_specs=[pl.BlockSpec((1, BLOCK, w), lambda i, j: (i, j, 0))]
+        + _CONST_SPECS,
+        out_specs=pl.BlockSpec((1, 1, w // BLOCK, BLOCK, BLOCK),
+                               lambda i, j: (i, j, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h // BLOCK, w // BLOCK,
+                                        BLOCK, BLOCK), jnp.int16),
+        interpret=interpret,
+    )(frames, d, q, qs)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dct8_dequantize(symbols: jnp.ndarray, quant_scale: jnp.ndarray,
+                    interpret: bool = True) -> jnp.ndarray:
+    """(n, hb, wb, 8, 8) int16 -> (n, h, w) f32 reconstruction."""
+    n, hb, wb, _, _ = symbols.shape
+    h, w = hb * BLOCK, wb * BLOCK
+    d, q, qs = _consts(quant_scale)
+    kernel = functools.partial(_idct_kernel, width=w)
+    return pl.pallas_call(
+        kernel,
+        grid=(n, hb),
+        in_specs=[pl.BlockSpec((1, 1, wb, BLOCK, BLOCK),
+                               lambda i, j: (i, j, 0, 0, 0))]
+        + _CONST_SPECS,
+        out_specs=pl.BlockSpec((1, BLOCK, w), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w), jnp.float32),
+        interpret=interpret,
+    )(symbols, d, q, qs)

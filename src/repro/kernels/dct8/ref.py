@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the dct8 kernel (the codec's own transform path)."""
+import jax.numpy as jnp
+
+from ...codec import transform as T
+
+
+def dct8_quantize_ref(frames: jnp.ndarray, quant_scale) -> jnp.ndarray:
+    blocks = T.to_blocks(frames.astype(jnp.float32))
+    return T.quantize(T.dct2(blocks), quant_scale)
+
+
+def dct8_dequantize_ref(symbols: jnp.ndarray, quant_scale) -> jnp.ndarray:
+    return T.from_blocks(T.idct2(T.dequantize(symbols, quant_scale)))

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: Mamba-1 selective-scan with fused C-contraction.
+
+    h_t = da_t ⊙ h_{t-1} + dbx_t          h: (inner, n)
+    y_t = h_t @ c_t                        y: (inner,)
+
+The pointwise state h (inner x n, i.e. up to 8192 x 16) is never
+materialized in HBM — exactly the insight of the original fused CUDA
+selective-scan, re-expressed for the TPU memory hierarchy: the state lives
+in VMEM scratch, the sequence streams through in chunks, and only y (the
+size of the activations anyway) plus the final state (for decode handoff)
+are written back.
+
+Grid: (batch, inner_tiles, seq_chunks); seq is sequential ("arbitrary").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(da_ref, dbx_ref, c_ref, y_ref, hT_ref, state):
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    da = da_ref[0]                   # (sc, it, n)
+    dbx = dbx_ref[0]
+    c = c_ref[0]                     # (sc, n)
+    sc = da.shape[0]
+
+    def step(t, h):
+        h = da[t] * h + dbx[t]                        # (it, n)
+        y_ref[0, t, :] = jnp.sum(h * c[t][None, :], axis=1)
+        return h
+
+    state[...] = jax.lax.fori_loop(0, sc, step, state[...])
+
+    @pl.when(si == ns - 1)
+    def _final():
+        hT_ref[0] = state[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("inner_tile", "seq_chunk", "interpret"))
+def mamba_scan(da: jnp.ndarray, dbx: jnp.ndarray, c: jnp.ndarray, *,
+               inner_tile: int = 128, seq_chunk: int = 256,
+               interpret: bool = True):
+    """da, dbx: (B, S, inner, n); c: (B, S, n).
+    Returns (y (B, S, inner), h_final (B, inner, n))."""
+    bsz, s, inner, n = da.shape
+    it = min(inner_tile, inner)
+    sc = min(seq_chunk, s)
+    ni, ns = -(-inner // it), -(-s // sc)
+    pad_i, pad_s = ni * it - inner, ns * sc - s
+    if pad_i or pad_s:
+        # pad decay with 1 (identity) so the final state survives padding
+        da = jnp.pad(da, ((0, 0), (0, pad_s), (0, pad_i), (0, 0)),
+                     constant_values=1.0)
+        dbx = jnp.pad(dbx, ((0, 0), (0, pad_s), (0, pad_i), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad_s), (0, 0)))
+    y, hT = pl.pallas_call(
+        _mamba_kernel,
+        grid=(bsz, ni, ns),
+        in_specs=[
+            pl.BlockSpec((1, sc, it, n), lambda i, j, t: (i, t, j, 0)),
+            pl.BlockSpec((1, sc, it, n), lambda i, j, t: (i, t, j, 0)),
+            pl.BlockSpec((1, sc, n), lambda i, j, t: (i, t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, sc, it), lambda i, j, t: (i, t, j)),
+            pl.BlockSpec((1, it, n), lambda i, j, t: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, ns * sc, ni * it), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, ni * it, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((it, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(da.astype(jnp.float32), dbx.astype(jnp.float32), c.astype(jnp.float32))
+    return y[:, :s, :inner], hT[:, :inner]

@@ -1,0 +1,16 @@
+"""Backend dispatch for the fused selective scan."""
+import jax
+
+from .mamba_scan import mamba_scan
+from .ref import mamba_scan_ref
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+def selective_scan(da, dbx, c, use_pallas: bool | None = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return mamba_scan(da, dbx, c, interpret=not _on_tpu())
+    return mamba_scan_ref(da, dbx, c)

@@ -1,0 +1,13 @@
+"""jnp oracle for the fused selective scan: chunked associative scan +
+explicit C-contraction (the math used by models.recurrent.mamba_mix)."""
+import jax.numpy as jnp
+
+from ...models.recurrent import linear_scan
+
+
+def mamba_scan_ref(da, dbx, c):
+    """da, dbx: (B, S, inner, n); c: (B, S, n) ->
+    (y (B, S, inner), h_final (B, inner, n))."""
+    h = linear_scan(da.astype(jnp.float32), dbx.astype(jnp.float32), axis=1)
+    y = jnp.einsum("bsin,bsn->bsi", h, c.astype(jnp.float32))
+    return y, h[:, -1]

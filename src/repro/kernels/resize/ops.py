@@ -1,0 +1,16 @@
+"""Backend dispatch for bilinear resize."""
+import jax
+
+from .ref import resize_ref
+from .resize import resize_bilinear
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+def resize(frames, h2: int, w2: int, use_pallas: bool | None = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return resize_bilinear(frames, h2, w2, interpret=not _on_tpu())
+    return resize_ref(frames, h2, w2)

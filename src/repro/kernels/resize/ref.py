@@ -1,0 +1,8 @@
+"""jnp oracle: jax.image.resize bilinear (the codec's conversion path)."""
+import jax
+import jax.numpy as jnp
+
+
+def resize_ref(frames, h2: int, w2: int):
+    return jax.image.resize(frames.astype(jnp.float32),
+                            (frames.shape[0], h2, w2), method="bilinear")

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: bilinear resize as two MXU matmuls (retrieval hot
+spot: storage-fidelity -> consumption-fidelity conversion).
+
+A GPU/CPU bilinear resize is a gather — hostile to the TPU's vector memory.
+Bilinear interpolation is separable and linear, so we re-express it as
+   out = R_y @ X @ R_x^T
+with sparse-but-dense-stored interpolation matrices built host-side.  The
+kernel tiles the frame stack over a (n,) grid; each step runs two small
+matmuls entirely in VMEM.  (Roughly 2x the FLOPs of a gather formulation —
+and far faster on the MXU than strided gathers on the VPU.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+@functools.cache
+def interp_matrix(n_out: int, n_in: int) -> np.ndarray:
+    """(n_out, n_in) interpolation weights matching jax.image.resize
+    'bilinear' (anti-aliased triangle filter: support widens by the
+    downscale factor; rows normalized with edge weights dropped)."""
+    m = np.zeros((n_out, n_in), np.float32)
+    if n_out == n_in:
+        np.fill_diagonal(m, 1.0)
+        return m
+    scale = n_in / n_out
+    support = max(1.0, scale)
+    for i in range(n_out):
+        pos = (i + 0.5) * scale - 0.5
+        lo = int(np.ceil(pos - support))
+        hi = int(np.floor(pos + support))
+        for j in range(lo, hi + 1):
+            if 0 <= j < n_in:
+                m[i, j] = max(0.0, 1.0 - abs(j - pos) / support)
+        s = m[i].sum()
+        if s > 0:
+            m[i] /= s
+    return m
+
+
+def _resize_kernel(x_ref, ry_ref, rx_ref, o_ref):
+    x = x_ref[0]                                   # (H1, W1)
+    ry = ry_ref[...]                               # (H2, H1)
+    rx = rx_ref[...]                               # (W2, W1)
+    tmp = jax.lax.dot_general(ry, x, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    o_ref[0] = jax.lax.dot_general(tmp, rx, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("h2", "w2", "interpret"))
+def resize_bilinear(frames: jnp.ndarray, h2: int, w2: int,
+                    interpret: bool = True) -> jnp.ndarray:
+    """(n, h1, w1) f32 -> (n, h2, w2) f32."""
+    n, h1, w1 = frames.shape
+    ry = jnp.asarray(interp_matrix(h2, h1))
+    rx = jnp.asarray(interp_matrix(w2, w1))
+    return pl.pallas_call(
+        _resize_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h1, w1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((h2, h1), lambda i: (0, 0)),
+            pl.BlockSpec((w2, w1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h2, w2), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h2, w2), jnp.float32),
+        interpret=interpret,
+    )(frames.astype(jnp.float32), ry, rx)

@@ -1,0 +1,16 @@
+"""Backend dispatch for the RG-LRU scan."""
+import jax
+
+from .ref import rglru_scan_ref
+from .rglru import rglru_scan
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+def lru_scan(a, b, use_pallas: bool | None = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return rglru_scan(a, b, interpret=not _on_tpu())
+    return rglru_scan_ref(a, b)

@@ -1,0 +1,6 @@
+"""jnp oracle: associative-scan linear recurrence (models.recurrent)."""
+from ...models.recurrent import linear_scan
+
+
+def rglru_scan_ref(a, b):
+    return linear_scan(a, b, axis=-2)

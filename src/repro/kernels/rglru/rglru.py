@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: RG-LRU gated linear recurrence.
+
+    h_t = a_t ⊙ h_{t-1} + b_t        (elementwise over the LRU width)
+
+Grid: (batch, width_tiles, seq_chunks).  Batch and width are parallel; the
+sequence dimension is sequential ("arbitrary") with the running state h in
+VMEM scratch, so arbitrarily long sequences stream through fixed VMEM
+(chunk x tile = 512 x 128 f32 = 256 KiB per operand).  The sequential inner
+loop matches the recurrence's data dependence; parallelism comes from
+width x batch (the associative-scan formulation in repro.models.recurrent
+is the jnp oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h_ref, state):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    a = a_ref[0]                    # (sc, wt)
+    b = b_ref[0]
+    sc = a.shape[0]
+
+    def step(t, h):
+        h = a[t] * h + b[t]
+        h_ref[0, t, :] = h
+        return h
+
+    state[...] = jax.lax.fori_loop(0, sc, step, state[...])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("width_tile", "seq_chunk", "interpret"))
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, *, width_tile: int = 128,
+               seq_chunk: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """a, b: (B, S, W) -> h: (B, S, W) with h_t = a_t*h_{t-1} + b_t."""
+    bsz, s, w = a.shape
+    wt = min(width_tile, w)
+    sc = min(seq_chunk, s)
+    nw, ns = -(-w // wt), -(-s // sc)
+    pad_w, pad_s = nw * wt - w, ns * sc - s
+    if pad_w or pad_s:
+        a = jnp.pad(a, ((0, 0), (0, pad_s), (0, pad_w)))
+        b = jnp.pad(b, ((0, 0), (0, pad_s), (0, pad_w)))
+    out = pl.pallas_call(
+        _rglru_kernel,
+        grid=(bsz, nw, ns),
+        in_specs=[
+            pl.BlockSpec((1, sc, wt), lambda i, j, t: (i, t, j)),
+            pl.BlockSpec((1, sc, wt), lambda i, j, t: (i, t, j)),
+        ],
+        out_specs=pl.BlockSpec((1, sc, wt), lambda i, j, t: (i, t, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, ns * sc, nw * wt), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((wt,), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+    return out[:, :s, :w]

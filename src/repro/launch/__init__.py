@@ -1,0 +1,3 @@
+"""Launchers: production meshes, the multi-pod dry-run, roofline analysis,
+and the train/serve drivers.  Note: ``dryrun`` must be imported only in a
+fresh process (it sets XLA_FLAGS for 512 host devices)."""

@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, with real SPMD partitioning over 512 placeholder
+devices.  The FIRST two lines above must run before ANY jax import.
+
+Per cell this records:
+  * compile success,
+  * ``compiled.memory_analysis()`` — bytes per device (proves it fits),
+  * ``compiled.cost_analysis()``   — HLO FLOPs / bytes for the roofline,
+  * collective bytes parsed from the optimized HLO (all-gather, all-reduce,
+    reduce-scatter, all-to-all, collective-permute).
+
+Usage:
+  python -m repro.launch.dryrun                      # all cells, single-pod
+  python -m repro.launch.dryrun --multi-pod          # all cells, 2 pods
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  python -m repro.launch.dryrun --out experiments/dryrun
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp                      # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCHS                  # noqa: E402
+from ..distributed import sharding as SH     # noqa: E402
+from ..models import forward, prefill        # noqa: E402
+from ..train import AdamWConfig, init_opt_state, make_serve_step, \
+    make_train_step                          # noqa: E402
+from .hlo import hlo_cost                    # noqa: E402
+from .mesh import make_production_mesh       # noqa: E402
+from .specs import SHAPES, input_specs, params_specs, skip_reason  # noqa: E402
+
+# per-arch lowering options (memory-driven; see EXPERIMENTS.md §Dry-run)
+ARCH_OPTS = {
+    "arctic-480b": dict(preset="fsdp_tp", n_micro=8, moment_dtype="bfloat16",
+                        moe_dispatch="ep"),
+    "qwen2-vl-72b": dict(preset="fsdp_tp", n_micro=4),
+    "recurrentgemma-9b": dict(preset="tp", n_micro=2),
+    "falcon-mamba-7b": dict(preset="tp", n_micro=2),
+    "smollm-135m": dict(preset="dp"),   # §Perf cell 2: pure-DP layout
+}
+DEFAULT_OPTS = dict(preset="tp", n_micro=1, moment_dtype="float32",
+                    moe_dispatch="scatter")
+
+
+def arch_opts(arch_id: str, overrides: dict | None = None) -> dict:
+    o = dict(DEFAULT_OPTS)
+    o.update(ARCH_OPTS.get(arch_id, {}))
+    o.update(overrides or {})
+    return o
+
+
+def _named(mesh, spec_tree):
+    return SH.shardings(mesh, spec_tree)
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh, opts: dict | None = None):
+    """Lower + compile one cell.  Returns (lowered, compiled, meta)."""
+    cfg = ARCHS[arch_id]
+    shape = SHAPES[shape_name]
+    o = arch_opts(arch_id, opts)
+    reason = skip_reason(cfg, shape)
+    if reason:
+        raise ValueError(f"cell is skipped: {reason}")
+    from ..distributed import context
+    context.set_mesh(mesh)
+
+    pspec = params_specs(cfg, dtype=jnp.bfloat16)
+    p_spec_tree = SH.param_specs(pspec, mesh, o["preset"])
+    p_shard = _named(mesh, p_spec_tree)
+    specs = input_specs(cfg, shape)
+    batch_axes = (("pod", "data", "model") if o["preset"] == "dp"
+                  else SH.DATA_AXES)
+    b_shard = _named(mesh, SH.batch_specs(specs["batch"], mesh,
+                                          axes=batch_axes))
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(
+            moment_dtype=jnp.bfloat16 if o.get("moment_dtype") == "bfloat16"
+            else jnp.float32)
+        step = make_train_step(cfg, opt_cfg, n_micro=o["n_micro"],
+                               moe_dispatch=o["moe_dispatch"])
+        opt_shape = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg),
+                                   pspec)
+        m_spec_tree = {"mu": SH.moment_specs(pspec, mesh, o["preset"]),
+                       "nu": SH.moment_specs(pspec, mesh, o["preset"]),
+                       "step": P()}
+        o_shard = _named(mesh, m_spec_tree)
+        out_shape = jax.eval_shape(step, pspec, opt_shape, specs["batch"])
+        metrics_shard = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), out_shape[2])
+        fn = jax.jit(step,
+                     in_shardings=(p_shard, o_shard, b_shard),
+                     out_shardings=(p_shard, o_shard, metrics_shard),
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(pspec, opt_shape, specs["batch"])
+    elif shape.kind == "prefill":
+        if not cfg.supports_decode:  # encoder: plain forward
+            def enc(params, batch):
+                return forward(params, cfg, batch, moe_dispatch="scatter",
+                               remat=False)
+            out_s = _named(mesh, SH.batch_specs(
+                jax.eval_shape(enc, pspec, specs["batch"]), mesh))
+            fn = jax.jit(enc, in_shardings=(p_shard, b_shard),
+                         out_shardings=out_s)
+            lowered = fn.lower(pspec, specs["batch"])
+        else:
+            def pre(params, batch):
+                return prefill(params, cfg, batch, max_len=shape.seq,
+                               moe_dispatch="scatter")
+            out_shape = jax.eval_shape(pre, pspec, specs["batch"])
+            logits_s = _named(mesh, SH.batch_specs(out_shape[0], mesh))
+            cache_s = _named(mesh, SH.cache_specs(out_shape[1], mesh))
+            fn = jax.jit(pre, in_shardings=(p_shard, b_shard),
+                         out_shardings=(logits_s, cache_s))
+            lowered = fn.lower(pspec, specs["batch"])
+    else:  # decode
+        step = make_serve_step(cfg, moe_dispatch="scatter"
+                               if cfg.family == "moe" else "dense")
+        cache_s = _named(mesh, SH.cache_specs(specs["cache"], mesh))
+        tok_s = _named(mesh, SH.batch_specs(
+            jax.ShapeDtypeStruct((shape.batch,), jnp.int32), mesh))
+        fn = jax.jit(step, in_shardings=(p_shard, b_shard, cache_s),
+                     out_shardings=(tok_s, cache_s), donate_argnums=(2,))
+        lowered = fn.lower(pspec, specs["batch"], specs["cache"])
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    compile_s = time.perf_counter() - t0
+    meta = {"arch": arch_id, "shape": shape_name,
+            "mesh": dict(mesh.shape), "opts": o, "compile_s": compile_s}
+    return lowered, compiled, meta
+
+
+def analyze(lowered, compiled, meta) -> dict:
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    # trip-count-aware walk of the optimized per-device HLO (XLA's own
+    # cost_analysis counts while bodies once — see launch/hlo.py)
+    walk = hlo_cost(compiled.as_text())
+    n_dev = 1
+    for v in meta["mesh"].values():
+        n_dev *= v
+    out = dict(meta)
+    out.update({
+        "flops": walk["flops"],                     # per device
+        "hlo_bytes": walk["bytes"],                 # per device
+        "collective_bytes": walk["collective_bytes"],
+        "xla_cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "devices": n_dev,
+    })
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--preset", default=None,
+                    choices=[None, "tp", "fsdp_tp", "dp"])
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    results = []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mname = "pod2x16x16" if multi_pod else "pod16x16"
+        for arch_id in archs:
+            for shape_name in shapes:
+                reason = skip_reason(ARCHS[arch_id], SHAPES[shape_name])
+                tag = f"{arch_id}_{shape_name}_{mname}"
+                if reason:
+                    rec = {"arch": arch_id, "shape": shape_name,
+                           "mesh": mname, "status": "skip",
+                           "reason": reason}
+                    print(f"SKIP {tag}: {reason}", flush=True)
+                else:
+                    try:
+                        overrides = ({"preset": args.preset}
+                                     if args.preset else None)
+                        lowered, compiled, meta = lower_cell(
+                            arch_id, shape_name, mesh, overrides)
+                        rec = analyze(lowered, compiled, meta)
+                        rec["status"] = "ok"
+                        rec["mesh"] = mname
+                        print(f"OK   {tag}: compile={rec['compile_s']:.1f}s "
+                              f"flops={rec['flops']:.3e} "
+                              f"coll={rec['collective_bytes']['total']:.3e}B",
+                              flush=True)
+                        del lowered, compiled
+                    except Exception as e:  # noqa: BLE001
+                        rec = {"arch": arch_id, "shape": shape_name,
+                               "mesh": mname, "status": "fail",
+                               "error": f"{type(e).__name__}: {e}",
+                               "trace": traceback.format_exc()[-2000:]}
+                        print(f"FAIL {tag}: {type(e).__name__}: {e}",
+                              flush=True)
+                results.append(rec)
+                with open(os.path.join(args.out, f"{tag}.json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skip, {n_fail} fail ==")
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,42 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) — 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the ``pod`` axis is pure
+data parallelism so only gradient reduction crosses the inter-pod links.
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(jax.devices())} "
+            "(the dry-run must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before any jax import)")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int | None = None):
+    """Small mesh for subprocess-based distribution tests."""
+    shape = (pod, data, model) if pod else (data, model)
+    axes = ("pod", "data", "model") if pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def mesh_axis(mesh, name: str, default: int = 1) -> int:
+    return mesh.shape.get(name, default)

@@ -1,0 +1,96 @@
+"""Assigned input shapes x architecture cell definitions.
+
+Four shapes per LM architecture (40 cells):
+
+  train_4k     seq 4,096   global batch 256   -> train_step
+  prefill_32k  seq 32,768  global batch 32    -> prefill (encoder: forward)
+  decode_32k   seq 32,768  global batch 128   -> serve_step (1 new token)
+  long_500k    seq 524,288 global batch 1     -> serve_step (1 new token)
+
+Skip rules (recorded, not silently dropped):
+  * encoder-only archs (hubert) have no decode step -> skip decode shapes
+  * long_500k needs sub-quadratic attention -> only ssm/hybrid archs run it
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation) for every model input of a cell, plus which step
+function the cell lowers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models import init_cache
+from ..models.config import ArchConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def skip_reason(cfg: ArchConfig, shape: ShapeSpec) -> str | None:
+    if shape.kind == "decode" and not cfg.supports_decode:
+        return "encoder-only: no autoregressive decode step"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return "full-attention arch: long_500k requires sub-quadratic attention"
+    return None
+
+
+def _token_inputs(cfg: ArchConfig, batch: int, seq: int) -> dict:
+    if cfg.frontend == "tokens":
+        d = {"tokens": SDS((batch, seq), jnp.int32)}
+    else:
+        d = {"embeds": SDS((batch, seq, cfg.d_model), jnp.bfloat16)}
+        if cfg.mrope:
+            d["mrope_positions"] = SDS((3, batch, seq), jnp.int32)
+    return d
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec,
+                cache_dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStructs for one cell.  Keys: 'batch' (model inputs) and,
+    for decode, 'cache'."""
+    if shape.kind == "train":
+        batch = _token_inputs(cfg, shape.batch, shape.seq)
+        batch["labels"] = SDS((shape.batch, shape.seq), jnp.int32)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        return {"batch": _token_inputs(cfg, shape.batch, shape.seq)}
+    # decode: one new token + a cache of seq_len
+    batch = _token_inputs(cfg, shape.batch, 1)
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, shape.batch, shape.seq, cache_dtype))
+    return {"batch": batch, "cache": cache}
+
+
+def params_specs(cfg: ArchConfig, rng=None, dtype=jnp.bfloat16):
+    """Abstract parameter tree (no allocation)."""
+    from ..models import init_params
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def all_cells(archs: dict[str, ArchConfig]) -> list[tuple[str, str, str | None]]:
+    """[(arch_id, shape_name, skip_reason|None)] — the full 40-cell grid."""
+    out = []
+    for arch_id, cfg in archs.items():
+        for sname, sh in SHAPES.items():
+            out.append((arch_id, sname, skip_reason(cfg, sh)))
+    return out

@@ -1,0 +1,99 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs a real (CPU-scale by default: --reduced) training loop with the full
+production machinery: sharded step, AdamW, checkpoint/restart supervision,
+straggler watchdog, synthetic token pipeline.  On a TPU cluster the same
+entrypoint runs the full config on the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..distributed import TrainSupervisor
+from ..models import init_params
+from ..train import AdamWConfig, init_opt_state, make_train_step
+
+
+def synthetic_batches(cfg, batch: int, seq: int, seed: int = 0):
+    """Deterministic synthetic LM data: a mixture of repeated n-grams so a
+    model can actually learn (loss decreases measurably)."""
+    rng = np.random.default_rng(seed)
+    vocab = cfg.vocab_size
+    motifs = rng.integers(0, vocab, (32, 8))
+
+    def make(step):
+        r = np.random.default_rng(seed * 100003 + step)
+        toks = np.empty((batch, seq + 1), np.int64)
+        for b in range(batch):
+            parts = [motifs[r.integers(0, len(motifs))]
+                     for _ in range((seq + 8) // 8 + 1)]
+            toks[b] = np.concatenate(parts)[: seq + 1]
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+
+    return make
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--compress", default=None, choices=[None, "int8"])
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(n_layers=4, d_model=128, n_heads=4, d_ff=512,
+                          vocab=1024)
+    if cfg.frontend != "tokens":
+        raise SystemExit(f"{args.arch}: train driver needs token frontend "
+                         "(vlm/audio use the dry-run path)")
+    print(f"training {cfg.name}: {cfg.param_count() / 1e6:.2f}M params, "
+          f"batch={args.batch} seq={args.seq}")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=20,
+                          total_steps=args.steps, weight_decay=0.0)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, moe_dispatch="dense",
+                                      compress=args.compress))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params, opt_cfg)
+    if args.compress == "int8":
+        from ..train import init_feedback
+        opt["fb"] = init_feedback(params)
+    batches = synthetic_batches(cfg, args.batch, args.seq)
+
+    def supervised_step(state, step):
+        params, opt = state
+        params, opt, metrics = step_fn(params, opt, batches(step))
+        return (params, opt), {"loss": float(metrics["loss"]),
+                               "grad_norm": float(metrics["grad_norm"])}
+
+    sup = TrainSupervisor(args.ckpt_dir, supervised_step,
+                          jax.eval_shape(lambda: (params, opt)),
+                          ckpt_every=args.ckpt_every)
+    _, (params, opt), hist = sup.run((params, opt), args.steps)
+    for h in hist[:: args.log_every] + hist[-1:]:
+        print(f"step {h['step']:5d} loss {h['loss']:.4f} "
+              f"gnorm {h['grad_norm']:.3f} {h['seconds'] * 1e3:.0f}ms")
+    print(f"final loss: {hist[-1]['loss']:.4f} "
+          f"(start {hist[0]['loss']:.4f}); stragglers: "
+          f"{len(sup.watchdog.events)}")
+    return hist
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from .config import ArchConfig, MoEConfig, RGLRUConfig, SSMConfig
+from .serving import decode_step, init_cache, prefill
+from .transformer import forward, init_params, lm_loss
+
+__all__ = [
+    "ArchConfig", "MoEConfig", "SSMConfig", "RGLRUConfig", "init_params",
+    "forward", "lm_loss", "init_cache", "prefill", "decode_step",
+]

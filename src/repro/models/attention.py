@@ -1,0 +1,162 @@
+"""Grouped-query attention: full-sequence (train / prefill) and single-token
+decode with a KV cache.
+
+The full-sequence path computes attention in query/key *blocks* with an
+online softmax (the flash-attention recurrence in pure jnp) so that 32k+
+sequences never materialize an S x S score matrix in HBM.  The Pallas kernel
+(repro.kernels.attention) implements the same recurrence with VMEM tiling;
+``repro.kernels.attention.ops`` switches between them by backend.
+
+Supports: GQA (kv heads broadcast over query groups), causal and
+bidirectional masks, sliding local windows (gemma2 / recurrentgemma), logit
+soft-capping (gemma2), and QKV bias (qwen).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import softcap, truncated_normal
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko, kb = jax.random.split(key, 5)
+    s = d ** -0.5
+    p = {
+        "wq": truncated_normal(kq, (d, cfg.n_heads, hd), s, dtype),
+        "wk": truncated_normal(kk, (d, cfg.n_kv_heads, hd), s, dtype),
+        "wv": truncated_normal(kv, (d, cfg.n_kv_heads, hd), s, dtype),
+        "wo": truncated_normal(ko, (cfg.n_heads, hd, d),
+                               (cfg.n_heads * hd) ** -0.5, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+    return p
+
+
+def qkv_project(params, x, cfg, positions, rope_fn):
+    """x: (B, S, d) -> q (B,S,H,hd), k/v (B,S,KV,hd), rotated."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    if rope_fn is not None:
+        q, k = rope_fn(q, positions), rope_fn(k, positions)
+    return q, k, v
+
+
+def _block_mask(q_pos, k_pos, causal: bool, window: int):
+    """(Sq, Sk) additive mask for a block pair given absolute positions."""
+    diff = q_pos[:, None] - k_pos[None, :]
+    ok = jnp.ones(diff.shape, bool)
+    if causal:
+        ok &= diff >= 0
+    if window:
+        ok &= diff < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention(q, k, v, *, causal: bool, window: int = 0,
+              logit_cap: float = 0.0, q_block: int = 512, k_block: int = 1024,
+              q_offset: int = 0) -> jnp.ndarray:
+    """Blocked online-softmax attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd).  Returns (B, Sq, H, hd).
+    ``q_offset`` is the absolute position of q[0] (prefill continuation).
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kvh, _ = k.shape
+    groups = h // kvh
+    scale = hd ** -0.5
+    q = q.reshape(b, sq, kvh, groups, hd) * scale
+
+    q_block = min(q_block, sq)
+    k_block = min(k_block, sk)
+    nq = -(-sq // q_block)
+    nk = -(-sk // k_block)
+    sq_pad, sk_pad = nq * q_block, nk * k_block
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0), (0, 0)))
+    if sk_pad != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+
+    q_pos_all = q_offset + jnp.arange(sq_pad)
+    k_pos_all = jnp.arange(sk_pad)
+    kv_valid = jnp.where(k_pos_all < sk, 0.0, NEG_INF)
+
+    qb = q.reshape(b, nq, q_block, kvh, groups, hd)
+    kb = k.reshape(b, nk, k_block, kvh, hd)
+    vb = v.reshape(b, nk, k_block, kvh, hd)
+
+    def q_step(qq, q_pos):
+        # qq: (B, qb, KV, G, hd); q_pos: (qb,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kk = kb[:, ki]                   # (B, kb, KV, hd)
+            vv = vb[:, ki]
+            k_pos = jax.lax.dynamic_slice_in_dim(k_pos_all, ki * k_block,
+                                                 k_block)
+            s = jnp.einsum("bqkgd,bpkd->bkgqp", qq, kk)  # (B,KV,G,qb,kb)
+            s = softcap(s, logit_cap)
+            mask = _block_mask(q_pos, k_pos, causal, window)
+            kvv = jax.lax.dynamic_slice_in_dim(kv_valid, ki * k_block, k_block)
+            s = s + mask + kvv[None, :]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqp,bpkd->bkgqd", p.astype(vv.dtype), vv)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, groups, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, groups, q_block), jnp.float32)
+        a0 = jnp.zeros((b, kvh, groups, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out  # (B, KV, G, qb, hd)
+
+    q_pos_blocks = q_pos_all.reshape(nq, q_block)
+    outs = jax.vmap(q_step, in_axes=(1, 0), out_axes=1)(qb, q_pos_blocks)
+    out = jnp.transpose(outs, (0, 1, 4, 2, 3, 5)).reshape(b, sq_pad, h, hd)
+    return out[:, :sq].astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                     logit_cap: float = 0.0) -> jnp.ndarray:
+    """One-token attention against a cache.
+
+    q: (B, 1, H, hd); k/v_cache: (B, S, KV, hd); cache_len: () or (B,) int —
+    number of valid cache positions (the new token's k/v must already be
+    written at index cache_len - 1).
+    """
+    b, _, h, hd = q.shape
+    _, s, kvh, _ = k_cache.shape
+    groups = h // kvh
+    scale = hd ** -0.5
+    qq = q.reshape(b, kvh, groups, hd) * scale
+    s_logits = jnp.einsum("bkgd,bpkd->bkgp", qq, k_cache)
+    s_logits = softcap(s_logits, logit_cap)
+    pos = jnp.arange(s)
+    cl = jnp.asarray(cache_len)
+    cl = cl[:, None] if cl.ndim else cl
+    valid = pos[None, :] < jnp.broadcast_to(cl, (b, 1))
+    if window:
+        valid &= pos[None, :] >= (jnp.broadcast_to(cl, (b, 1)) - window)
+    s_logits = jnp.where(valid[:, None, None, :], s_logits, NEG_INF)
+    p = jax.nn.softmax(s_logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bkgp,bpkd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, hd)
+
+
+def out_project(params, attn_out):
+    return jnp.einsum("bshk,hkd->bsd", attn_out, params["wo"])

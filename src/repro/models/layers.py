@@ -1,0 +1,105 @@
+"""Shared neural layers: RMSNorm, embeddings, RoPE / M-RoPE, gated MLPs.
+
+Pure-functional: parameters are pytrees of jnp arrays created by ``init_*``
+helpers; forward passes are plain functions.  Layer parameters are *stacked*
+on a leading layer axis by the transformer so the layer loop is a
+``lax.scan`` (compile time stays flat in depth).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) \
+        .astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6, zero_centered: bool = True):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    w = (1.0 + weight) if zero_centered else weight
+    return (y * w).astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 style logit soft-capping."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections: tuple[int, ...]) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.  positions: (3, ..., seq) for (t, h, w);
+    ``sections`` splits the rotary half-dim across the three axes."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    # build per-frequency position selector: first sections[0] freqs use t,
+    # next sections[1] use h, rest use w
+    sel = jnp.concatenate([
+        jnp.full((sections[0],), 0), jnp.full((sections[1],), 1),
+        jnp.full((hd // 2 - sections[0] - sections[1],), 2)])
+    pos = _mrope_positions(positions, sel)
+    ang = pos * freqs  # (..., seq, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _mrope_positions(positions: jnp.ndarray, sel: jnp.ndarray) -> jnp.ndarray:
+    """positions (3, ..., seq), sel (hd/2,) in {0,1,2} ->
+    per-frequency positions (..., seq, hd/2)."""
+    stacked = jnp.moveaxis(positions.astype(jnp.float32), 0, -1)  # (..., seq, 3)
+    return jnp.take(stacked, sel, axis=-1)  # (..., seq, hd/2)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d_model ** -0.5
+    scale_out = d_ff ** -0.5
+    p = {"wi": truncated_normal(k1, (d_model, d_ff), scale_in, dtype),
+         "wo": truncated_normal(k2, (d_ff, d_model), scale_out, dtype)}
+    if act in ("silu", "geglu"):
+        p["wg"] = truncated_normal(k3, (d_model, d_ff), scale_in, dtype)
+    return p
+
+
+def mlp(params: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = x @ params["wi"]
+    if act == "silu":
+        h = jax.nn.silu(x @ params["wg"]) * h
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ params["wg"]) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(act)
+    return h @ params["wo"]

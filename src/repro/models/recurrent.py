@@ -1,0 +1,267 @@
+"""Recurrent sequence-mixing blocks.
+
+* RG-LRU (Griffin / RecurrentGemma): gated linear recurrence
+      a_t = exp(c * softplus-free log a ∘ r_t),  r_t = σ(W_a x_t)
+      h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+  computed with an associative scan (parallel over sequence — the Pallas
+  kernel repro.kernels/rglru tiles the same recurrence).
+
+* Mamba-1 selective SSM: input-dependent (Δ, B, C) discretization of a
+  diagonal state space, scanned over time per chunk.
+
+Both expose a full-sequence form (train / prefill) and a single-step form
+carrying explicit state (decode) — constant memory per token, which is why
+these archs run the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import truncated_normal
+
+C_RGLRU = 8.0
+
+
+# ---------------------------------------------------------------------------
+# Linear recurrence h_t = a_t * h_{t-1} + b_t via associative scan
+# ---------------------------------------------------------------------------
+
+def linear_scan(a, b, axis: int = -2):
+    """h_t = a_t * h_{t-1} + b_t with h_{-1} = 0, scanned along ``axis``."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+
+    a_, b_ = jax.lax.associative_scan(combine, (a, b), axis=axis)
+    return b_
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block
+# ---------------------------------------------------------------------------
+
+def init_rglru(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    cw = cfg.rglru.conv_width
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "wx": truncated_normal(ks[0], (d, w), s, dtype),     # recurrent branch
+        "wy": truncated_normal(ks[1], (d, w), s, dtype),     # gate branch
+        "conv": truncated_normal(ks[2], (cw, w), w ** -0.5, dtype),
+        "w_input_gate": truncated_normal(ks[3], (w, w), w ** -0.5, dtype),
+        "w_rec_gate": truncated_normal(ks[4], (w, w), w ** -0.5, dtype),
+        "a_param": jnp.log(jnp.expm1(  # softplus^-1 so a ≈ 0.95^c at init
+            jnp.full((w,), 0.65, jnp.float32))),
+        "wo": truncated_normal(ks[5], (w, d), w ** -0.5, dtype),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """x: (B, S, W) depthwise causal conv with kernel (cw, W).
+    ``state``: (B, cw-1, W) history for decode; returns (y, new_state)."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else pad
+    return y, new_state
+
+
+def rglru_mix(params, x, cfg, state=None):
+    """x: (B, S, d).  state: None (fresh) or dict(conv, h) for decode.
+    Returns (out (B, S, d), new_state)."""
+    xb = x @ params["wx"]
+    yb = jax.nn.gelu(x @ params["wy"])
+    conv_state = None if state is None else state["conv"]
+    xc, conv_state = _causal_conv(xb, params["conv"], conv_state)
+
+    r = jax.nn.sigmoid(xc @ params["w_rec_gate"])
+    i = jax.nn.sigmoid(xc @ params["w_input_gate"])
+    log_a = -C_RGLRU * r * jax.nn.softplus(params["a_param"])
+    a = jnp.exp(log_a.astype(jnp.float32))
+    gated = (i * xc).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+
+    if state is None:
+        h = linear_scan(a, b)
+    else:
+        h0 = state["h"]
+        # sequential within the (usually length-1) step
+        def step(carry, ab):
+            at, bt = ab
+            hn = at * carry + bt
+            return hn, hn
+        hT, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                         jnp.moveaxis(b, 1, 0)))
+        h = jnp.moveaxis(hs, 0, 1)
+        h0 = hT
+    new_state = {"conv": conv_state,
+                 "h": h[:, -1].astype(jnp.float32) if state is None
+                 else h0}
+    out = (h.astype(x.dtype) * yb) @ params["wo"]
+    return out, new_state
+
+
+def rglru_init_state(cfg, batch, dtype):
+    w = cfg.rglru.lru_width or cfg.d_model
+    cw = cfg.rglru.conv_width
+    return {"conv": jnp.zeros((batch, cw - 1, w), dtype),
+            "h": jnp.zeros((batch, w), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 block
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    ssm = cfg.ssm
+    inner = ssm.expand * d
+    n = ssm.state_dim
+    dt_rank = ssm.dt_rank or -(-d // 16)
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "in_proj": truncated_normal(ks[0], (d, 2 * inner), s, dtype),
+        "conv": truncated_normal(ks[1], (ssm.conv_width, inner),
+                                 inner ** -0.5, dtype),
+        "x_proj": truncated_normal(ks[2], (inner, dt_rank + 2 * n),
+                                   inner ** -0.5, dtype),
+        "dt_proj": truncated_normal(ks[3], (dt_rank, inner),
+                                    dt_rank ** -0.5, dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(
+                ks[4], (inner,), jnp.float32,
+                jnp.log(1e-3), jnp.log(1e-1))))),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (inner, 1))),
+        "d": jnp.ones((inner,), jnp.float32),
+        "out_proj": truncated_normal(ks[5], (inner, d), inner ** -0.5, dtype),
+    }
+
+
+def mamba_mix(params, x, cfg, state=None, scan_impl: str | None = None):
+    """x: (B, S, d) -> (B, S, d).  state: None or dict(conv, h) for decode.
+
+    ``scan_impl``:
+      * "step"  — per-timestep scan with the discretization computed inside
+        the body: nothing of shape (B, S, inner, n) is ever materialized
+        (the state h is the only (B, inner, n) tensor, carried in-place).
+        This is the HBM-traffic shape of the fused Pallas kernel
+        (repro.kernels/mamba_scan) and is ~30x lighter than "chunk"
+        (§Perf iteration 1).
+      * "chunk" — chunked associative scan (parallel over time, but each of
+        the log2(chunk) combine levels re-materializes (B, ck, inner, n)).
+    """
+    if scan_impl is None:
+        import os
+        scan_impl = os.environ.get("REPRO_MAMBA_SCAN", "chunk")
+    ssm = cfg.ssm
+    d = cfg.d_model
+    inner = ssm.expand * d
+    n = ssm.state_dim
+    dt_rank = ssm.dt_rank or -(-d // 16)
+
+    xz = x @ params["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xc, conv_state = _causal_conv(xi, params["conv"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    # projections as full-sequence matmuls (small outputs: (B,S,inner) and
+    # (B,S,n)); discretization happens inside the scan
+    proj = xc @ params["x_proj"]
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(dt @ params["dt_proj"] + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])                       # (inner, n)
+
+    h0 = (jnp.zeros((x.shape[0], inner, n), jnp.float32)
+          if state is None else state["h"])
+
+    if scan_impl == "step":
+        def step(h, t_in):
+            delta_t, xc_t, b_t, c_t = t_in              # (B,inner) ... (B,n)
+            da_t = jnp.exp(delta_t[..., None].astype(jnp.float32) * a)
+            dbx_t = (delta_t * xc_t).astype(jnp.float32)[..., None] * \
+                b_t.astype(jnp.float32)[..., None, :]
+            h = da_t * h + dbx_t                        # (B, inner, n)
+            y_t = jnp.einsum("bin,bn->bi", h, c_t.astype(jnp.float32))
+            return h, y_t
+
+        hT, ys = jax.lax.scan(
+            step, h0, (jnp.moveaxis(delta, 1, 0), jnp.moveaxis(xc, 1, 0),
+                       jnp.moveaxis(bmat, 1, 0), jnp.moveaxis(cmat, 1, 0)))
+        y = jnp.moveaxis(ys, 0, 1)
+    else:
+        y, hT = _chunked_scan(delta, xc, bmat, cmat, a, h0)
+        y = y.astype(jnp.float32)
+
+    y = y + params["d"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    new_state = {"conv": conv_state, "h": hT}
+    return out, new_state
+
+
+def _chunked_scan(delta, xc, bmat, cmat, a, h0, chunk: int = 16):
+    """Chunked scan with discretization AND the C-contraction fused INSIDE
+    the (checkpointed) chunk body — the fused-kernel structure:
+
+    * nothing of shape (B, S, inner, n) ever exists in HBM: the scan's
+      inputs are delta/xc (B, S, inner) and bmat/cmat (B, S, n), its output
+      is y (B, S, inner) — all n x smaller than the state sequence;
+    * crucially the *backward* cotangents are likewise for the small
+      tensors (the naive formulation stacks two full-size (B, S, inner, n)
+      cotangents for da / dbx — the dominant HBM term of §Perf i1-i3);
+    * each chunk's (B, ck, inner, n) internals are rematerialized in the
+      backward pass (jax.checkpoint) instead of stored.
+    """
+    bsz, s_len, inner = delta.shape
+    n = bmat.shape[-1]
+
+    def chunk_step(h, xs):
+        d_c, x_c, b_c, c_c = xs                 # (B,ck,inner) x2, (B,ck,n) x2
+        da_c = jnp.exp(d_c[..., None].astype(jnp.float32) * a)
+        db_c = (d_c * x_c).astype(jnp.float32)[..., None] * \
+            b_c.astype(jnp.float32)[..., None, :]
+        h_in = linear_scan(da_c, db_c, axis=1)
+        cum_a = jnp.cumprod(da_c, axis=1)
+        h_full = h_in + cum_a * h[:, None]
+        y_c = jnp.einsum("bkin,bkn->bki", h_full,
+                         c_c.astype(jnp.float32)).astype(delta.dtype)
+        return h_full[:, -1], y_c
+
+    chunk_step = jax.checkpoint(chunk_step)
+
+    ck = min(chunk, s_len)
+    n_chunks = -(-s_len // ck)
+    pad = n_chunks * ck - s_len
+    if pad:
+        delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+
+    def chunks(t, feat):
+        return jnp.moveaxis(t.reshape(bsz, n_chunks, ck, feat), 1, 0)
+
+    hT, ys = jax.lax.scan(chunk_step, h0,
+                          (chunks(delta, inner), chunks(xc, inner),
+                           chunks(bmat, n), chunks(cmat, n)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, n_chunks * ck, inner)[:, :s_len]
+    return y, hT
+
+
+def mamba_init_state(cfg, batch, dtype):
+    inner = cfg.ssm.expand * cfg.d_model
+    return {"conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, inner), dtype),
+            "h": jnp.zeros((batch, inner, cfg.ssm.state_dim), jnp.float32)}

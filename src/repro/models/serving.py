@@ -1,0 +1,330 @@
+"""Serving: prefill + single-token decode with explicit caches.
+
+Cache layouts (stacked over layers where homogeneous):
+
+* full-attention archs: ``kv`` (L, B, S_max, KV, hd) x2 + scalar ``len``
+* gemma2 alternation:    same (local layers mask inside the window)
+* hybrid (recurrentgemma): attention layers keep a **ring buffer** of the
+  local window only (constant memory — this is why hybrid/ssm archs run the
+  long_500k shape); RG-LRU layers carry (conv, h) states
+* ssm (mamba): (conv, h) states only — no KV at all
+
+``decode_step`` consumes one new token per sequence and returns updated
+caches; it is the function lowered by the ``decode_*`` / ``long_*`` dry-run
+shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import moe as M
+from . import recurrent as R
+from .config import ArchConfig
+from .layers import mlp, rms_norm, softcap
+from .transformer import _ffn, _rope_fn
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    kinds = [cfg.layer_kind(i) for i in range(cfg.n_layers)]
+    cache: dict = {"len": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        n_attn = sum(k == "local_attn" for k in kinds)
+        n_rec = sum(k == "rglru" for k in kinds)
+        w = min(cfg.rglru.window, max_len)
+        cache["k"] = jnp.zeros((n_attn, batch, w, kv, hd), dtype)
+        cache["v"] = jnp.zeros((n_attn, batch, w, kv, hd), dtype)
+        st = R.rglru_init_state(cfg, batch, dtype)
+        cache["rec"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_rec,) + x.shape), st)
+    elif cfg.family == "ssm":
+        st = R.mamba_init_state(cfg, batch, dtype)
+        cache["rec"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), st)
+    else:
+        cache["k"] = jnp.zeros((cfg.n_layers, batch, max_len, kv, hd), dtype)
+        cache["v"] = jnp.zeros((cfg.n_layers, batch, max_len, kv, hd), dtype)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# decode step
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ArchConfig, batch: dict, cache: dict,
+                moe_dispatch: str = "dense") -> tuple[jnp.ndarray, dict]:
+    """batch: tokens (B, 1) (or embeds (B, 1, d)); optional mrope_positions
+    (3, B, 1).  Returns (logits (B, vocab), updated cache)."""
+    if cfg.frontend == "tokens":
+        x = params["embed"][batch["tokens"]]
+        if cfg.tie_embeddings:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    else:
+        x = batch["embeds"]
+    b = x.shape[0]
+    pos = cache["len"]
+    positions = jnp.broadcast_to(pos, (b, 1))
+    rope_fn = _rope_fn(cfg, batch.get("mrope_positions"))
+
+    if cfg.family == "hybrid":
+        x, cache = _hybrid_decode(params, cfg, x, positions, rope_fn, cache)
+    elif cfg.family == "ssm":
+        x, cache = _ssm_decode(params, cfg, x, cache)
+    else:
+        x, cache = _stacked_decode(params, cfg, x, positions, rope_fn, cache,
+                                   moe_dispatch)
+
+    cache = dict(cache, len=cache["len"] + 1)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = softcap((x @ head)[:, 0], cfg.final_softcap)
+    return logits, cache
+
+
+def _write_kv(k_cache, v_cache, k_new, v_new, idx):
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), idx, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), idx, axis=1)
+    return k_cache, v_cache
+
+
+def _stacked_decode(params, cfg, x, positions, rope_fn, cache,
+                    moe_dispatch="dense"):
+    kinds = [cfg.layer_kind(i) for i in range(cfg.n_layers)]
+    is_local = jnp.asarray([k == "local_attn" for k in kinds])
+    pos = cache["len"]
+
+    def body(x, scanned):
+        bp, kc, vc, loc = scanned
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q, k, v = A.qkv_project(bp["attn"], h, cfg, positions, rope_fn)
+        kc, vc = _write_kv(kc, vc, k, v, pos)
+        window = jnp.where(loc, cfg.local_window, 0) if \
+            cfg.local_global_alternate else 0
+        if cfg.local_global_alternate and cfg.local_window:
+            out_g = A.decode_attention(q, kc, vc, pos + 1, window=0,
+                                       logit_cap=cfg.logit_softcap)
+            out_l = A.decode_attention(q, kc, vc, pos + 1,
+                                       window=cfg.local_window,
+                                       logit_cap=cfg.logit_softcap)
+            attn_out = jnp.where(loc, out_l, out_g)
+        else:
+            attn_out = A.decode_attention(q, kc, vc, pos + 1, window=0,
+                                          logit_cap=cfg.logit_softcap)
+        o = A.out_project(bp["attn"], attn_out)
+        if cfg.post_norm:
+            o = rms_norm(o, bp["pn1"], cfg.norm_eps)
+        x = x + o
+        y = _ffn(bp, rms_norm(x, bp["ln2"], cfg.norm_eps), cfg,
+                 moe_dispatch=moe_dispatch)
+        if cfg.post_norm:
+            y = rms_norm(y, bp["pn2"], cfg.norm_eps)
+        return x + y, (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["blocks"], cache["k"], cache["v"], is_local))
+    return x, dict(cache, k=k_new, v=v_new)
+
+
+def _ssm_decode(params, cfg, x, cache):
+    def body(x, scanned):
+        bp, st = scanned
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        out, st_new = R.mamba_mix(bp["ssm"], h, cfg, state=st)
+        return x + out, st_new
+
+    x, rec = jax.lax.scan(body, x, (params["blocks"], cache["rec"]))
+    return x, dict(cache, rec=rec)
+
+
+def _hybrid_decode(params, cfg, x, positions, rope_fn, cache):
+    kinds = [cfg.layer_kind(i) for i in range(cfg.n_layers)]
+    pos = cache["len"]
+    w = cache["k"].shape[2]
+    ring_idx = jnp.mod(pos, w)
+    ri = ai = 0
+    ks, vs, recs = [], [], []
+    bp_r, bp_a = params["blocks"]["rglru"], params["blocks"]["attn"]
+    for kind in kinds:
+        if kind == "rglru":
+            bp = jax.tree.map(lambda p, j=ri: p[j], bp_r)
+            st = jax.tree.map(lambda p, j=ri: p[j], cache["rec"])
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            out, st_new = R.rglru_mix(bp["rglru"], h, cfg, state=st)
+            x = x + out
+            y = mlp(bp["mlp"], rms_norm(x, bp["ln2"], cfg.norm_eps), cfg.act)
+            x = x + y
+            recs.append(st_new)
+            ri += 1
+        else:
+            bp = jax.tree.map(lambda p, j=ai: p[j], bp_a)
+            kc = cache["k"][ai]
+            vc = cache["v"][ai]
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            q, k, v = A.qkv_project(bp["attn"], h, cfg, positions, rope_fn)
+            kc, vc = _write_kv(kc, vc, k, v, ring_idx)
+            # ring holds exactly the last min(pos+1, w) tokens
+            attn_out = A.decode_attention(q, kc, vc, jnp.minimum(pos + 1, w),
+                                          window=0,
+                                          logit_cap=cfg.logit_softcap)
+            o = A.out_project(bp["attn"], attn_out)
+            x = x + o
+            y = mlp(bp["mlp"], rms_norm(x, bp["ln2"], cfg.norm_eps), cfg.act)
+            x = x + y
+            ks.append(kc)
+            vs.append(vc)
+            ai += 1
+    new_cache = dict(cache,
+                     k=jnp.stack(ks), v=jnp.stack(vs),
+                     rec=jax.tree.map(lambda *xs: jnp.stack(xs), *recs))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ArchConfig, batch: dict, max_len: int,
+            cache_dtype=jnp.bfloat16, moe_dispatch: str = "scatter"):
+    """Run the full-sequence forward while building a decode cache.
+    batch: tokens (B, S).  Returns (logits (B, S, vocab), cache)."""
+    from .transformer import forward  # logits via the standard path
+
+    if cfg.frontend == "tokens":
+        b, s = batch["tokens"].shape
+    else:
+        b, s, _ = batch["embeds"].shape
+    cache = init_cache(cfg, b, max_len, cache_dtype)
+
+    if cfg.family in ("hybrid", "ssm"):
+        # build recurrent states by replaying decode steps is O(S) — instead
+        # run the sequence form capturing final states
+        logits, cache = _prefill_recurrent(params, cfg, batch, cache)
+        return logits, cache
+
+    # capture per-layer roped k/v by re-running projections inside a scan
+    if cfg.frontend == "tokens":
+        x = params["embed"][batch["tokens"]]
+        if cfg.tie_embeddings:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    else:
+        x = batch["embeds"]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    rope_fn = _rope_fn(cfg, batch.get("mrope_positions"))
+    kinds = [cfg.layer_kind(i) for i in range(cfg.n_layers)]
+    is_local = jnp.asarray([k == "local_attn" for k in kinds])
+
+    def body(x, scanned):
+        bp, loc = scanned
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        q, k, v = A.qkv_project(bp["attn"], h, cfg, positions, rope_fn)
+        if cfg.local_global_alternate and cfg.local_window:
+            out_g = A.attention(q, k, v, causal=cfg.causal, window=0,
+                                logit_cap=cfg.logit_softcap)
+            out_l = A.attention(q, k, v, causal=cfg.causal,
+                                window=cfg.local_window,
+                                logit_cap=cfg.logit_softcap)
+            attn_out = jnp.where(loc, out_l, out_g)
+        else:
+            attn_out = A.attention(q, k, v, causal=cfg.causal, window=0,
+                                   logit_cap=cfg.logit_softcap)
+        o = A.out_project(bp["attn"], attn_out)
+        if cfg.post_norm:
+            o = rms_norm(o, bp["pn1"], cfg.norm_eps)
+        x = x + o
+        y = _ffn(bp, rms_norm(x, bp["ln2"], cfg.norm_eps), cfg,
+                 moe_dispatch=moe_dispatch)
+        if cfg.post_norm:
+            y = rms_norm(y, bp["pn2"], cfg.norm_eps)
+        return x + y, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], is_local))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = softcap(x @ head, cfg.final_softcap)
+
+    pad = max_len - s
+    ks = jnp.pad(ks.astype(cache_dtype), ((0, 0), (0, 0), (0, pad),
+                                          (0, 0), (0, 0)))
+    vs = jnp.pad(vs.astype(cache_dtype), ((0, 0), (0, 0), (0, pad),
+                                          (0, 0), (0, 0)))
+    cache = dict(cache, k=ks, v=vs, len=jnp.asarray(s, jnp.int32))
+    return logits, cache
+
+
+def _prefill_recurrent(params, cfg, batch, cache):
+    """Sequence-form prefill for ssm/hybrid: capture final states."""
+    if cfg.frontend == "tokens":
+        x = params["embed"][batch["tokens"]]
+        if cfg.tie_embeddings:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        b, s = batch["tokens"].shape
+    else:
+        x = batch["embeds"]
+        b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    rope_fn = _rope_fn(cfg, batch.get("mrope_positions"))
+    kinds = [cfg.layer_kind(i) for i in range(cfg.n_layers)]
+
+    if cfg.family == "ssm":
+        def body(x, scanned):
+            bp, st0 = scanned
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            out, st = R.mamba_mix(bp["ssm"], h, cfg)
+            return x + out, st
+        x, rec = jax.lax.scan(body, x, (params["blocks"], cache["rec"]))
+        cache = dict(cache, rec=rec, len=jnp.asarray(s, jnp.int32))
+    else:
+        ri = ai = 0
+        ks, vs, recs = [], [], []
+        w = cache["k"].shape[2]
+        bp_r, bp_a = params["blocks"]["rglru"], params["blocks"]["attn"]
+        for kind in kinds:
+            if kind == "rglru":
+                bp = jax.tree.map(lambda p, j=ri: p[j], bp_r)
+                h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+                out, st = R.rglru_mix(bp["rglru"], h, cfg)
+                x = x + out
+                x = x + mlp(bp["mlp"], rms_norm(x, bp["ln2"], cfg.norm_eps),
+                            cfg.act)
+                recs.append(st)
+                ri += 1
+            else:
+                bp = jax.tree.map(lambda p, j=ai: p[j], bp_a)
+                h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+                q, k, v = A.qkv_project(bp["attn"], h, cfg, positions,
+                                        rope_fn)
+                attn_out = A.attention(q, k, v, causal=True,
+                                       window=cfg.rglru.window)
+                x = x + A.out_project(bp["attn"], attn_out)
+                x = x + mlp(bp["mlp"], rms_norm(x, bp["ln2"], cfg.norm_eps),
+                            cfg.act)
+                # ring: last w tokens in ring order (pos % w)
+                take = jnp.arange(w) + jnp.maximum(s - w, 0)
+                kc = jnp.zeros_like(cache["k"][0]).at[
+                    :, jnp.mod(take, w)].set(
+                        k[:, jnp.clip(take, 0, s - 1)].astype(
+                            cache["k"].dtype))
+                vc = jnp.zeros_like(cache["v"][0]).at[
+                    :, jnp.mod(take, w)].set(
+                        v[:, jnp.clip(take, 0, s - 1)].astype(
+                            cache["v"].dtype))
+                ks.append(kc)
+                vs.append(vc)
+                ai += 1
+        cache = dict(cache, k=jnp.stack(ks), v=jnp.stack(vs),
+                     rec=jax.tree.map(lambda *xs: jnp.stack(xs), *recs),
+                     len=jnp.asarray(s, jnp.int32))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = softcap(x @ head, cfg.final_softcap)
+    return logits, cache

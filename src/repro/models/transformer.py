@@ -1,0 +1,269 @@
+"""Unified transformer model covering all supported families.
+
+Functional API:
+
+    params          = init_params(cfg, rng, dtype)
+    logits          = forward(params, cfg, batch)             # train/prefill
+    logits, cache   = prefill(params, cfg, batch)             # builds cache
+    logits, cache   = decode_step(params, cfg, token, cache)  # 1 new token
+
+Layer parameters of homogeneous stacks are *stacked* on a leading layer axis
+and the layer loop is a ``lax.scan`` (flat compile time in depth); the hybrid
+family (recurrentgemma) has two interleaved structures and uses a python
+loop over its short macro-pattern groups.
+
+Per-layer static variation (gemma2's local/global alternation) is encoded as
+a scanned boolean so one scan body covers both.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import moe as M
+from . import recurrent as R
+from .config import ArchConfig
+from .layers import (apply_mrope, apply_rope, init_mlp, mlp, rms_norm,
+                     softcap, truncated_normal)
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, kind: str, dtype) -> dict:
+    ka, kf, kn = jax.random.split(key, 3)
+    p: dict = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+               "ln2": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if cfg.post_norm:
+        p["pn1"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["pn2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if kind in ("attn", "local_attn"):
+        p["attn"] = A.init_attention(ka, cfg, dtype)
+    elif kind == "rglru":
+        p["rglru"] = R.init_rglru(ka, cfg, dtype)
+    elif kind == "ssm":
+        p["ssm"] = R.init_mamba(ka, cfg, dtype)
+    if kind != "ssm":
+        if cfg.family == "moe":
+            p["moe"] = M.init_moe(kf, cfg, dtype)
+            if cfg.moe.dense_residual:
+                p["dense_mlp"] = init_mlp(kf, cfg.d_model, cfg.moe.dense_ff,
+                                          cfg.act, dtype)
+        else:
+            p["mlp"] = init_mlp(kf, cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _stack(trees: list) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ArchConfig, rng, dtype=jnp.float32) -> Params:
+    keys = jax.random.split(rng, cfg.n_layers + 3)
+    params: dict = {}
+    if cfg.frontend == "tokens":
+        # tied embeddings are read back through the sqrt(d) input scaling, so
+        # init at d^-0.5 to keep initial logits O(1)
+        emb_scale = cfg.d_model ** -0.5 if cfg.tie_embeddings else 1.0
+        params["embed"] = truncated_normal(
+            keys[-1], (cfg.vocab_size, cfg.d_model), emb_scale, dtype)
+    params["ln_f"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = truncated_normal(
+            keys[-2], (cfg.d_model, cfg.vocab_size), cfg.d_model ** -0.5,
+            dtype)
+
+    kinds = [cfg.layer_kind(i) for i in range(cfg.n_layers)]
+    if cfg.family == "hybrid":
+        # two stacked groups: rglru layers and attn layers, interleaved at
+        # run time by the block pattern
+        params["blocks"] = {
+            "rglru": _stack([_init_block(keys[i], cfg, "rglru", dtype)
+                             for i, k in enumerate(kinds) if k == "rglru"]),
+            "attn": _stack([_init_block(keys[i], cfg, "local_attn", dtype)
+                            for i, k in enumerate(kinds) if k == "local_attn"]),
+        }
+    else:
+        params["blocks"] = _stack([_init_block(keys[i], cfg, kinds[i], dtype)
+                                   for i in range(cfg.n_layers)])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _rope_fn(cfg: ArchConfig, mrope_positions=None):
+    if cfg.mrope and mrope_positions is not None:
+        hd = cfg.resolved_head_dim
+        third = hd // 2 // 3
+        sections = (hd // 2 - 2 * third, third, third)
+        return lambda x, pos: apply_mrope(x, mrope_positions, cfg.rope_theta,
+                                          sections)
+    return lambda x, pos: apply_rope(x, pos, cfg.rope_theta)
+
+
+def _attn_block(bp, x, cfg, positions, is_local, rope_fn, moe_dispatch):
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    q, k, v = A.qkv_project(bp["attn"], h, cfg, positions, rope_fn)
+    window = jnp.where(is_local, cfg.local_window or cfg.rglru.window
+                       if cfg.family == "hybrid" else cfg.local_window, 0) \
+        if isinstance(is_local, jnp.ndarray) else (
+            (cfg.local_window or (cfg.rglru.window if cfg.family == "hybrid"
+                                  else 0)) if is_local else 0)
+    attn_out = _run_attention(q, k, v, cfg, window)
+    o = A.out_project(bp["attn"], attn_out)
+    if cfg.post_norm:
+        o = rms_norm(o, bp["pn1"], cfg.norm_eps)
+    x = x + o
+    y = _ffn(bp, rms_norm(x, bp["ln2"], cfg.norm_eps), cfg, moe_dispatch)
+    if cfg.post_norm:
+        y = rms_norm(y, bp["pn2"], cfg.norm_eps)
+    return x + y
+
+
+def _run_attention(q, k, v, cfg, window):
+    # window is static (int) everywhere we call full attention
+    return A.attention(q, k, v, causal=cfg.causal, window=int(window),
+                       logit_cap=cfg.logit_softcap)
+
+
+def _ffn(bp, h, cfg, moe_dispatch):
+    if "moe" in bp:
+        y = M.moe_layer(bp["moe"], h, cfg, dispatch=moe_dispatch)
+        if "dense_mlp" in bp:
+            y = y + mlp(bp["dense_mlp"], h, cfg.act)
+        return y
+    return mlp(bp["mlp"], h, cfg.act)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / no-cache prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, cfg: ArchConfig, batch: dict,
+            moe_dispatch: str = "scatter", remat: bool = True) -> jnp.ndarray:
+    """batch: tokens (B, S) int32 | embeds (B, S, d); optional
+    mrope_positions (3, B, S).  Returns logits (B, S, vocab)."""
+    if cfg.frontend == "tokens":
+        x = params["embed"][batch["tokens"]]
+        if cfg.tie_embeddings:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        bsz, seq = batch["tokens"].shape
+    else:
+        x = batch["embeds"]
+        bsz, seq, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(seq), (bsz, seq))
+    rope_fn = _rope_fn(cfg, batch.get("mrope_positions"))
+
+    if cfg.family == "hybrid":
+        x = _hybrid_forward(params, cfg, x, positions, rope_fn, remat)
+    else:
+        x = _stacked_forward(params, cfg, x, positions, rope_fn,
+                             moe_dispatch, remat)
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return softcap(logits, cfg.final_softcap)
+
+
+def _stacked_forward(params, cfg, x, positions, rope_fn, moe_dispatch, remat):
+    kinds = [cfg.layer_kind(i) for i in range(cfg.n_layers)]
+    is_local = jnp.asarray([k == "local_attn" for k in kinds])
+
+    def body(x, scanned):
+        bp, loc = scanned
+        if kinds[0] == "ssm":
+            h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+            out, _ = R.mamba_mix(bp["ssm"], h, cfg)
+            y = x + out
+        else:
+            # local/global via static-per-arch window selected by `loc`
+            if cfg.local_global_alternate and cfg.local_window:
+                y = _dual_window_block(bp, x, cfg, positions, loc, rope_fn,
+                                       moe_dispatch)
+            else:
+                y = _attn_block(bp, x, cfg, positions, False, rope_fn,
+                                moe_dispatch)
+        return y, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, (params["blocks"], is_local))
+    return x
+
+
+def _dual_window_block(bp, x, cfg, positions, loc, rope_fn, moe_dispatch):
+    """Gemma2-style alternation: compute QKV once, run attention with both
+    masks, select by the scanned ``loc`` flag (both masks share one scan
+    body; XLA folds the select)."""
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    q, k, v = A.qkv_project(bp["attn"], h, cfg, positions, rope_fn)
+    out_g = A.attention(q, k, v, causal=cfg.causal, window=0,
+                        logit_cap=cfg.logit_softcap)
+    out_l = A.attention(q, k, v, causal=cfg.causal, window=cfg.local_window,
+                        logit_cap=cfg.logit_softcap)
+    attn_out = jnp.where(loc, out_l, out_g)
+    o = A.out_project(bp["attn"], attn_out)
+    if cfg.post_norm:
+        o = rms_norm(o, bp["pn1"], cfg.norm_eps)
+    x = x + o
+    y = _ffn(bp, rms_norm(x, bp["ln2"], cfg.norm_eps), cfg, moe_dispatch)
+    if cfg.post_norm:
+        y = rms_norm(y, bp["pn2"], cfg.norm_eps)
+    return x + y
+
+
+def _hybrid_forward(params, cfg, x, positions, rope_fn, remat):
+    kinds = [cfg.layer_kind(i) for i in range(cfg.n_layers)]
+    ri = ai = 0
+    bp_r, bp_a = params["blocks"]["rglru"], params["blocks"]["attn"]
+    for i, kind in enumerate(kinds):
+        if kind == "rglru":
+            bp = jax.tree.map(lambda p, j=ri: p[j], bp_r)
+            x = _rglru_block(bp, x, cfg)
+            ri += 1
+        else:
+            bp = jax.tree.map(lambda p, j=ai: p[j], bp_a)
+            fn = functools.partial(_attn_block, cfg=cfg, positions=positions,
+                                   is_local=True, rope_fn=rope_fn,
+                                   moe_dispatch="dense")
+            x = jax.checkpoint(lambda b, y: fn(b, y))(bp, x) if remat \
+                else fn(bp, x)
+            ai += 1
+    return x
+
+
+def _rglru_block(bp, x, cfg, state=None):
+    h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+    out, new_state = R.rglru_mix(bp["rglru"], h, cfg, state)
+    x = x + out
+    y = mlp(bp["mlp"], rms_norm(x, bp["ln2"], cfg.norm_eps), cfg.act)
+    return (x + y) if state is None else (x + y, new_state)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params: Params, cfg: ArchConfig, batch: dict,
+            moe_dispatch: str = "scatter", remat: bool = True) -> jnp.ndarray:
+    logits = forward(params, cfg, batch, moe_dispatch, remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,8 @@
+from .optimizer import AdamWConfig, apply_updates, init_opt_state
+from .train_step import (compress_int8, init_feedback, make_serve_step,
+                         make_train_step)
+
+__all__ = [
+    "AdamWConfig", "init_opt_state", "apply_updates", "make_train_step",
+    "make_serve_step", "compress_int8", "init_feedback",
+]

@@ -1,0 +1,4 @@
+from .store import SegmentStore
+from .video_store import IngestStats, VideoStore
+
+__all__ = ["SegmentStore", "VideoStore", "IngestStats"]

@@ -1,0 +1,120 @@
+"""On-disk segment store (LMDB-like: MB-size values behind a keyed index).
+
+Layout: ``root/shard-XXXX.bin`` append-only blob shards + ``root/index.msgpack``
+mapping key -> (shard, offset, length).  Deletes drop index entries (space is
+reclaimed by compaction).  This mirrors the paper's use of LMDB for 8-second
+MB-size segment values without an external dependency.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+
+import msgpack
+
+_SHARD_LIMIT = 64 * 1024 * 1024
+
+
+class SegmentStore:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.Lock()
+        self._index: dict[str, tuple[int, int, int]] = {}
+        self._shard_id = 0
+        self._shard_size = 0
+        self._load()
+
+    # -- persistence --------------------------------------------------------
+    def _index_path(self) -> str:
+        return os.path.join(self.root, "index.msgpack")
+
+    def _shard_path(self, sid: int) -> str:
+        return os.path.join(self.root, f"shard-{sid:04d}.bin")
+
+    def _load(self):
+        if os.path.exists(self._index_path()):
+            with open(self._index_path(), "rb") as f:
+                raw = msgpack.unpackb(f.read())
+            self._index = {k: tuple(v) for k, v in raw["index"].items()}
+            self._shard_id = raw["shard_id"]
+            self._shard_size = raw["shard_size"]
+
+    def flush(self):
+        with self._lock:
+            blob = msgpack.packb({
+                "index": {k: list(v) for k, v in self._index.items()},
+                "shard_id": self._shard_id, "shard_size": self._shard_size,
+            })
+        tmp = self._index_path() + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, self._index_path())  # atomic
+
+    # -- KV API --------------------------------------------------------------
+    def put(self, key: str, value: bytes):
+        with self._lock:
+            if self._shard_size + len(value) > _SHARD_LIMIT and self._shard_size:
+                self._shard_id += 1
+                self._shard_size = 0
+            sid = self._shard_id
+            path = self._shard_path(sid)
+            with open(path, "ab") as f:
+                offset = f.tell()
+                f.write(value)
+            self._shard_size = offset + len(value)
+            self._index[key] = (sid, offset, len(value))
+
+    def get(self, key: str) -> bytes:
+        sid, offset, length = self._index[key]
+        with open(self._shard_path(sid), "rb") as f:
+            f.seek(offset)
+            return f.read(length)
+
+    def delete(self, key: str) -> bool:
+        with self._lock:
+            return self._index.pop(key, None) is not None
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._index
+
+    def keys(self, prefix: str = "") -> list[str]:
+        return sorted(k for k in self._index if k.startswith(prefix))
+
+    def size_of(self, key: str) -> int:
+        return self._index[key][2]
+
+    def total_bytes(self, prefix: str = "") -> int:
+        return sum(self._index[k][2] for k in self._index if k.startswith(prefix))
+
+    def compact(self):
+        """Rewrite shards dropping deleted blobs (reclaims space)."""
+        with self._lock:
+            items = sorted(self._index.items())
+            new_index, sid, size = {}, 0, 0
+            out = open(self._shard_path(10000), "wb")  # temp shard namespace
+            paths = [out.name]
+            for key, (osid, off, ln) in items:
+                with open(self._shard_path(osid), "rb") as f:
+                    f.seek(off)
+                    blob = f.read(ln)
+                if size + ln > _SHARD_LIMIT and size:
+                    out.close()
+                    sid += 1
+                    out = open(self._shard_path(10000 + sid), "wb")
+                    paths.append(out.name)
+                    size = 0
+                new_index[key] = (sid, size, ln)
+                out.write(blob)
+                size += ln
+            out.close()
+            for name in os.listdir(self.root):
+                if name.startswith("shard-") and \
+                        int(name[6:].split(".")[0]) < 10000:
+                    os.remove(os.path.join(self.root, name))
+            for i, p in enumerate(paths):
+                os.replace(p, self._shard_path(i))
+            self._index = new_index
+            self._shard_id, self._shard_size = sid, size
+        self.flush()

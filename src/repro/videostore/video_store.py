@@ -1,0 +1,172 @@
+"""VideoStore: ingestion, multi-version storage, retrieval with chunk-skip
+decode, and erosion execution — the data-path half of VStore (the
+configuration engine in ``repro.core`` decides *what* formats this layer
+materializes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from ..codec import segment as codec
+from ..codec import transform as T
+from ..core.knobs import (CodingOption, FidelityOption, IngestSpec,
+                          StorageFormat)
+from .store import SegmentStore
+
+
+@dataclasses.dataclass
+class IngestStats:
+    """Per-ingest accounting: the paper's ingestion cost (transcode compute)
+    and storage cost (bytes/sec of stored video)."""
+    encode_seconds: float = 0.0
+    stored_bytes: int = 0
+    segments: int = 0
+
+    def add(self, sec: float, nbytes: int):
+        self.encode_seconds += sec
+        self.stored_bytes += nbytes
+
+    def bytes_per_video_second(self, spec: IngestSpec) -> float:
+        dur = max(1e-9, self.segments * spec.segment_seconds)
+        return self.stored_bytes / dur
+
+    def cost_xrealtime(self, spec: IngestSpec) -> float:
+        """Transcode compute normalized to video realtime (1.0 = keeps up)."""
+        dur = max(1e-9, self.segments * spec.segment_seconds)
+        return self.encode_seconds / dur
+
+
+def _sf_key(sf_id: str, stream: str, seg: int) -> str:
+    return f"{stream}:{sf_id}:{seg:06d}"
+
+
+class VideoStore:
+    """Owns the on-disk segments for all streams × storage formats."""
+
+    def __init__(self, root: str, spec: IngestSpec | None = None):
+        self.root = root
+        self.spec = spec or IngestSpec()
+        self.backend = SegmentStore(os.path.join(root, "segments"))
+        self.formats: dict[str, StorageFormat] = {}
+        self.ingest_stats: dict[str, IngestStats] = {}
+        self._meta_path = os.path.join(root, "meta.json")
+        self._load_meta()
+
+    # -- configuration -------------------------------------------------------
+    def set_formats(self, formats: dict[str, StorageFormat]):
+        """Install the storage-format set derived by the config engine.
+        Keys are stable sf ids ('sf_g', 'sf1', ...)."""
+        self.formats = dict(formats)
+        self._save_meta()
+
+    def _save_meta(self):
+        blob = {
+            sid: {
+                "quality": sf.fidelity.quality, "crop": sf.fidelity.crop,
+                "resolution": sf.fidelity.resolution,
+                "sampling": sf.fidelity.sampling,
+                "speed": sf.coding.speed, "keyframe": sf.coding.keyframe,
+                "bypass": sf.coding.bypass,
+            } for sid, sf in self.formats.items()
+        }
+        tmp = self._meta_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(blob, f, indent=1)
+        os.replace(tmp, self._meta_path)
+
+    def _load_meta(self):
+        if not os.path.exists(self._meta_path):
+            return
+        with open(self._meta_path) as f:
+            blob = json.load(f)
+        self.formats = {
+            sid: StorageFormat(
+                FidelityOption(v["quality"], v["crop"], v["resolution"],
+                               v["sampling"]),
+                CodingOption(v["speed"], v["keyframe"], v["bypass"]))
+            for sid, v in blob.items()
+        }
+
+    # -- ingestion ------------------------------------------------------------
+    def ingest_segment(self, stream: str, seg: int, frames_u8: np.ndarray,
+                       ingest_fidelity: FidelityOption | None = None):
+        """Transcode one arriving segment into every configured storage
+        format.  ``frames_u8`` is at the ingest (richest) fidelity."""
+        src_f = ingest_fidelity or FidelityOption()
+        stats = self.ingest_stats.setdefault(stream, IngestStats())
+        stats.segments += 1
+        for sid, sf in self.formats.items():
+            t0 = time.perf_counter()
+            frames = T.convert_fidelity(frames_u8, src_f, sf.fidelity, self.spec)
+            frames = np.asarray(frames)
+            if sf.coding.bypass:
+                blob = codec.encode_raw(frames)
+            else:
+                blob = codec.encode_segment(
+                    frames, quant_scale=sf.fidelity.quant_scale,
+                    keyframe_interval=sf.coding.keyframe,
+                    zstd_level=sf.coding.zstd_level)
+            dt = time.perf_counter() - t0
+            self.backend.put(_sf_key(sid, stream, seg), blob)
+            stats.add(dt, len(blob))
+
+    # -- retrieval -------------------------------------------------------------
+    def retrieve(self, stream: str, seg: int, sf_id: str,
+                 cf: FidelityOption) -> tuple[np.ndarray, dict]:
+        """Decode a stored segment (chunk-skip under the consumer's sparser
+        sampling) and convert to the consumption fidelity.  Returns
+        (frames_u8, timing/cost dict)."""
+        sf = self.formats[sf_id]
+        if not sf.fidelity.richer_eq(cf):
+            raise ValueError(
+                f"R1 violated: SF {sf.fidelity.name()} poorer than CF {cf.name()}")
+        blob = self.backend.get(_sf_key(sf_id, stream, seg))
+        want = T.temporal_indices(sf.fidelity, cf, self.spec)
+        t0 = time.perf_counter()
+        frames = codec.decode_segment(blob, want)
+        t_dec = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out = np.asarray(T.spatial_convert(frames, sf.fidelity, cf, self.spec))
+        t_cvt = time.perf_counter() - t0
+        info = codec.segment_info(blob)
+        cost = {
+            "decode_s": t_dec, "convert_s": t_cvt, "bytes": len(blob),
+            "chunks": (codec.decoded_chunks(info["n"], info["k"], want)
+                       if not info["raw"] else 0),
+            "frames": len(want),
+        }
+        return out, cost
+
+    def has_segment(self, stream: str, seg: int, sf_id: str) -> bool:
+        return _sf_key(sf_id, stream, seg) in self.backend
+
+    def available_segments(self, stream: str, sf_id: str) -> list[int]:
+        prefix = f"{stream}:{sf_id}:"
+        return [int(k.rsplit(":", 1)[1]) for k in self.backend.keys(prefix)]
+
+    # -- erosion ----------------------------------------------------------------
+    def erode(self, stream: str, sf_id: str, fraction: float, seed: int = 0):
+        """Delete ``fraction`` of this stream x format's segments
+        (deterministic spread across the timeline, as the erosion plan
+        accumulates per age)."""
+        segs = self.available_segments(stream, sf_id)
+        n_del = int(round(len(segs) * fraction))
+        if n_del <= 0:
+            return 0
+        rng = np.random.default_rng(seed)
+        victims = rng.choice(segs, size=n_del, replace=False)
+        for s in victims:
+            self.backend.delete(_sf_key(sf_id, stream, int(s)))
+        return n_del
+
+    def storage_bytes(self, stream: str | None = None) -> int:
+        return self.backend.total_bytes(f"{stream}:" if stream else "")
+
+    def flush(self):
+        self.backend.flush()

@@ -1,0 +1,60 @@
+"""Boundary search (paper §4.2): on arbitrary monotone 2D grids the
+staircase walk probes O(rows+cols) cells, finds every per-row minimal
+adequate cell, and — combined with cost selection — matches exhaustive
+search exactly."""
+
+import numpy as np
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.boundary import boundary_search
+
+
+def _monotone_grid(rng, rows, cols):
+    """Random accuracy grid monotone non-decreasing in both axes: a 2D
+    cumulative sum of non-negative increments."""
+    inc = rng.uniform(0, 0.3, (rows, cols))
+    g = np.cumsum(np.cumsum(inc, axis=0), axis=1)
+    return g / g.max()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 9), st.integers(2, 12),
+       st.floats(0.05, 0.95))
+def test_boundary_matches_exhaustive(seed, rows, cols, target):
+    rng = np.random.default_rng(seed)
+    acc = _monotone_grid(rng, rows, cols)
+    probes_count = [0]
+
+    def adequate(r, c):
+        probes_count[0] += 1
+        return acc[r, c] >= target
+
+    points, probes = boundary_search(rows, cols, adequate)
+    assert probes == probes_count[0] <= rows + cols
+
+    # exhaustive minimal adequate cells per row
+    expected = []
+    for r in range(rows - 1, -1, -1):
+        ok = np.nonzero(acc[r] >= target)[0]
+        if len(ok) == 0:
+            break
+        expected.append((r, int(ok[0])))
+    assert points == expected
+
+    # min-cost adequate point is on the boundary when cost is monotone
+    cost = _monotone_grid(rng, rows, cols)  # richer = costlier
+    adequate_cells = [(r, c) for r in range(rows) for c in range(cols)
+                      if acc[r, c] >= target]
+    if adequate_cells:
+        best = min(adequate_cells, key=lambda rc: cost[rc])
+        assert cost[best] >= min(cost[p] for p in points) - 1e-12
+
+
+def test_probe_bound_tight():
+    # all adequate: walk stays in the first column -> rows probes
+    points, probes = boundary_search(5, 7, lambda r, c: True)
+    assert probes == 5 and len(points) == 5
+    # none adequate: walk exits after one row -> cols probes
+    points, probes = boundary_search(5, 7, lambda r, c: False)
+    assert probes == 7 and points == []

@@ -1,0 +1,168 @@
+"""Storage-format coalescing (paper §4.3): R1/R2 invariants, golden format,
+budget adaptation, and the paper's own validation — identical result to
+exhaustive enumeration on a small CF set (§6.4)."""
+
+import itertools
+
+from repro.core.coalesce import SFNode, choose_coding, coalesce
+from repro.core.consumption import Consumer, ConsumerPlan
+from repro.core.knobs import (GOLDEN_CODING, RAW, CodingOption,
+                              FidelityOption, StorageFormat, coding_space)
+from repro.core.profiler import TableProfiler
+
+
+def _mk_profiler(plans, fast_decode=300.0):
+    """Synthetic storage/retrieval tables with paper-like structure:
+    bytes grow with fidelity rank and cheaper coding; encode cost grows with
+    fidelity and slower speed steps; decode speed higher for RAW and for
+    sparser consumer sampling."""
+    from repro.core.knobs import SPEED_VALUES
+    storage, retrieve = {}, {}
+    all_f = {p.cf for p in plans}
+    # include joins of all subsets (coalescing candidates)
+    fids = set(all_f)
+    for a in list(all_f):
+        for b in list(all_f):
+            fids.add(a.join(b))
+    more = set()
+    for a in fids:
+        for b in fids:
+            more.add(a.join(b))
+    fids |= more
+    for f in fids:
+        for c in coding_space():
+            rank = sum(f.rank()) + 1
+            if c.bypass:
+                size = 4000.0 * rank
+                enc = 0.1 * rank
+            else:
+                speed_i = SPEED_VALUES.index(c.speed)
+                size = 100.0 * rank * (1 + 0.15 * speed_i) * \
+                    (1 + 10.0 / c.keyframe)
+                enc = rank * (2.0 - 0.3 * speed_i)
+            storage[(f, c)] = (enc, size)
+            for p in plans:
+                if c.bypass:
+                    spd = fast_decode * 40 / max(p.cf.sampling, 1e-3)
+                else:
+                    spd = fast_decode / rank * (1 + 5.0 / c.keyframe) / \
+                        max(p.cf.sampling, 0.05)
+                retrieve[(f, c, p.cf)] = spd
+    return TableProfiler({}, {}, storage, retrieve)
+
+
+def _plans():
+    fids = [
+        FidelityOption("best", 1.0, 720, 1.0),
+        FidelityOption("good", 1.0, 540, 1 / 2),
+        FidelityOption("bad", 0.75, 180, 1 / 30),
+        FidelityOption("best", 1.0, 200, 1.0),
+    ]
+    speeds = [10.0, 60.0, 2000.0, 400.0]
+    return [ConsumerPlan(Consumer(f"op{i}", 0.9), f, 0.92, s)
+            for i, (f, s) in enumerate(zip(fids, speeds))]
+
+
+def test_invariants_r1_r2():
+    plans = _plans()
+    prof = _mk_profiler(plans)
+    res = coalesce(prof, plans)
+    assert any(n.golden for n in res.nodes)
+    seen_plans = []
+    for node in res.nodes:
+        for p in node.plans:
+            # R1: satisfiable fidelity
+            assert node.fidelity.richer_eq(p.cf)
+            # R2: adequate retrieval speed
+            assert prof.retrieval_speed(node.sf, p.cf) > p.speed
+            seen_plans.append(p)
+    assert len(seen_plans) == len(plans)  # every consumer subscribed once
+    golden = next(n for n in res.nodes if n.golden)
+    for p in plans:
+        assert golden.fidelity.richer_eq(p.cf)  # golden is global ubound
+
+
+def test_coalescing_reduces_cost_vs_n_to_n():
+    plans = _plans()
+    prof = _mk_profiler(plans)
+    res = coalesce(prof, plans)
+    # N->N: one SF per unique CF + golden, no merging
+    from repro.core.coalesce import _golden_node, _unique_nodes
+    n2n = _unique_nodes(plans, prof) + [_golden_node(plans)]
+    ing_n2n = sum(prof.storage_profile(n.sf)[0] for n in n2n)
+    assert res.ingest_cost <= ing_n2n + 1e-9
+
+
+def test_matches_exhaustive_enumeration():
+    """Paper §6.4: greedy coalescing finds the same minimal-cost SF set as
+    enumerating every partition of the CF set."""
+    plans = _plans()[:3]
+    prof = _mk_profiler(plans)
+    res = coalesce(prof, plans)
+
+    def best_partition():
+        """Enumerate every partition of consumers into SF groups; the extra
+        label assigns consumers to the golden format (which participates in
+        coalescing, paper §4.3)."""
+        n = len(plans)
+        fg = plans[0].cf
+        for p in plans[1:]:
+            fg = fg.join(p.cf)
+        best = None
+        for labels in itertools.product(range(n + 1), repeat=n):
+            groups: dict = {}
+            for i, g in enumerate(labels):
+                groups.setdefault(g, []).append(plans[i])
+            golden_group = groups.pop(n, [])
+            nodes = []
+            feasible = True
+            for ps in groups.values():
+                fid = ps[0].cf
+                for p in ps[1:]:
+                    fid = fid.join(p.cf)
+                coding = choose_coding(prof, fid, ps)
+                if coding is None:
+                    feasible = False
+                    break
+                nodes.append(StorageFormat(fid, coding))
+            if not feasible:
+                continue
+            g_coding = (choose_coding(prof, fg, golden_group)
+                        if golden_group else GOLDEN_CODING)
+            if g_coding is None:
+                continue
+            nodes.append(StorageFormat(fg, g_coding))
+            sto = sum(prof.storage_profile(sf)[1] for sf in set(nodes))
+            ing = sum(prof.storage_profile(sf)[0] for sf in set(nodes))
+            key = (sto, ing)
+            if best is None or key < best[0]:
+                best = (key, set(nodes))
+        return best
+
+    (best_cost, best_set) = best_partition()
+    got = {n.sf for n in res.nodes}
+    got_cost = (res.storage_cost, res.ingest_cost)
+    # same storage cost as the optimum (identical sets modulo ties)
+    assert abs(got_cost[0] - best_cost[0]) < 1e-6 or got == best_set
+
+
+def test_ingest_budget_adaptation():
+    plans = _plans()
+    prof = _mk_profiler(plans)
+    free = coalesce(prof, plans)
+    budget = free.ingest_cost * 0.6
+    tight = coalesce(prof, plans, ingest_budget=budget)
+    assert tight.ingest_cost <= budget or not tight.budget_met
+    if tight.budget_met:
+        # trades storage for ingest (Table 3)
+        assert tight.storage_cost >= free.storage_cost - 1e-9
+
+
+def test_choose_coding_prefers_cheapest_feasible():
+    plans = [_plans()[0]]  # slow consumer: everything feasible
+    prof = _mk_profiler(plans)
+    c = choose_coding(prof, plans[0].cf, plans)
+    assert c == CodingOption("slowest", 250)  # min storage in the table
+    fast = [ConsumerPlan(Consumer("fast", 0.9), plans[0].cf, 0.9, 1e9)]
+    assert choose_coding(prof, fast[0].cf, fast) is None or \
+        choose_coding(prof, fast[0].cf, fast) == RAW

@@ -1,0 +1,101 @@
+"""Codec substrate: roundtrip exactness (RAW), size/quality monotonicity,
+chunk-skip equivalence, fidelity conversion shapes."""
+
+import numpy as np
+import pytest
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.codec import (convert_fidelity, decode_segment, encode_raw,
+                         encode_segment, segment_info)
+from repro.codec.transform import materialize, sample_indices
+from repro.core.knobs import (QUALITY_QUANT_SCALE, FidelityOption,
+                              IngestSpec)
+
+
+def _frames(n=16, h=48, w=64, seed=0):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)[:, None, None]
+    y = np.arange(h)[None, :, None]
+    x = np.arange(w)[None, None, :]
+    f = 120 + 50 * np.sin((x + 2 * t) / 9) + 30 * np.cos((y - t) / 7)
+    return (f + rng.normal(0, 3, (n, h, w))).clip(0, 255).astype(np.uint8)
+
+
+def test_raw_roundtrip_exact():
+    f = _frames()
+    blob = encode_raw(f)
+    assert np.array_equal(decode_segment(blob), f)
+    assert segment_info(blob)["raw"] is True
+
+
+def test_size_monotone_in_quality():
+    f = _frames()
+    sizes = [len(encode_segment(f, quant_scale=QUALITY_QUANT_SCALE[q],
+                                keyframe_interval=10, zstd_level=3))
+             for q in ("best", "good", "bad", "worst")]
+    assert sizes == sorted(sizes, reverse=True)
+
+
+def test_size_monotone_in_zstd_level():
+    f = _frames()
+    s_fast = len(encode_segment(f, quant_scale=2.0, keyframe_interval=10,
+                                zstd_level=1))
+    s_slow = len(encode_segment(f, quant_scale=2.0, keyframe_interval=10,
+                                zstd_level=19))
+    assert s_slow <= s_fast
+
+
+def test_psnr_monotone_in_quality():
+    f = _frames()
+    psnrs = []
+    for q in ("best", "good", "bad", "worst"):
+        blob = encode_segment(f, quant_scale=QUALITY_QUANT_SCALE[q],
+                              keyframe_interval=10, zstd_level=3)
+        rec = decode_segment(blob).astype(float)
+        mse = np.mean((rec - f.astype(float)) ** 2)
+        psnrs.append(10 * np.log10(255 ** 2 / max(mse, 1e-9)))
+    assert all(a >= b - 0.5 for a, b in zip(psnrs, psnrs[1:]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([5, 10, 50]),
+       st.integers(1, 16))
+def test_chunk_skip_exact(seed, kint, n_want):
+    f = _frames(seed=seed)
+    blob = encode_segment(f, quant_scale=2.0, keyframe_interval=kint,
+                          zstd_level=1)
+    full = decode_segment(blob)
+    rng = np.random.default_rng(seed)
+    want = np.sort(rng.choice(len(f), size=min(n_want, len(f)),
+                              replace=False))
+    part = decode_segment(blob, want)
+    assert np.array_equal(part, full[want])
+
+
+def test_convert_fidelity_shapes_and_r1():
+    spec = IngestSpec()
+    f = _frames(spec.frames_per_segment, spec.height, spec.width)
+    hi = FidelityOption()
+    lo = FidelityOption("bad", 0.75, 180, 1 / 5)
+    out = np.asarray(convert_fidelity(f, hi, lo, spec))
+    assert out.shape == spec.resolve(lo)
+    with pytest.raises(ValueError):
+        convert_fidelity(out, lo, hi, spec)  # R1: poorer can't serve richer
+
+
+def test_sample_indices_monotone_density():
+    for n in (30, 32, 240):
+        prev = 0
+        for s in (1 / 30, 1 / 5, 1 / 2, 2 / 3, 1.0):
+            idx = sample_indices(n, s)
+            assert len(idx) >= prev and (np.diff(idx) >= 0).all()
+            prev = len(idx)
+        assert len(sample_indices(n, 1.0)) == n
+
+
+def test_materialize_identity_at_golden():
+    spec = IngestSpec()
+    f = _frames(spec.frames_per_segment, spec.height, spec.width)
+    out = np.asarray(materialize(f, FidelityOption(), spec))
+    assert np.array_equal(out, f)

@@ -1,0 +1,67 @@
+"""End-to-end backward derivation (integration): real measured profiling on
+a reduced consumer set; asserts the R1-R4 configuration requirements and
+the boundary-search overhead bound (paper Fig. 13)."""
+
+import pytest
+
+from repro.core import Profiler, derive_config
+from repro.core.knobs import (CROP_VALUES, QUALITY_VALUES, RESOLUTION_VALUES,
+                              SAMPLING_VALUES, IngestSpec)
+
+OPS = ("diff", "motion")
+ACCS = (0.8,)
+
+
+@pytest.fixture(scope="module")
+def cfg_and_prof():
+    prof = Profiler(IngestSpec(), n_segments=2, repeats=1)
+    cfg = derive_config(prof, ops=OPS, accuracies=ACCS,
+                        storage_budget_bytes=None)
+    return cfg, prof
+
+
+def test_r1_satisfiable_fidelity(cfg_and_prof):
+    cfg, _ = cfg_and_prof
+    for node in cfg.nodes:
+        for p in node.plans:
+            assert node.fidelity.richer_eq(p.cf)
+
+
+def test_r2_adequate_retrieval(cfg_and_prof):
+    cfg, prof = cfg_and_prof
+    for node in cfg.nodes:
+        for p in node.plans:
+            assert prof.retrieval_speed(node.sf, p.cf) > p.speed
+
+
+def test_r3_consumers_subscribed_once(cfg_and_prof):
+    cfg, _ = cfg_and_prof
+    subscribed = [p for n in cfg.nodes for p in n.plans]
+    assert len(subscribed) == len(cfg.plans) == len(OPS) * len(ACCS)
+    for p in cfg.plans:
+        sf_id = cfg.subscription(p.cf)
+        assert sf_id in cfg.storage_formats()
+
+
+def test_golden_exists_and_dominates(cfg_and_prof):
+    cfg, _ = cfg_and_prof
+    golden = [n for n in cfg.nodes if n.golden]
+    assert len(golden) == 1
+    for p in cfg.plans:
+        assert golden[0].fidelity.richer_eq(p.cf)
+
+
+def test_accuracy_targets_met(cfg_and_prof):
+    cfg, _ = cfg_and_prof
+    for p in cfg.plans:
+        assert p.accuracy >= p.consumer.target - 1e-9
+
+
+def test_profiling_far_below_exhaustive(cfg_and_prof):
+    """Boundary search profiles a small fraction of the 600-option fidelity
+    space (paper: 9-15x fewer runs)."""
+    _, prof = cfg_and_prof
+    exhaustive = len(OPS) * len(QUALITY_VALUES) * len(CROP_VALUES) * \
+        len(RESOLUTION_VALUES) * len(SAMPLING_VALUES)
+    assert prof.stats.consumption_runs < exhaustive / 4
+    assert prof.stats.memo_hits > 0

@@ -1,0 +1,108 @@
+"""Erosion planning (paper §4.4): relative-speed formula, max-min overall
+speed, monotone decay, golden-format immunity, storage-budget respect,
+binary search on k."""
+
+import pytest
+
+from repro.core.coalesce import SFNode
+from repro.core.consumption import Consumer, ConsumerPlan
+from repro.core.erosion import _Chains, plan_erosion
+from repro.core.knobs import (GOLDEN_CODING, RAW, CodingOption,
+                              FidelityOption)
+from repro.core.profiler import TableProfiler
+
+
+def _setup():
+    f_lo = FidelityOption("bad", 1.0, 180, 1 / 5)
+    f_mid = FidelityOption("good", 1.0, 540, 1 / 2)
+    f_hi = FidelityOption("best", 1.0, 720, 1.0)
+    p1 = ConsumerPlan(Consumer("fast", 0.8), f_lo, 0.85, 1000.0)
+    p2 = ConsumerPlan(Consumer("slow", 0.9), f_mid, 0.92, 50.0)
+    nodes = [
+        SFNode(f_lo, RAW, [p1]),
+        SFNode(f_mid, CodingOption("slow", 50), [p2]),
+        SFNode(f_hi, GOLDEN_CODING, [], golden=True),
+    ]
+    retrieve = {
+        (f_lo, RAW, f_lo): 5000.0,
+        (f_mid, CodingOption("slow", 50), f_lo): 400.0,
+        (f_mid, CodingOption("slow", 50), f_mid): 300.0,
+        (f_hi, GOLDEN_CODING, f_lo): 60.0,
+        (f_hi, GOLDEN_CODING, f_mid): 80.0,
+    }
+    prof = TableProfiler({}, {}, {}, retrieve)
+    subs = {p1: 0, p2: 1}
+    return nodes, subs, prof, (p1, p2)
+
+
+def test_relative_speed_closed_form():
+    nodes, subs, prof, (p1, p2) = _setup()
+    chains = _Chains(prof, nodes, subs)
+    # consumer p1: own speed min(5000, 1000)=1000; on parent f_mid:
+    # min(400, 1000)=400 -> alpha=0.4
+    for p_frac in (0.0, 0.25, 0.5, 1.0):
+        e = {0: p_frac}
+        i = next(i for i, (pl, _, _) in enumerate(chains.chains)
+                 if pl is p1)
+        alpha = 0.4
+        expected = alpha / ((1 - p_frac) * alpha + p_frac) if p_frac < 1 \
+            else alpha
+        assert chains.relative_speed(i, e) == pytest.approx(expected,
+                                                            rel=1e-6)
+
+
+def test_overall_is_min_and_pmin():
+    nodes, subs, prof, _ = _setup()
+    chains = _Chains(prof, nodes, subs)
+    assert chains.overall({}) == pytest.approx(1.0)
+    pmin = chains.p_min()
+    assert 0 < pmin < 1
+    # golden can serve everyone
+    assert chains.overall({0: 1.0, 1: 1.0}) == pytest.approx(pmin)
+
+
+def test_plan_respects_budget_and_monotonicity():
+    nodes, subs, prof, _ = _setup()
+    daily = [1000.0, 3000.0, 5000.0]
+    lifespan = 8
+    full = sum(daily) * lifespan
+    plan = plan_erosion(prof, nodes, subs, daily, lifespan,
+                        storage_budget_bytes=0.7 * full)
+    assert plan.feasible
+    assert plan.total_bytes <= 0.7 * full + 1e-6
+    # fractions monotone over ages; golden (idx 2) never eroded
+    for a in range(1, lifespan):
+        for i in range(3):
+            assert plan.fractions[a].get(i, 0) >= \
+                plan.fractions[a - 1].get(i, 0) - 1e-9
+        assert plan.fractions[a].get(2, 0) == 0
+    # overall speed non-increasing
+    assert all(s1 >= s2 - 1e-9 for s1, s2 in
+               zip(plan.overall_speed, plan.overall_speed[1:]))
+
+
+def test_no_decay_when_budget_ample():
+    nodes, subs, prof, _ = _setup()
+    daily = [1.0, 1.0, 1.0]
+    plan = plan_erosion(prof, nodes, subs, daily, 5,
+                        storage_budget_bytes=1e9)
+    assert plan.k == 0.0 and all(s == 1.0 for s in plan.overall_speed)
+
+
+def test_infeasible_budget_flagged():
+    nodes, subs, prof, _ = _setup()
+    daily = [1000.0, 1000.0, 1000.0]
+    # even keeping only golden exceeds this budget
+    plan = plan_erosion(prof, nodes, subs, daily, 5,
+                        storage_budget_bytes=100.0)
+    assert not plan.feasible
+
+
+def test_higher_k_never_costs_more():
+    nodes, subs, prof, _ = _setup()
+    daily = [1000.0, 3000.0, 5000.0]
+    full = sum(daily) * 8
+    gentle = plan_erosion(prof, nodes, subs, daily, 8, 0.9 * full)
+    harsh = plan_erosion(prof, nodes, subs, daily, 8, 0.4 * full)
+    assert harsh.k >= gentle.k
+    assert harsh.total_bytes <= gentle.total_bytes + 1e-6

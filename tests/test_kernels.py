@@ -1,0 +1,114 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): shape/dtype sweeps
+with assert_allclose, plus hypothesis properties for the scan kernels."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.kernels.attention.attention import flash_attention
+from repro.kernels.attention.ops import gqa_attention
+from repro.kernels.attention.ref import attention_ref
+from repro.kernels.dct8.dct8 import dct8_dequantize, dct8_quantize
+from repro.kernels.dct8.ref import dct8_dequantize_ref, dct8_quantize_ref
+from repro.kernels.mamba_scan.mamba_scan import mamba_scan
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.resize.resize import resize_bilinear
+from repro.kernels.resize.ref import resize_ref
+from repro.kernels.rglru.ref import rglru_scan_ref
+from repro.kernels.rglru.rglru import rglru_scan
+
+RNG = jax.random.PRNGKey(7)
+
+
+# -- dct8 --------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 8, 8), (3, 24, 48), (2, 16, 128)])
+@pytest.mark.parametrize("qs", [1.0, 6.0, 16.0])
+def test_dct8_matches_ref(shape, qs):
+    x = jax.random.normal(RNG, shape) * 40 + 128
+    a = np.asarray(dct8_quantize(x, qs, interpret=True))
+    b = np.asarray(dct8_quantize_ref(x, qs))
+    np.testing.assert_array_equal(a, b)
+    ra = np.asarray(dct8_dequantize(jnp.asarray(a), qs, interpret=True))
+    rb = np.asarray(dct8_dequantize_ref(jnp.asarray(b), qs))
+    np.testing.assert_allclose(ra, rb, atol=1e-3)
+
+
+# -- flash attention ----------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "b,h,s,hd,causal,window,cap,dtype",
+    [(2, 3, 192, 64, True, 0, 0.0, jnp.float32),
+     (1, 2, 256, 32, True, 64, 50.0, jnp.float32),
+     (2, 2, 128, 64, False, 0, 0.0, jnp.float32),
+     (1, 2, 130, 64, True, 0, 0.0, jnp.float32),    # non-divisible seq
+     (1, 2, 128, 64, True, 0, 0.0, jnp.bfloat16)])
+def test_flash_attention_matches_ref(b, h, s, hd, causal, window, cap,
+                                     dtype):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd), dtype)
+    k = jax.random.normal(ks[1], (b, h, s, hd), dtype)
+    v = jax.random.normal(ks[2], (b, h, s, hd), dtype)
+    a = flash_attention(q, k, v, causal=causal, window=window, logit_cap=cap,
+                        q_block=64, k_block=64, interpret=True)
+    r = attention_ref(q, k, v, causal=causal, window=window, logit_cap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(r, np.float32), atol=tol)
+
+
+def test_gqa_wrapper_broadcasts_kv():
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (2, 64, 8, 32))   # (B, S, H, hd)
+    k = jax.random.normal(ks[1], (2, 64, 2, 32))   # KV=2
+    v = jax.random.normal(ks[2], (2, 64, 2, 32))
+    out_pl = gqa_attention(q, k, v, causal=True, use_pallas=True,
+                           interpret=True)
+    out_ref = gqa_attention(q, k, v, causal=True, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(out_pl), np.asarray(out_ref),
+                               atol=2e-5)
+
+
+# -- rglru --------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 999), st.integers(1, 3), st.integers(3, 130),
+       st.integers(4, 70))
+def test_rglru_matches_ref(seed, b, s, w):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.nn.sigmoid(jax.random.normal(k1, (b, s, w)))
+    bb = jax.random.normal(k2, (b, s, w)) * 0.1
+    got = rglru_scan(a, bb, width_tile=32, seq_chunk=32, interpret=True)
+    ref = rglru_scan_ref(a, bb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+# -- mamba scan ---------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 999), st.integers(3, 70), st.integers(8, 40),
+       st.sampled_from([4, 8, 16]))
+def test_mamba_scan_matches_ref(seed, s, inner, n):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    da = jax.nn.sigmoid(jax.random.normal(ks[0], (2, s, inner, n)))
+    dbx = jax.random.normal(ks[1], (2, s, inner, n)) * 0.1
+    c = jax.random.normal(ks[2], (2, s, n))
+    y1, h1 = mamba_scan(da, dbx, c, inner_tile=8, seq_chunk=16,
+                        interpret=True)
+    y2, h2 = mamba_scan_ref(da, dbx, c)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5)
+
+
+# -- resize -------------------------------------------------------------------
+
+@pytest.mark.parametrize("h2,w2", [(24, 40), (16, 32), (48, 80), (36, 60),
+                                   (96, 160)])
+def test_resize_matches_jax_image(h2, w2):
+    x = jax.random.normal(RNG, (2, 48, 80)) * 50 + 128
+    a = resize_bilinear(x, h2, w2, interpret=True)
+    b = resize_ref(x, h2, w2)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)

@@ -1,0 +1,68 @@
+"""Knob-space properties: richer-than partial order, join = least upper
+bound, space sizes (paper Table 1)."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.knobs import (CROP_VALUES, QUALITY_VALUES, RESOLUTION_VALUES,
+                              SAMPLING_VALUES, FidelityOption, IngestSpec,
+                              coding_space, fidelity_space)
+
+fidelities = st.builds(
+    FidelityOption,
+    quality=st.sampled_from(QUALITY_VALUES),
+    crop=st.sampled_from(CROP_VALUES),
+    resolution=st.sampled_from(RESOLUTION_VALUES),
+    sampling=st.sampled_from(SAMPLING_VALUES),
+)
+
+
+def test_space_sizes():
+    f = fidelity_space()
+    c = coding_space()
+    assert len(f) == 4 * 3 * 10 * 5 == 600
+    assert len(c) == 26  # 25 coded + RAW
+    assert len(set(f)) == 600 and len(set(c)) == 26
+
+
+@given(fidelities)
+def test_richer_reflexive(f):
+    assert f.richer_eq(f) and not f.richer(f)
+
+
+@given(fidelities, fidelities)
+def test_richer_antisymmetric(a, b):
+    if a.richer_eq(b) and b.richer_eq(a):
+        assert a == b
+
+
+@settings(max_examples=200)
+@given(fidelities, fidelities, fidelities)
+def test_richer_transitive(a, b, c):
+    if a.richer_eq(b) and b.richer_eq(c):
+        assert a.richer_eq(c)
+
+
+@settings(max_examples=200)
+@given(fidelities, fidelities)
+def test_join_is_upper_bound(a, b):
+    j = a.join(b)
+    assert j.richer_eq(a) and j.richer_eq(b)
+    # least: any other upper bound is richer than the join
+    for f in (a, b):
+        if f.richer_eq(a) and f.richer_eq(b):
+            assert f.richer_eq(j)
+
+
+@given(fidelities)
+def test_ingest_resolve_shapes(f):
+    spec = IngestSpec()
+    n, h, w = spec.resolve(f)
+    assert n >= 1 and h % 8 == 0 and w % 8 == 0
+    assert h <= spec.height and w <= spec.width
+
+
+def test_richer_not_total():
+    a = FidelityOption("good", 0.5, 720, 1 / 2)
+    b = FidelityOption("bad", 1.0, 540, 1.0)
+    assert not a.richer_eq(b) and not b.richer_eq(a)

@@ -1,0 +1,69 @@
+"""Per-architecture smoke tests: reduced same-family configs run one
+forward + one grad step on CPU with finite outputs and correct shapes
+(assignment requirement f).  Full configs are exercised only via the
+dry-run."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import forward, init_params, lm_loss
+
+RNG = jax.random.PRNGKey(0)
+KT, KL, KE = jax.random.split(RNG, 3)
+B, S = 2, 16
+
+
+def _batch(cfg):
+    batch = {}
+    if cfg.frontend == "tokens":
+        batch["tokens"] = jax.random.randint(KT, (B, S), 0, cfg.vocab_size)
+    else:
+        batch["embeds"] = jax.random.normal(KE, (B, S, cfg.d_model)) * 0.02
+        if cfg.mrope:
+            batch["mrope_positions"] = jnp.broadcast_to(
+                jnp.arange(S), (3, B, S))
+    batch["labels"] = jax.random.randint(KL, (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+def test_smoke_forward_and_grad(arch_id):
+    cfg = get_config(arch_id).reduced()
+    params = init_params(cfg, RNG)
+    batch = _batch(cfg)
+    logits = forward(params, cfg, batch, moe_dispatch="dense")
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss, grads = jax.value_and_grad(lm_loss)(params, cfg, batch, "dense")
+    assert bool(jnp.isfinite(loss)) and loss > 0
+    gnorm = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+    assert bool(jnp.isfinite(gnorm)) and gnorm > 0
+
+
+def test_registry_complete():
+    assert len(ARCHS) == 10
+    with pytest.raises(KeyError):
+        get_config("nope")
+
+
+def test_param_counts_plausible():
+    """Analytic parameter counts should be near the published sizes."""
+    expect = {
+        "starcoder2-3b": 3.0e9, "smollm-135m": 1.35e8, "gemma2-2b": 2.6e9,
+        "qwen1.5-0.5b": 4.6e8, "recurrentgemma-9b": 9e9,
+        "qwen2-moe-a2.7b": 1.4e10, "arctic-480b": 4.8e11,
+        "qwen2-vl-72b": 7.2e10, "falcon-mamba-7b": 7.3e9,
+        "hubert-xlarge": 1e9,
+    }
+    for arch_id, n in expect.items():
+        got = ARCHS[arch_id].param_count()
+        assert 0.5 * n < got < 2.0 * n, (arch_id, got, n)
+
+
+def test_moe_active_params_smaller():
+    for arch_id in ("qwen2-moe-a2.7b", "arctic-480b"):
+        cfg = ARCHS[arch_id]
+        assert cfg.active_param_count() < 0.5 * cfg.param_count()

@@ -1,0 +1,80 @@
+"""Analytics operators: golden self-consistency, negative control on empty
+scenes, genuine fidelity sensitivity."""
+
+import numpy as np
+import pytest
+
+from repro.analytics import OPERATORS, f1_score, generate_segment
+from repro.codec.transform import materialize
+from repro.core.knobs import FidelityOption, IngestSpec
+
+SPEC = IngestSpec()
+GOLDEN = FidelityOption()
+
+
+@pytest.fixture(scope="module")
+def segs():
+    return [generate_segment("jackson", i, SPEC)[0] for i in range(3)]
+
+
+@pytest.fixture(scope="module")
+def empty_seg():
+    return generate_segment("empty", 0, SPEC)[0]
+
+
+def test_golden_self_consistency(segs):
+    for name, op in OPERATORS.items():
+        items = op.detect(segs[0], GOLDEN, SPEC)
+        again = op.detect(segs[0], GOLDEN, SPEC)
+        assert items == again, name  # deterministic
+        assert f1_score(items, items) == 1.0
+
+
+def test_negative_control(empty_seg):
+    # no cars -> (almost) no detections for object-level operators
+    for name in ("motion", "snn", "nn", "license", "ocr"):
+        items = OPERATORS[name].detect(empty_seg, GOLDEN, SPEC)
+        assert len(items) <= 2, (name, items)
+
+
+def test_cars_detected(segs):
+    counts = {name: sum(len(OPERATORS[name].detect(s, GOLDEN, SPEC))
+                        for s in segs)
+              for name in OPERATORS}
+    for name in ("motion", "snn", "license"):
+        assert counts[name] > 0, name
+
+
+def test_f1_score_basics():
+    assert f1_score(set(), set()) == 1.0
+    assert f1_score({1}, set()) == 0.0
+    assert f1_score(set(), {1}) == 0.0
+    assert f1_score({1, 2}, {2, 3}) == pytest.approx(0.5)
+
+
+@pytest.mark.parametrize("op_name", ["snn", "license"])
+def test_accuracy_degrades_with_resolution(segs, op_name):
+    op = OPERATORS[op_name]
+    accs = []
+    for res in (144, 400, 720):
+        cf = FidelityOption("best", 1.0, res, 1.0)
+        acc = np.mean([
+            f1_score(op.detect(np.asarray(materialize(s, cf, SPEC)), cf,
+                               SPEC),
+                     op.detect(s, GOLDEN, SPEC)) for s in segs])
+        accs.append(acc)
+    assert accs[-1] == 1.0
+    assert accs[0] <= accs[-1] - 0.2  # low resolution genuinely hurts
+
+
+def test_positions_subset(segs):
+    """Cascades pass activated frame subsets with explicit positions."""
+    op = OPERATORS["motion"]
+    cf = FidelityOption()
+    full = op.detect(segs[0], cf, SPEC)
+    pos = np.arange(SPEC.frames_per_segment)
+    sel = pos[: SPEC.frames_per_segment // 2]
+    half = op.detect(segs[0][sel], cf, SPEC, positions=sel)
+    buckets_half = {it[1] for it in half}
+    assert buckets_half <= {it[1] for it in full} | buckets_half
+    assert all(b <= max(sel) // max(1, SPEC.fps // 2) for b in buckets_half)

@@ -1,0 +1,71 @@
+"""Cascade query execution over a real store: early stages filter later
+ones; speed accounting; accuracy/cost tradeoff across target levels."""
+
+import numpy as np
+import pytest
+
+from repro.analytics.query import QUERIES, run_query
+from repro.analytics.scene import generate_segment
+from repro.core.coalesce import SFNode
+from repro.core.configure import DerivedConfig
+from repro.core.consumption import Consumer, ConsumerPlan
+from repro.core.knobs import (GOLDEN_CODING, RAW, CodingOption,
+                              FidelityOption, IngestSpec, StorageFormat)
+from repro.videostore import VideoStore
+
+
+def _manual_config():
+    """Hand-built two-SF configuration for query A at one accuracy level."""
+    cf_diff = FidelityOption("good", 1.0, 270, 1 / 2)
+    cf_snn = FidelityOption("good", 1.0, 360, 1 / 2)
+    cf_nn = FidelityOption("best", 1.0, 720, 2 / 3)
+    plans = [
+        ConsumerPlan(Consumer("diff", 0.8), cf_diff, 0.85, 3000.0),
+        ConsumerPlan(Consumer("snn", 0.8), cf_snn, 0.86, 500.0),
+        ConsumerPlan(Consumer("nn", 0.8), cf_nn, 0.82, 30.0),
+    ]
+    fast = SFNode(cf_diff.join(cf_snn), RAW, plans[:2])
+    golden = SFNode(FidelityOption(), GOLDEN_CODING, [plans[2]], golden=True)
+
+    class _Log:
+        nodes = [fast, golden]
+        ingest_cost = storage_cost = 0.0
+        rounds = []
+        budget_met = True
+
+    return DerivedConfig(plans=plans, nodes=[fast, golden], coalesce_log=_Log())
+
+
+@pytest.fixture(scope="module")
+def store_and_config(tmp_path_factory):
+    root = tmp_path_factory.mktemp("qstore")
+    spec = IngestSpec()
+    cfg = _manual_config()
+    vs = VideoStore(str(root), spec)
+    vs.set_formats(cfg.storage_formats())
+    for seg in range(3):
+        frames, _ = generate_segment("jackson", seg, spec)
+        vs.ingest_segment("jackson", seg, frames)
+    return vs, cfg
+
+
+def test_query_a_runs(store_and_config):
+    vs, cfg = store_and_config
+    res = run_query(vs, cfg, "A", "jackson", [0, 1, 2], 0.8)
+    assert res.video_seconds == 3 * vs.spec.segment_seconds
+    assert len(res.stages) == 3
+    assert res.pipelined_speed > 0 and \
+        res.pipelined_speed >= res.sequential_speed
+
+
+def test_cascade_filters(store_and_config):
+    vs, cfg = store_and_config
+    res = run_query(vs, cfg, "A", "jackson", [0, 1, 2], 0.8)
+    # later stages never consume more frames than earlier ones
+    assert res.stages[1].frames <= res.stages[0].frames * 2  # cf sampling may differ
+    assert res.stages[2].segments_scanned <= res.stages[0].segments_scanned
+
+
+def test_queries_defined():
+    assert QUERIES["A"] == ("diff", "snn", "nn")
+    assert QUERIES["B"] == ("motion", "license", "ocr")

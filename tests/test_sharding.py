@@ -1,0 +1,105 @@
+"""Sharding rules: every parameter/moment/batch/cache spec divides its dims
+on the production meshes, for every architecture and preset; ZeRO-1 adds a
+data axis where possible; the HLO cost walker stays trip-count-exact."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.distributed import sharding as SH
+from repro.launch.specs import SHAPES, input_specs, params_specs, skip_reason
+
+
+class FakeMesh:
+    def __init__(self, **shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESHES = [FakeMesh(data=16, model=16), FakeMesh(pod=2, data=16, model=16),
+          FakeMesh(data=2, model=2)]
+
+
+def _check(spec_tree, shape_tree, mesh):
+    ms = dict(mesh.shape)
+    flat_s = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    flat_l = jax.tree_util.tree_leaves(shape_tree)
+    assert len(flat_s) == len(flat_l)
+    for spec, leaf in zip(flat_s, flat_l):
+        assert len(spec) <= len(leaf.shape), (spec, leaf.shape)
+        for entry, dim in zip(spec, leaf.shape):
+            n = SH._axis_size(ms, entry)
+            assert dim % n == 0, (spec, leaf.shape, entry)
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+@pytest.mark.parametrize("mesh", MESHES, ids=lambda m: str(m.shape))
+@pytest.mark.parametrize("preset", ["tp", "fsdp_tp", "dp"])
+def test_param_specs_divide(arch_id, mesh, preset):
+    cfg = ARCHS[arch_id]
+    pspec = params_specs(cfg)
+    specs = SH.param_specs(pspec, mesh, preset)
+    _check(specs, pspec, mesh)
+    moments = SH.moment_specs(pspec, mesh, preset)
+    _check(moments, pspec, mesh)
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+@pytest.mark.parametrize("shape_name", sorted(SHAPES))
+def test_batch_and_cache_specs_divide(arch_id, shape_name):
+    cfg = ARCHS[arch_id]
+    shape = SHAPES[shape_name]
+    if skip_reason(cfg, shape):
+        pytest.skip(skip_reason(cfg, shape))
+    mesh = MESHES[1]
+    specs = input_specs(cfg, shape)
+    _check(SH.batch_specs(specs["batch"], mesh), specs["batch"], mesh)
+    if "cache" in specs:
+        _check(SH.cache_specs(specs["cache"], mesh), specs["cache"], mesh)
+
+
+def test_zero1_adds_data_axis():
+    mesh = MESHES[0]
+    spec = SH.zero1_spec(P(None, "model"), (1024, 1536), dict(mesh.shape))
+    assert spec == P("data", "model")
+    # nothing divisible -> unchanged
+    spec = SH.zero1_spec(P(None, "model"), (9, 1536), dict(mesh.shape))
+    assert spec == P(None, "model")
+
+
+def test_dp_preset_replicates():
+    mesh = MESHES[0]
+    cfg = ARCHS["smollm-135m"]
+    pspec = params_specs(cfg)
+    specs = SH.param_specs(pspec, mesh, "dp")
+    for s in jax.tree_util.tree_leaves(specs,
+                                       is_leaf=lambda x: isinstance(x, P)):
+        assert all(e is None for e in s)
+
+
+# -- HLO walker ---------------------------------------------------------------
+
+def test_hlo_walker_trip_counts():
+    from repro.launch.hlo import hlo_cost
+
+    def body(x, w):
+        return x @ w, None
+
+    def f_scan(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    def f_unroll(x, ws):
+        for i in range(ws.shape[0]):
+            x = x @ ws[i]
+        return x
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 256, 256), jnp.float32)
+    expected = 10 * 2 * 256 ** 3
+    for f in (f_scan, f_unroll):
+        c = hlo_cost(jax.jit(f).lower(x, ws).compile().as_text())
+        assert abs(c["flops"] / expected - 1.0) < 1e-6

@@ -1,0 +1,92 @@
+"""Segment store + VideoStore: KV semantics, ingest/retrieve path, R1
+enforcement, erosion execution, compaction."""
+
+import numpy as np
+import pytest
+
+from repro.analytics.scene import generate_segment
+from repro.core.knobs import (RAW, CodingOption, FidelityOption, IngestSpec,
+                              StorageFormat)
+from repro.videostore import SegmentStore, VideoStore
+
+
+def test_segment_store_kv(tmp_path):
+    s = SegmentStore(str(tmp_path / "kv"))
+    s.put("a", b"xyz")
+    s.put("b", b"\x00" * 1000)
+    assert s.get("a") == b"xyz" and s.size_of("b") == 1000
+    assert s.keys() == ["a", "b"] and "a" in s
+    assert s.delete("a") and not s.delete("a")
+    assert s.keys() == ["b"]
+    s.flush()
+    s2 = SegmentStore(str(tmp_path / "kv"))
+    assert s2.get("b") == b"\x00" * 1000
+
+
+def test_segment_store_compact(tmp_path):
+    s = SegmentStore(str(tmp_path / "kv"))
+    for i in range(20):
+        s.put(f"k{i:02d}", bytes([i]) * 5000)
+    for i in range(0, 20, 2):
+        s.delete(f"k{i:02d}")
+    s.compact()
+    for i in range(1, 20, 2):
+        assert s.get(f"k{i:02d}") == bytes([i]) * 5000
+    assert len(s.keys()) == 10
+
+
+@pytest.fixture
+def store(tmp_path):
+    spec = IngestSpec()
+    vs = VideoStore(str(tmp_path / "vs"), spec)
+    vs.set_formats({
+        "sf_g": StorageFormat(FidelityOption(),
+                              CodingOption("fast", 10)),
+        "sf1": StorageFormat(FidelityOption("good", 1.0, 360, 1 / 2),
+                             RAW),
+    })
+    for seg in range(2):
+        frames, _ = generate_segment("jackson", seg, spec)
+        vs.ingest_segment("jackson", seg, frames)
+    return vs
+
+
+def test_ingest_and_retrieve(store):
+    spec = store.spec
+    cf = FidelityOption("good", 1.0, 360, 1 / 2)
+    frames, cost = store.retrieve("jackson", 0, "sf1", cf)
+    assert frames.shape == spec.resolve(cf)
+    assert cost["bytes"] > 0 and cost["frames"] == frames.shape[0]
+    # richer SF serves poorer CF
+    poorer = FidelityOption("bad", 0.75, 180, 1 / 5)
+    frames2, _ = store.retrieve("jackson", 0, "sf_g", poorer)
+    assert frames2.shape == spec.resolve(poorer)
+
+
+def test_r1_enforced(store):
+    too_rich = FidelityOption("best", 1.0, 720, 1.0)
+    with pytest.raises(ValueError):
+        store.retrieve("jackson", 0, "sf1", too_rich)
+
+
+def test_meta_persistence(store, tmp_path):
+    vs2 = VideoStore(store.root, store.spec)
+    assert set(vs2.formats) == {"sf_g", "sf1"}
+    assert vs2.formats["sf1"].coding.bypass
+
+
+def test_erosion_exec(store):
+    before = store.available_segments("jackson", "sf1")
+    assert len(before) == 2
+    deleted = store.erode("jackson", "sf1", 0.5)
+    assert deleted == 1
+    assert len(store.available_segments("jackson", "sf1")) == 1
+    # golden untouched
+    assert len(store.available_segments("jackson", "sf_g")) == 2
+
+
+def test_ingest_stats(store):
+    st = store.ingest_stats["jackson"]
+    assert st.segments == 2
+    assert st.stored_bytes == store.storage_bytes("jackson")
+    assert st.cost_xrealtime(store.spec) > 0

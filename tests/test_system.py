@@ -1,0 +1,43 @@
+"""End-to-end system behaviour: ingest -> auto-configure (table-driven) ->
+store -> query, exercising the full data path the paper's Figure 1 draws."""
+
+import numpy as np
+
+from repro.analytics.query import run_query
+from repro.analytics.scene import generate_segment
+from repro.core import derive_config
+from repro.core.knobs import IngestSpec
+from repro.core.profiler import Profiler
+from repro.videostore import VideoStore
+
+
+def test_full_lifecycle(tmp_path):
+    spec = IngestSpec()
+    prof = Profiler(spec, n_segments=1, repeats=1)
+    cfg = derive_config(prof, ops=("diff", "snn"), accuracies=(0.7,))
+
+    vs = VideoStore(str(tmp_path / "store"), spec)
+    vs.set_formats(cfg.storage_formats())
+    for seg in range(2):
+        frames, _ = generate_segment("jackson", seg, spec)
+        vs.ingest_segment("jackson", seg, frames)
+
+    # every stored version exists, every consumer can be served
+    for sf_id in cfg.storage_formats():
+        assert vs.available_segments("jackson", sf_id) == [0, 1]
+    for p in cfg.plans:
+        frames, cost = vs.retrieve("jackson", 0, cfg.subscription(p.cf),
+                                   p.cf)
+        assert frames.shape == spec.resolve(p.cf)
+
+    # a two-stage cascade runs on the derived configuration
+    class _Q:
+        pass
+    from repro.analytics import query as Q
+    Q.QUERIES["mini"] = ("diff", "snn")
+    try:
+        res = run_query(vs, cfg, "mini", "jackson", [0, 1], 0.7)
+        assert res.pipelined_speed > 0
+        assert len(res.stages) == 2
+    finally:
+        Q.QUERIES.pop("mini")
