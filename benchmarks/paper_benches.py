@@ -237,6 +237,60 @@ def bench_table3_ingest_budget():
             f"met={res.budget_met};codings={codings}")
 
 
+def bench_serve_concurrency(tmp_root="/tmp/repro_bench_serve"):
+    """Beyond-paper: concurrent query serving (repro.serving).  Aggregate
+    x-realtime and decoded-segment cache hit rate at 1/4/16 concurrent
+    queries over shared segments, vs the same workload as sequential
+    ``run_query`` calls — the cache + shared-retrieval planner + request
+    collapsing should multiply aggregate throughput, with results
+    bit-identical to the sequential baseline."""
+    import shutil
+
+    from repro.serving import VStoreServer
+
+    cfg = config()
+    n_segs = 3
+    shutil.rmtree(tmp_root, ignore_errors=True)
+    vs = VideoStore(f"{tmp_root}/store", SPEC)
+    vs.set_formats(cfg.storage_formats())
+    for seg in range(n_segs):
+        frames, _ = generate_segment("jackson", seg, SPEC)
+        vs.ingest_segment("jackson", seg, frames)
+    segs = list(range(n_segs))
+
+    def workload(n):
+        mix = [(q, a) for q in ("A", "B") for a in ACCURACIES]
+        return [(mix[i % len(mix)][0], "jackson", segs, mix[i % len(mix)][1])
+                for i in range(n)]
+
+    baseline = {}  # warm jit caches + golden item sets
+    for q, stream, sg, acc in workload(16):
+        if (q, acc) not in baseline:
+            baseline[(q, acc)] = run_query(vs, cfg, q, stream, sg, acc)
+
+    for n in (1, 4, 16):
+        subs = workload(n)
+        t0 = time.perf_counter()
+        for q, stream, sg, acc in subs:
+            run_query(vs, cfg, q, stream, sg, acc)
+        seq_wall = time.perf_counter() - t0
+
+        with VStoreServer(vs, cfg, workers=4, max_inflight=n) as srv:
+            t0 = time.perf_counter()
+            results = srv.run_batch(subs)
+            wall = time.perf_counter() - t0
+            st = srv.stats()
+        identical = all(r.items == baseline[(q, acc)].items
+                        for r, (q, _s, _sg, acc) in zip(results, subs))
+        vsec = n * n_segs * SPEC.segment_seconds
+        row("serve_concurrency", wall * 1e6,
+            f"n={n};agg_x={vsec / wall:.0f};seq_x={vsec / seq_wall:.0f};"
+            f"speedup={seq_wall / wall:.2f};"
+            f"hit_rate={st['cache']['hit_rate']:.2f};"
+            f"collapsed={st['collapsed']};decodes={st['decodes']};"
+            f"coalesced_cfs={st['coalesced_cfs']};identical={identical}")
+
+
 def bench_fig13_overhead():
     """Fig. 13 / §6.4: boundary-search + memoization profiling overhead vs
     exhaustive profiling of the full fidelity space."""

@@ -40,6 +40,7 @@ def main() -> None:
         B.bench_fig11_end_to_end,
         B.bench_fig12_erosion,
         B.bench_table3_ingest_budget,
+        B.bench_serve_concurrency,
         B.bench_fig13_overhead,
         bench_roofline,
     ]

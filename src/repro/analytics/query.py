@@ -44,6 +44,7 @@ class QueryResult:
     items: set
     stages: list[StageStats]
     video_seconds: float
+    wall_s: float = 0.0  # measured end-to-end wall time of the execution
 
     @property
     def pipelined_speed(self) -> float:
@@ -56,6 +57,24 @@ class QueryResult:
         t = sum(s.retrieve_s + s.consume_s for s in self.stages)
         return self.video_seconds / max(t, 1e-9)
 
+    @property
+    def measured_speed(self) -> float:
+        """x realtime from the measured wall clock (the honest number; the
+        two estimates above model perfect/no pipelining from stage timings)."""
+        return self.video_seconds / max(self.wall_s, 1e-9)
+
+
+def stage_specs(config, query: str, accuracy: float):
+    """The cascade's resolved stages: [(op_name, operator, cf, sf_id)].
+
+    Shared by the sequential path below and the pipelined executor
+    (repro.serving.executor) so both run the identical cascade."""
+    out = []
+    for op_name in QUERIES[query]:
+        cf = config.consumption_format(op_name, accuracy)
+        out.append((op_name, OPERATORS[op_name], cf, config.subscription(cf)))
+    return out
+
 
 def _active_frame_mask(frames_pos: np.ndarray, active_buckets: set | None,
                        spec: IngestSpec) -> np.ndarray:
@@ -65,22 +84,23 @@ def _active_frame_mask(frames_pos: np.ndarray, active_buckets: set | None,
 
 
 def run_query(store, config, query: str, stream: str, segments: list[int],
-              accuracy: float) -> QueryResult:
+              accuracy: float, retriever=None) -> QueryResult:
     """Execute a cascade at one target accuracy for every stage.
 
     ``config`` is a DerivedConfig (repro.core.configure): maps consumer
-    (op, accuracy) -> CF and CF -> storage format id.
+    (op, accuracy) -> CF and CF -> storage format id.  ``retriever``
+    substitutes the store's decode path — the serving layer passes its
+    planner's cache-aware fetch here so all retrieval routes through the
+    shared decoded-segment cache.
     """
     spec = store.spec
-    ops = QUERIES[query]
+    fetch = retriever or store.retrieve
     stages: list[StageStats] = []
     active: dict[int, set] | None = None  # per segment active buckets
     items_all: set = set()
+    t_start = time.perf_counter()
 
-    for depth, op_name in enumerate(ops):
-        op = OPERATORS[op_name]
-        cf = config.consumption_format(op_name, accuracy)
-        sf_id = config.subscription(cf)
+    for op_name, op, cf, sf_id in stage_specs(config, query, accuracy):
         st = StageStats(op=op_name, cf=cf, sf_id=sf_id)
         stage_items: set = set()
         next_active: dict[int, set] = {}
@@ -90,7 +110,7 @@ def run_query(store, config, query: str, stream: str, segments: list[int],
                 continue  # early stage filtered this segment entirely
             st.segments_scanned += 1
             t0 = time.perf_counter()
-            frames, _cost = store.retrieve(stream, seg, sf_id, cf)
+            frames, _cost = fetch(stream, seg, sf_id, cf)
             st.retrieve_s += time.perf_counter() - t0
 
             pos = _positions(cf, spec)
@@ -113,4 +133,5 @@ def run_query(store, config, query: str, stream: str, segments: list[int],
         items_all = stage_items  # final stage's items are the answer
 
     dur = len(segments) * spec.segment_seconds
-    return QueryResult(items=items_all, stages=stages, video_seconds=dur)
+    return QueryResult(items=items_all, stages=stages, video_seconds=dur,
+                       wall_s=time.perf_counter() - t_start)

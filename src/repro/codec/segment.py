@@ -6,7 +6,10 @@ delta-coded frames (predicted from the previous *reconstructed* frame, DPCM
 style, so there is no drift between encoder and decoder).  Chunks decode
 independently — sparse frame sampling therefore skips whole chunks
 (paper Fig. 3b).  Quantized DCT symbols are entropy-coded with zstd whose
-level realizes the *speed step* knob (paper Fig. 3a).
+level realizes the *speed step* knob (paper Fig. 3a); when the optional
+``zstandard`` module is absent we fall back to stdlib ``zlib`` and record
+the entropy coder in the blob header (``"ec"``), so blobs stay
+self-describing and either coder can read its own output.
 
 Blob layout: [u32 header_len][msgpack header][payload bytes].
 """
@@ -15,16 +18,40 @@ from __future__ import annotations
 
 import functools
 import struct
+import zlib
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # pragma: no cover - exercised on bare interpreters
+    zstandard = None
 
 from . import transform as T
 
 _MAGIC = "tpucodec-v1"
+
+
+def _compress(payload: bytes, level: int) -> tuple[str, bytes]:
+    """Entropy-code with zstd when available, else zlib.  Returns the coder
+    tag recorded in the header alongside the compressed payload."""
+    if zstandard is not None:
+        return "zstd", zstandard.ZstdCompressor(level=level).compress(payload)
+    return "zlib", zlib.compress(payload, min(9, max(1, level)))
+
+
+def _decompress(coder: str, payload: bytes) -> bytes:
+    if coder == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "blob was zstd-coded but the zstandard module is unavailable")
+        return zstandard.ZstdDecompressor().decompress(payload)
+    if coder == "zlib":
+        return zlib.decompress(payload)
+    raise ValueError(f"unknown entropy coder {coder!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -78,10 +105,11 @@ def encode_segment(frames_u8: np.ndarray, *, quant_scale: float,
         sym = _encode_chunk(chunk, jnp.float32(quant_scale))
         parts.append(np.asarray(sym))
     payload = b"".join(p.tobytes() for p in parts)
-    comp = zstandard.ZstdCompressor(level=zstd_level).compress(payload)
+    coder, comp = _compress(payload, zstd_level)
     header = msgpack.packb({
         "magic": _MAGIC, "raw": False, "n": n, "h": h, "w": w,
         "k": keyframe_interval, "qs": float(quant_scale), "lvl": zstd_level,
+        "ec": coder,
     })
     return struct.pack("<I", len(header)) + header + comp
 
@@ -120,7 +148,7 @@ def decode_segment(blob: bytes, want: np.ndarray | None = None) -> np.ndarray:
     k, qs = header["k"], np.float32(header["qs"])
     hb, wb = h // T.BLOCK, w // T.BLOCK
     sym_all = np.frombuffer(
-        zstandard.ZstdDecompressor().decompress(payload), np.int16
+        _decompress(header.get("ec", "zstd"), payload), np.int16
     ).reshape(n, hb, wb, T.BLOCK, T.BLOCK)
 
     if want is None:

@@ -22,6 +22,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+_COMPILER_PARAMS = getattr(pltpu, 'CompilerParams', None) or \
+    pltpu.TPUCompilerParams
+
 
 def _mamba_kernel(da_ref, dbx_ref, c_ref, y_ref, hT_ref, state):
     si = pl.program_id(2)
@@ -83,7 +86,7 @@ def mamba_scan(da: jnp.ndarray, dbx: jnp.ndarray, c: jnp.ndarray, *,
             jax.ShapeDtypeStruct((bsz, ni * it, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((it, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(da.astype(jnp.float32), dbx.astype(jnp.float32), c.astype(jnp.float32))

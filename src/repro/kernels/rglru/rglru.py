@@ -20,6 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+_COMPILER_PARAMS = getattr(pltpu, 'CompilerParams', None) or \
+    pltpu.TPUCompilerParams
+
 
 def _rglru_kernel(a_ref, b_ref, h_ref, state):
     si = pl.program_id(2)
@@ -63,7 +66,7 @@ def rglru_scan(a: jnp.ndarray, b: jnp.ndarray, *, width_tile: int = 128,
         out_specs=pl.BlockSpec((1, sc, wt), lambda i, j, t: (i, t, j)),
         out_shape=jax.ShapeDtypeStruct((bsz, ns * sc, nw * wt), jnp.float32),
         scratch_shapes=[pltpu.VMEM((wt,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a.astype(jnp.float32), b.astype(jnp.float32))

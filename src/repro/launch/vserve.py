@@ -1,0 +1,137 @@
+"""Concurrent query-serving launcher: ``python -m repro.launch.vserve``.
+
+Builds a demo VideoStore (synthetic street scenes, two storage formats),
+then drives the serving stack — decoded-segment cache, shared-retrieval
+planner, pipelined executor — with a mixed concurrent workload and prints
+per-query plus aggregate stats against the sequential baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import time
+
+from ..analytics.query import run_query
+from ..analytics.scene import generate_segment
+from ..core.coalesce import SFNode
+from ..core.configure import DerivedConfig
+from ..core.consumption import Consumer, ConsumerPlan
+from ..core.knobs import GOLDEN_CODING, RAW, FidelityOption, IngestSpec
+from ..serving import VStoreServer
+from ..videostore import VideoStore
+
+
+def demo_config(accuracies=(0.8, 0.9)) -> DerivedConfig:
+    """Hand-built two-SF configuration (skips profiling so the launcher
+    starts in seconds; ``repro.core.derive_config`` is the real path)."""
+    cf_diff = FidelityOption("good", 1.0, 270, 1 / 2)
+    cf_snn = FidelityOption("good", 1.0, 360, 1 / 2)
+    cf_motion = FidelityOption("bad", 1.0, 180, 1 / 5)
+    cf_nn = FidelityOption("best", 1.0, 720, 2 / 3)
+    cf_license = FidelityOption("best", 1.0, 540, 1 / 2)
+    cf_ocr = FidelityOption("best", 1.0, 720, 1 / 2)
+    fast_cfs = (cf_diff, cf_snn, cf_motion)
+    plans = []
+    for acc in accuracies:
+        plans += [ConsumerPlan(Consumer("diff", acc), cf_diff, 0.85, 3000.0),
+                  ConsumerPlan(Consumer("snn", acc), cf_snn, 0.86, 500.0),
+                  ConsumerPlan(Consumer("motion", acc), cf_motion, 0.84, 2000.0),
+                  ConsumerPlan(Consumer("nn", acc), cf_nn, 0.82, 30.0),
+                  ConsumerPlan(Consumer("license", acc), cf_license, 0.83, 60.0),
+                  ConsumerPlan(Consumer("ocr", acc), cf_ocr, 0.81, 40.0)]
+    fast = SFNode(cf_diff.join(cf_snn).join(cf_motion), RAW,
+                  [p for p in plans if p.cf in fast_cfs])
+    golden = SFNode(FidelityOption(), GOLDEN_CODING,
+                    [p for p in plans if p.cf not in fast_cfs], golden=True)
+
+    class _Log:
+        nodes = [fast, golden]
+        ingest_cost = storage_cost = 0.0
+        rounds = []
+        budget_met = True
+
+    return DerivedConfig(plans=plans, nodes=[fast, golden],
+                         coalesce_log=_Log())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default="/tmp/repro_vserve")
+    ap.add_argument("--stream", default="jackson")
+    ap.add_argument("--segments", type=int, default=4)
+    ap.add_argument("--queries", type=int, default=16)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--max-inflight", type=int, default=16)
+    ap.add_argument("--cache-mb", type=int, default=256)
+    ap.add_argument("--prefetch-depth", type=int, default=1)
+    ap.add_argument("--no-collapse", action="store_true",
+                    help="disable in-flight duplicate-query collapsing")
+    ap.add_argument("--baseline", action="store_true",
+                    help="also time the same workload as sequential "
+                         "run_query calls")
+    args = ap.parse_args(argv)
+
+    cfg = demo_config()
+    shutil.rmtree(args.root, ignore_errors=True)
+    spec = IngestSpec()
+    vs = VideoStore(os.path.join(args.root, "store"), spec)
+    vs.set_formats(cfg.storage_formats())
+    t0 = time.perf_counter()
+    for seg in range(args.segments):
+        frames, _ = generate_segment(args.stream, seg, spec)
+        vs.ingest_segment(args.stream, seg, frames)
+    print(f"ingested {args.segments} segments x {len(vs.formats)} formats "
+          f"in {time.perf_counter() - t0:.1f}s "
+          f"({vs.storage_bytes(args.stream)} bytes)")
+
+    segs = list(range(args.segments))
+    mix = [("A", a) for a in (0.8, 0.9)] + [("B", a) for a in (0.8, 0.9)]
+    subs = [(mix[i % len(mix)][0], args.stream, segs, mix[i % len(mix)][1])
+            for i in range(args.queries)]
+
+    # one warm pass per unique query so jit compile time isn't billed below
+    for q, stream, sg, acc in {s[:2] + (tuple(s[2]), s[3]) for s in subs}:
+        run_query(vs, cfg, q, stream, list(sg), acc)
+
+    seq_wall = None
+    if args.baseline:
+        t0 = time.perf_counter()
+        for q, stream, sg, acc in subs:
+            run_query(vs, cfg, q, stream, sg, acc)
+        seq_wall = time.perf_counter() - t0
+
+    with VStoreServer(vs, cfg, workers=args.workers,
+                      max_inflight=args.max_inflight,
+                      cache_bytes=args.cache_mb << 20,
+                      prefetch_depth=args.prefetch_depth,
+                      collapse=not args.no_collapse) as srv:
+        t0 = time.perf_counter()
+        results = srv.run_batch(subs)
+        wall = time.perf_counter() - t0
+        stats = srv.stats()
+
+    for (q, _s, sg, acc), res in zip(subs, results):
+        print(f"  query {q} acc={acc}: {len(res.items)} items, "
+              f"wall {res.wall_s * 1e3:.0f}ms, "
+              f"{res.measured_speed:.0f}x realtime")
+    vsec = sum(r.video_seconds for r in results)
+    print(f"served {len(subs)} queries ({vsec:.0f} video-seconds) in "
+          f"{wall:.2f}s -> aggregate {vsec / wall:.0f}x realtime")
+    if seq_wall is not None:
+        print(f"sequential baseline: {seq_wall:.2f}s "
+              f"({vsec / seq_wall:.0f}x) -> speedup {seq_wall / wall:.2f}x")
+    c = stats["cache"]
+    print(f"cache: {c['hits']} hits + {c['richer_hits']} richer / "
+          f"{c['lookups']} lookups (hit rate {c['hit_rate']:.2f}), "
+          f"{stats['cache_bytes']} bytes resident, "
+          f"{c['evictions']} evictions")
+    print(f"planner: {stats['decodes']} decodes, "
+          f"{stats['coalesced_cfs']} CFs coalesced, "
+          f"{stats['collapsed']} queries collapsed")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -136,7 +136,10 @@ def moe_ep(params, x, cfg, capacity_factor: float = 1.25):
     whose (E, C_global, d) buffer the SPMD partitioner reshards across the
     data axis (the dominant collective term of the arctic-480b baseline).
     """
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:  # moved in newer jax; experimental home in 0.4.x
+        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     from ..distributed import context
@@ -187,13 +190,17 @@ def moe_ep(params, x, cfg, capacity_factor: float = 1.25):
         y = y.reshape(t, m.top_k, d).sum(axis=1).reshape(b, s, d)
         return jax.lax.psum(y, "model")
 
+    import inspect
+    no_check = {"check_vma": False} \
+        if "check_vma" in inspect.signature(shard_map).parameters \
+        else {"check_rep": False}  # pre-rename jax spells it check_rep
     fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(batch_axes, None, None), P(None, None),
                   P("model", None, None), P("model", None, None),
                   P("model", None, None)),
         out_specs=P(batch_axes, None, None),
-        check_vma=False)
+        **no_check)
     y = fn(x, params["router"], params["wi"], params["wg"], params["wo"])
     return y + _shared(params, x, cfg)
 

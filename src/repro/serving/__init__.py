@@ -1,0 +1,23 @@
+"""Concurrent query serving: the layer between storage and analytics.
+
+cache -> planner -> executor -> server (see README.md):
+
+* ``DecodedSegmentCache`` — byte-budgeted LRU of decoded segments with
+  bit-exact richer-CF reuse;
+* ``RetrievalPlanner`` — dedupes and coalesces the in-flight queries'
+  fetches into single-flight union decodes;
+* ``run_pipelined`` — cascade execution overlapping retrieval of segment
+  k+1 with consumption of segment k;
+* ``VStoreServer`` — worker pool + admission control + stats front end.
+"""
+
+from .cache import CacheStats, DecodedSegmentCache
+from .executor import run_pipelined
+from .planner import DecodeTask, Request, RetrievalPlanner
+from .server import AdmissionError, QueryTicket, VStoreServer
+
+__all__ = [
+    "AdmissionError", "CacheStats", "DecodedSegmentCache", "DecodeTask",
+    "QueryTicket", "Request", "RetrievalPlanner", "VStoreServer",
+    "run_pipelined",
+]

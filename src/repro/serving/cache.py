@@ -1,0 +1,159 @@
+"""Byte-budgeted LRU cache of decoded segments, shared across queries.
+
+Entries are keyed ``(stream, seg, sf_id, cf)`` and hold the *decoded* frames
+on the storage fidelity's pixel grid, restricted to the temporal indices the
+CF's sampling wanted (``want``).  Keeping frames pre-conversion is what makes
+reuse bit-exact: serving any request from a cached entry runs the identical
+``spatial_convert`` a direct ``VideoStore.retrieve`` would run on a fresh
+decode, so cached and uncached results cannot diverge.
+
+Reuse rule (richer_eq): a request ``(stream, seg, sf_id, cf)`` is served by a
+cached entry with the same ``(stream, seg, sf_id)`` when the entry's CF is
+richer-than-or-equal (``FidelityOption.richer_eq``) *and* the entry's decoded
+``want`` indices cover the request's — a richer CF decoded more frames, so
+the poorer CF selects a subset and converts, instead of decoding again.  The
+temporal-coverage check is explicit because the sampling ladder's index sets
+do not always nest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+
+import numpy as np
+
+from ..core.knobs import FidelityOption
+
+Key = tuple  # (stream, seg, sf_id, FidelityOption)
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    stream: str
+    seg: int
+    sf_id: str
+    cf: FidelityOption
+    want: np.ndarray       # sorted unique stored-frame indices decoded
+    frames: np.ndarray     # (len(want), h_sf, w_sf) uint8, storage grid
+    nbytes: int
+
+    def covers(self, want: np.ndarray) -> np.ndarray | None:
+        """Row indices into ``self.frames`` realizing ``want`` (which may
+        repeat indices), or None if not fully covered."""
+        rows = np.searchsorted(self.want, want)
+        rows = np.clip(rows, 0, len(self.want) - 1)
+        if not np.array_equal(self.want[rows], np.asarray(want)):
+            return None
+        return rows
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0            # exact-key hits
+    richer_hits: int = 0     # served via a richer cached CF
+    misses: int = 0
+    evictions: int = 0
+    oversize: int = 0        # decodes too large to cache under the budget
+    inserted_bytes: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.richer_hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return (self.hits + self.richer_hits) / max(1, self.lookups)
+
+    def snapshot(self) -> dict:
+        return dataclasses.asdict(self) | {"lookups": self.lookups,
+                                           "hit_rate": self.hit_rate}
+
+
+class DecodedSegmentCache:
+    """Thread-safe LRU over decoded segments with a hard byte budget."""
+
+    def __init__(self, max_bytes: int = 256 << 20):
+        self.max_bytes = int(max_bytes)
+        self._lock = threading.Lock()
+        self._entries: OrderedDict[Key, CacheEntry] = OrderedDict()
+        self._by_segment: dict[tuple, list[Key]] = {}
+        self._bytes = 0
+        self.stats = CacheStats()
+
+    @property
+    def bytes(self) -> int:
+        return self._bytes
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # -- lookup --------------------------------------------------------------
+    def lookup(self, stream: str, seg: int, sf_id: str, cf: FidelityOption,
+               want: np.ndarray) -> tuple[np.ndarray, str] | None:
+        """Storage-grid frames for ``want`` and the hit kind ('hit' or
+        'richer'), or None on miss.  Returned arrays are copies of cache
+        rows; callers convert them to the consumption fidelity."""
+        skey = (stream, seg, sf_id)
+        with self._lock:
+            exact = self._entries.get((stream, seg, sf_id, cf))
+            if exact is not None:
+                rows = exact.covers(want)
+                if rows is not None:
+                    self._entries.move_to_end((stream, seg, sf_id, cf))
+                    self.stats.hits += 1
+                    return exact.frames[rows], "hit"
+            for key in self._by_segment.get(skey, ()):
+                entry = self._entries[key]
+                if entry is exact or not entry.cf.richer_eq(cf):
+                    continue
+                rows = entry.covers(want)
+                if rows is not None:
+                    self._entries.move_to_end(key)
+                    self.stats.richer_hits += 1
+                    return entry.frames[rows], "richer"
+            self.stats.misses += 1
+            return None
+
+    # -- insert / evict ------------------------------------------------------
+    def insert(self, stream: str, seg: int, sf_id: str, cf: FidelityOption,
+               want: np.ndarray, frames: np.ndarray) -> bool:
+        """Cache a decode.  ``want`` must be sorted unique and match
+        ``frames`` row-for-row.  Returns False when the decode alone
+        overflows the byte budget (not cached)."""
+        frames = np.ascontiguousarray(frames)
+        entry = CacheEntry(stream, seg, sf_id, cf, np.asarray(want).copy(),
+                           frames, frames.nbytes)
+        key = (stream, seg, sf_id, cf)
+        with self._lock:
+            if entry.nbytes > self.max_bytes:
+                self.stats.oversize += 1
+                return False
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self._drop_index(old)
+                self._bytes -= old.nbytes
+            self._entries[key] = entry
+            self._by_segment.setdefault((stream, seg, sf_id), []).append(key)
+            self._bytes += entry.nbytes
+            self.stats.inserted_bytes += entry.nbytes
+            while self._bytes > self.max_bytes:
+                _, victim = self._entries.popitem(last=False)
+                self._drop_index(victim)
+                self._bytes -= victim.nbytes
+                self.stats.evictions += 1
+            return True
+
+    def _drop_index(self, entry: CacheEntry):
+        skey = (entry.stream, entry.seg, entry.sf_id)
+        keys = self._by_segment.get(skey, [])
+        keys.remove((entry.stream, entry.seg, entry.sf_id, entry.cf))
+        if not keys:
+            self._by_segment.pop(skey, None)
+
+    def clear(self):
+        with self._lock:
+            self._entries.clear()
+            self._by_segment.clear()
+            self._bytes = 0

@@ -1,0 +1,147 @@
+"""Shared-retrieval planner: one decode serves every in-flight consumer.
+
+Two dedup mechanisms sit between queries and the store:
+
+* **Interest coalescing** — admitted queries register the ``(stream, seg,
+  sf_id) -> {cf}`` fetches their cascade stages may issue.  When a decode
+  actually happens (cache miss), the planner decodes the *union* of the
+  temporal indices wanted by every interested CF and caches the result under
+  their knob-wise join (richer_eq of each member), so one decode satisfies
+  all overlapping CF requests via the cache's richer-reuse rule.
+
+* **Single-flight** — concurrent misses on the same ``(stream, seg, sf_id)``
+  elect one leader to decode; followers wait and re-check the cache instead
+  of issuing duplicate decodes.
+
+``fetch`` has ``VideoStore.retrieve``'s signature and is what the serving
+executor (and ``VideoStore.attach_retriever``) routes retrieval through.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+from collections import Counter
+
+import numpy as np
+
+from ..core.knobs import FidelityOption
+from .cache import DecodedSegmentCache
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One stage-level fetch a query will issue."""
+    stream: str
+    seg: int
+    sf_id: str
+    cf: FidelityOption
+
+
+@dataclasses.dataclass
+class DecodeTask:
+    """A planned decode: the union of all CFs interested in one stored
+    segment (what ``plan`` emits and a miss executes)."""
+    stream: str
+    seg: int
+    sf_id: str
+    cfs: list[FidelityOption]
+    want: np.ndarray           # sorted unique union of the CFs' indices
+    cf_join: FidelityOption    # knob-wise lub; richer_eq every member
+
+
+class RetrievalPlanner:
+    def __init__(self, store, cache: DecodedSegmentCache):
+        self.store = store
+        self.cache = cache
+        self._lock = threading.Lock()
+        self._interest: dict[tuple, Counter] = {}
+        self._inflight: dict[tuple, threading.Event] = {}
+        self.decodes = 0          # actual store decodes issued
+        self.coalesced_cfs = 0    # extra CFs folded into union decodes
+
+    # -- query lifecycle -----------------------------------------------------
+    def register_query(self, requests: list[Request]):
+        """Declare the fetches an admitted query may issue (all stages x
+        segments; later stages may be filtered away, which only leaves the
+        interest unused)."""
+        with self._lock:
+            for r in requests:
+                key = (r.stream, r.seg, r.sf_id)
+                self._interest.setdefault(key, Counter())[r.cf] += 1
+
+    def release_query(self, requests: list[Request]):
+        with self._lock:
+            for r in requests:
+                key = (r.stream, r.seg, r.sf_id)
+                c = self._interest.get(key)
+                if c is None:
+                    continue
+                c[r.cf] -= 1
+                if c[r.cf] <= 0:
+                    del c[r.cf]
+                if not c:
+                    del self._interest[key]
+
+    # -- planning ------------------------------------------------------------
+    def plan(self, requests: list[Request]) -> list[DecodeTask]:
+        """Coalesce a batch of fetches into per-segment decode tasks: dedupe
+        identical ``(stream, seg, sf_id)`` fetches, union the CFs' temporal
+        wants so each stored segment is decoded at most once."""
+        groups: dict[tuple, list[FidelityOption]] = {}
+        for r in requests:
+            cfs = groups.setdefault((r.stream, r.seg, r.sf_id), [])
+            if r.cf not in cfs:
+                cfs.append(r.cf)
+        return [self._task(*key, cfs) for key, cfs in groups.items()]
+
+    def _task(self, stream: str, seg: int, sf_id: str,
+              cfs: list[FidelityOption]) -> DecodeTask:
+        wants = [self.store.want_indices(sf_id, cf) for cf in cfs]
+        union = np.unique(np.concatenate(wants))
+        return DecodeTask(stream, seg, sf_id, cfs, union,
+                          functools.reduce(lambda a, b: a.join(b), cfs))
+
+    # -- the cache-aware retrieve hook ---------------------------------------
+    def fetch(self, stream: str, seg: int, sf_id: str,
+              cf: FidelityOption) -> tuple[np.ndarray, dict]:
+        """Drop-in for ``VideoStore.retrieve``: cache lookup (exact or
+        richer-CF reuse), else a single-flight union decode."""
+        want = self.store.want_indices(sf_id, cf)
+        gkey = (stream, seg, sf_id)
+        while True:
+            found = self.cache.lookup(stream, seg, sf_id, cf, want)
+            if found is not None:
+                frames, kind = found
+                out = self.store.convert(frames, sf_id, cf)
+                return out, {"decode_s": 0.0, "convert_s": 0.0, "bytes": 0,
+                             "chunks": 0, "frames": len(want), "cache": kind}
+            with self._lock:
+                ev = self._inflight.get(gkey)
+                if ev is None:
+                    self._inflight[gkey] = threading.Event()
+            if ev is not None:
+                ev.wait()
+                continue  # leader finished; re-check the cache
+            try:
+                return self._decode_miss(stream, seg, sf_id, cf, want)
+            finally:
+                with self._lock:
+                    self._inflight.pop(gkey).set()
+
+    def _decode_miss(self, stream, seg, sf_id, cf, want):
+        with self._lock:
+            interested = list(self._interest.get((stream, seg, sf_id), ()))
+        sf = self.store.formats[sf_id]
+        cfs = [cf] + [c for c in interested
+                      if c != cf and sf.fidelity.richer_eq(c)]
+        task = self._task(stream, seg, sf_id, cfs)
+        frames, cost = self.store.decode_for(stream, seg, sf_id, task.want)
+        self.decodes += 1
+        self.coalesced_cfs += len(cfs) - 1
+        self.cache.insert(stream, seg, sf_id, task.cf_join, task.want, frames)
+        rows = np.searchsorted(task.want, want)
+        out = self.store.convert(frames[rows], sf_id, cf)
+        cost["cache"] = "miss"
+        return out, cost

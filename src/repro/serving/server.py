@@ -1,0 +1,216 @@
+"""VStoreServer: multi-tenant front end over one VideoStore.
+
+Wires the serving stack together — decoded-segment cache, shared-retrieval
+planner, pipelined cascade executor — behind a worker pool with admission
+control:
+
+* ``max_inflight`` — queries admitted beyond the cap are rejected with
+  ``AdmissionError`` (or block for a slot with ``block=True``);
+* ``cache_bytes`` — the decoded-segment cache's hard byte budget.
+
+On admission a query's stage fetches are registered with the planner, so
+concurrent queries over shared segments coalesce into single decodes; on
+completion the interest is released.  Identical queries that are in flight
+at the same time *collapse* onto one execution (single-flight at the query
+level — results are pure functions of store content, so concurrent
+duplicates share the leader's future instead of redoing the cascade).
+``attach=True`` installs the planner as the store's retrieve hook, so even
+plain ``run_query`` callers against the same store share the cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+
+from ..analytics.query import QueryResult, stage_specs
+from .cache import DecodedSegmentCache
+from .executor import run_pipelined
+from .planner import Request, RetrievalPlanner
+
+
+class AdmissionError(RuntimeError):
+    """Raised when the server is at max in-flight queries."""
+
+
+@dataclasses.dataclass
+class QueryTicket:
+    qid: int
+    query: str
+    stream: str
+    segments: list[int]
+    accuracy: float
+    future: Future
+    submitted_at: float
+
+    def result(self, timeout: float | None = None) -> QueryResult:
+        return self.future.result(timeout)
+
+
+class VStoreServer:
+    def __init__(self, store, config, *, workers: int = 4,
+                 max_inflight: int = 16, cache_bytes: int = 256 << 20,
+                 prefetch_depth: int = 1, attach: bool = False,
+                 collapse: bool = True):
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self.store = store
+        self.config = config
+        self.cache = DecodedSegmentCache(cache_bytes)
+        self.planner = RetrievalPlanner(store, self.cache)
+        self.max_inflight = max_inflight
+        self.prefetch_depth = prefetch_depth
+        self._pool = ThreadPoolExecutor(workers,
+                                        thread_name_prefix="vstore-query")
+        self._mu = threading.Lock()
+        self._slot_freed = threading.Condition(self._mu)
+        self._inflight = 0
+        self._next_qid = 0
+        self._collapse = collapse
+        self._live: dict[tuple, Future] = {}  # in-flight query key -> future
+        self._attached = attach
+        if attach:
+            store.attach_retriever(self.planner.fetch)
+        # aggregate stats
+        self.completed = 0
+        self.rejected = 0
+        self.failed = 0
+        self.collapsed = 0
+        self.video_seconds = 0.0
+        self.query_wall_s = 0.0
+        self._t_up = time.perf_counter()
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, query: str, stream: str, segments: list[int],
+               accuracy: float, block: bool = False) -> QueryTicket:
+        """Admit one cascade query; returns a ticket whose ``result()``
+        yields the QueryResult.  Rejects with AdmissionError at capacity
+        unless ``block`` (then waits for a slot).  An identical query
+        already in flight is collapsed: the ticket shares its execution
+        (and consumes no worker slot)."""
+        live_key = (query, stream, tuple(segments), accuracy)
+        # resolved before taking an admission slot so a bad query name
+        # raises without leaking in-flight accounting
+        requests = [Request(stream, seg, sf_id, cf)
+                    for _op_name, _op, cf, sf_id in
+                    stage_specs(self.config, query, accuracy)
+                    for seg in segments]
+        with self._mu:
+            if self._collapse and live_key in self._live:
+                self.collapsed += 1
+                qid = self._next_qid
+                self._next_qid += 1
+                shared = self._live[live_key]
+            else:
+                shared = None
+        if shared is not None:
+            # outside _mu: a done future runs the callback synchronously in
+            # this thread, and _account_collapsed takes _mu itself
+            shared.add_done_callback(self._account_collapsed)
+            return QueryTicket(qid, query, stream, list(segments),
+                               accuracy, shared, time.perf_counter())
+        with self._mu:
+            while self._inflight >= self.max_inflight:
+                if not block:
+                    self.rejected += 1
+                    raise AdmissionError(
+                        f"{self._inflight} queries in flight "
+                        f"(max {self.max_inflight})")
+                self._slot_freed.wait()
+            self._inflight += 1
+            qid = self._next_qid
+            self._next_qid += 1
+            fut: Future = Future()
+            if self._collapse:
+                self._live[live_key] = fut  # registered before dispatch, so
+                # a duplicate submitted at any point attaches to this run
+
+        self.planner.register_query(requests)
+        try:
+            self._pool.submit(self._run, fut, query, stream, segments,
+                              accuracy, requests, live_key)
+        except BaseException as e:  # pool shut down: roll back the slot
+            self.planner.release_query(requests)
+            with self._mu:
+                self._live.pop(live_key, None)
+                self._inflight -= 1
+                self._slot_freed.notify()
+            fut.set_exception(e)  # resolve any duplicate already attached
+            raise
+        return QueryTicket(qid, query, stream, list(segments), accuracy, fut,
+                           time.perf_counter())
+
+    def _account_collapsed(self, fut: Future):
+        if fut.exception() is not None:
+            return
+        res = fut.result()
+        with self._mu:
+            self.completed += 1
+            self.video_seconds += res.video_seconds
+
+    def _run(self, fut, query, stream, segments, accuracy, requests,
+             live_key) -> None:
+        try:
+            res = run_pipelined(self.store, self.config, query, stream,
+                                segments, accuracy,
+                                retriever=self.planner.fetch,
+                                prefetch_depth=self.prefetch_depth)
+            with self._mu:
+                self.completed += 1
+                self.video_seconds += res.video_seconds
+                self.query_wall_s += res.wall_s
+            fut.set_result(res)
+        except BaseException as e:
+            with self._mu:
+                self.failed += 1
+            fut.set_exception(e)
+        finally:
+            self.planner.release_query(requests)
+            with self._mu:
+                self._live.pop(live_key, None)
+                self._inflight -= 1
+                self._slot_freed.notify()
+
+    def run_batch(self, submissions: list[tuple], block: bool = True
+                  ) -> list[QueryResult]:
+        """Submit ``(query, stream, segments, accuracy)`` tuples and wait
+        for all; returns results in submission order."""
+        tickets = [self.submit(*s, block=block) for s in submissions]
+        return [t.result() for t in tickets]
+
+    # -- stats / lifecycle ---------------------------------------------------
+    def stats(self) -> dict:
+        with self._mu:
+            uptime = time.perf_counter() - self._t_up
+            return {
+                "completed": self.completed,
+                "rejected": self.rejected,
+                "failed": self.failed,
+                "collapsed": self.collapsed,
+                "inflight": self._inflight,
+                "video_seconds": self.video_seconds,
+                "query_wall_s": self.query_wall_s,
+                # served video time per wall second since start — the
+                # aggregate x-realtime of everything this server ran
+                "aggregate_x_realtime": self.video_seconds / max(uptime, 1e-9),
+                "uptime_s": uptime,
+                "cache": self.cache.stats.snapshot(),
+                "cache_bytes": self.cache.bytes,
+                "decodes": self.planner.decodes,
+                "coalesced_cfs": self.planner.coalesced_cfs,
+            }
+
+    def close(self):
+        if self._attached:
+            self.store.attach_retriever(None)
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

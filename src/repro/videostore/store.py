@@ -24,6 +24,7 @@ class SegmentStore:
         self._index: dict[str, tuple[int, int, int]] = {}
         self._shard_id = 0
         self._shard_size = 0
+        self._gen = 0  # bumped by compact(); lets readers detect shard rewrites
         self._load()
 
     # -- persistence --------------------------------------------------------
@@ -67,26 +68,49 @@ class SegmentStore:
             self._index[key] = (sid, offset, len(value))
 
     def get(self, key: str) -> bytes:
-        sid, offset, length = self._index[key]
-        with open(self._shard_path(sid), "rb") as f:
-            f.seek(offset)
-            return f.read(length)
+        # Optimistic read: snapshot the index entry under the lock, read the
+        # shard without it (gets stay concurrent), then verify no compact()
+        # rewrote the shard layout mid-read.  compact() holds the lock for
+        # its whole rewrite, so an unchanged generation proves the bytes
+        # came from the layout the entry described.
+        while True:
+            with self._lock:
+                gen = self._gen
+                sid, offset, length = self._index[key]
+                path = self._shard_path(sid)
+            try:
+                with open(path, "rb") as f:
+                    f.seek(offset)
+                    blob = f.read(length)
+            except FileNotFoundError:
+                with self._lock:
+                    if self._gen != gen:
+                        continue  # compacted away mid-read; retry new index
+                raise  # shard genuinely missing (corrupt/partial store)
+            with self._lock:
+                if self._gen == gen:
+                    return blob
 
     def delete(self, key: str) -> bool:
         with self._lock:
             return self._index.pop(key, None) is not None
 
     def __contains__(self, key: str) -> bool:
-        return key in self._index
+        with self._lock:
+            return key in self._index
 
     def keys(self, prefix: str = "") -> list[str]:
-        return sorted(k for k in self._index if k.startswith(prefix))
+        with self._lock:
+            return sorted(k for k in self._index if k.startswith(prefix))
 
     def size_of(self, key: str) -> int:
-        return self._index[key][2]
+        with self._lock:
+            return self._index[key][2]
 
     def total_bytes(self, prefix: str = "") -> int:
-        return sum(self._index[k][2] for k in self._index if k.startswith(prefix))
+        with self._lock:
+            return sum(v[2] for k, v in self._index.items()
+                       if k.startswith(prefix))
 
     def compact(self):
         """Rewrite shards dropping deleted blobs (reclaims space)."""
@@ -117,4 +141,5 @@ class SegmentStore:
                 os.replace(p, self._shard_path(i))
             self._index = new_index
             self._shard_id, self._shard_size = sid, size
+            self._gen += 1
         self.flush()

@@ -56,6 +56,7 @@ class VideoStore:
         self.formats: dict[str, StorageFormat] = {}
         self.ingest_stats: dict[str, IngestStats] = {}
         self._meta_path = os.path.join(root, "meta.json")
+        self._retriever = None  # serving-layer hook (see attach_retriever)
         self._load_meta()
 
     # -- configuration -------------------------------------------------------
@@ -117,31 +118,67 @@ class VideoStore:
             stats.add(dt, len(blob))
 
     # -- retrieval -------------------------------------------------------------
+    def attach_retriever(self, retriever) -> None:
+        """Install a cache-aware retrieval hook (repro.serving): ``retrieve``
+        then routes through it, so every consumer of this store — including
+        plain ``run_query`` — shares the serving layer's decoded-segment
+        cache.  Pass ``None`` to restore direct decoding."""
+        self._retriever = retriever
+
     def retrieve(self, stream: str, seg: int, sf_id: str,
                  cf: FidelityOption) -> tuple[np.ndarray, dict]:
         """Decode a stored segment (chunk-skip under the consumer's sparser
         sampling) and convert to the consumption fidelity.  Returns
         (frames_u8, timing/cost dict)."""
+        if self._retriever is not None:
+            return self._retriever(stream, seg, sf_id, cf)
+        return self.retrieve_direct(stream, seg, sf_id, cf)
+
+    def retrieve_direct(self, stream: str, seg: int, sf_id: str,
+                        cf: FidelityOption) -> tuple[np.ndarray, dict]:
+        """The uncached decode path (bypasses any attached retriever)."""
+        want = self.want_indices(sf_id, cf)
+        frames, cost = self.decode_for(stream, seg, sf_id, want)
+        t0 = time.perf_counter()
+        out = self.convert(frames, sf_id, cf)
+        cost["convert_s"] = time.perf_counter() - t0
+        return out, cost
+
+    # serving-layer primitives: retrieval = want_indices -> decode_for ->
+    # convert.  The decoded-segment cache keeps decode_for outputs (frames on
+    # the storage fidelity's grid) so any CF a cached decode covers is served
+    # by the exact same convert() a direct retrieve would run — bit-exact
+    # reuse by construction.
+    def want_indices(self, sf_id: str, cf: FidelityOption) -> np.ndarray:
+        """Stored-frame indices realizing ``cf``'s sampling (R1-checked)."""
         sf = self.formats[sf_id]
         if not sf.fidelity.richer_eq(cf):
             raise ValueError(
                 f"R1 violated: SF {sf.fidelity.name()} poorer than CF {cf.name()}")
+        return T.temporal_indices(sf.fidelity, cf, self.spec)
+
+    def decode_for(self, stream: str, seg: int, sf_id: str,
+                   want: np.ndarray) -> tuple[np.ndarray, dict]:
+        """Fetch + chunk-skip-decode stored frames ``want`` at the storage
+        fidelity's own grid (no consumption conversion)."""
         blob = self.backend.get(_sf_key(sf_id, stream, seg))
-        want = T.temporal_indices(sf.fidelity, cf, self.spec)
         t0 = time.perf_counter()
-        frames = codec.decode_segment(blob, want)
+        frames = codec.decode_segment(blob, np.asarray(want))
         t_dec = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        out = np.asarray(T.spatial_convert(frames, sf.fidelity, cf, self.spec))
-        t_cvt = time.perf_counter() - t0
         info = codec.segment_info(blob)
         cost = {
-            "decode_s": t_dec, "convert_s": t_cvt, "bytes": len(blob),
+            "decode_s": t_dec, "convert_s": 0.0, "bytes": len(blob),
             "chunks": (codec.decoded_chunks(info["n"], info["k"], want)
                        if not info["raw"] else 0),
             "frames": len(want),
         }
-        return out, cost
+        return frames, cost
+
+    def convert(self, frames: np.ndarray, sf_id: str,
+                cf: FidelityOption) -> np.ndarray:
+        """Storage-grid frames -> consumption fidelity (crop + resize)."""
+        sf = self.formats[sf_id]
+        return np.asarray(T.spatial_convert(frames, sf.fidelity, cf, self.spec))
 
     def has_segment(self, stream: str, seg: int, sf_id: str) -> bool:
         return _sf_key(sf_id, stream, seg) in self.backend

@@ -4,8 +4,7 @@ adequate cell, and — combined with cost selection — matches exhaustive
 search exactly."""
 
 import numpy as np
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hyp_compat import given, settings, st
 
 from repro.core.boundary import boundary_search
 

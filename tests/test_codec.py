@@ -3,8 +3,7 @@ chunk-skip equivalence, fidelity conversion shapes."""
 
 import numpy as np
 import pytest
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hyp_compat import given, settings, st
 
 from repro.codec import (convert_fidelity, decode_segment, encode_raw,
                          encode_segment, segment_info)

@@ -5,8 +5,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hyp_compat import given, settings, st
 
 from repro.kernels.attention.attention import flash_attention
 from repro.kernels.attention.ops import gqa_attention

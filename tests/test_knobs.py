@@ -1,8 +1,7 @@
 """Knob-space properties: richer-than partial order, join = least upper
 bound, space sizes (paper Table 1)."""
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hyp_compat import given, settings, st
 
 from repro.core.knobs import (CROP_VALUES, QUALITY_VALUES, RESOLUTION_VALUES,
                               SAMPLING_VALUES, FidelityOption, IngestSpec,

@@ -35,6 +35,58 @@ def test_segment_store_compact(tmp_path):
     assert len(s.keys()) == 10
 
 
+def test_segment_store_concurrent_get_compact(tmp_path):
+    """Readers racing compact() must never observe bytes from a stale shard
+    layout (the index is rewritten while old shard files are replaced)."""
+    import threading
+
+    s = SegmentStore(str(tmp_path / "kv"))
+    expected = {f"k{i:03d}": bytes([i % 251]) * (3000 + 17 * i)
+                for i in range(40)}
+    for k, v in expected.items():
+        s.put(k, v)
+    live = sorted(expected)[10:]  # survive the deletes below
+    for k in sorted(expected)[:10]:
+        s.delete(k)
+
+    errors: list[str] = []
+    stop = threading.Event()
+
+    def reader():
+        rng = np.random.default_rng()
+        while not stop.is_set():
+            k = live[int(rng.integers(len(live)))]
+            got = s.get(k)
+            if got != expected[k]:
+                errors.append(f"{k}: {len(got)} bytes, wrong content")
+                return
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for _ in range(5):
+        s.compact()
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert len(s.keys()) == len(live)
+
+
+def test_segment_store_missing_shard_raises(tmp_path):
+    """A genuinely missing shard file (no compaction in flight) must raise,
+    not retry forever."""
+    import os
+    s = SegmentStore(str(tmp_path / "kv"))
+    s.put("a", b"xyz")
+    s.flush()
+    for name in os.listdir(s.root):
+        if name.startswith("shard-"):
+            os.remove(os.path.join(s.root, name))
+    with pytest.raises(FileNotFoundError):
+        s.get("a")
+
+
 @pytest.fixture
 def store(tmp_path):
     spec = IngestSpec()

@@ -1,0 +1,255 @@
+"""Serving layer: decoded-segment cache (hit-after-miss, byte-budget
+eviction, bit-exact richer-CF reuse), shared-retrieval planner (dedup +
+coalescing + single-flight), pipelined executor and VStoreServer
+(concurrent == sequential, admission control, request collapsing)."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analytics.query import run_query
+from repro.analytics.scene import generate_segment
+from repro.core.coalesce import SFNode
+from repro.core.configure import DerivedConfig
+from repro.core.consumption import Consumer, ConsumerPlan
+from repro.core.knobs import (GOLDEN_CODING, RAW, FidelityOption, IngestSpec,
+                              StorageFormat)
+from repro.serving import (AdmissionError, DecodedSegmentCache, Request,
+                           RetrievalPlanner, VStoreServer, run_pipelined)
+from repro.videostore import VideoStore
+
+CF_DIFF = FidelityOption("good", 1.0, 270, 1 / 2)
+CF_SNN = FidelityOption("good", 1.0, 360, 1 / 2)
+CF_NN = FidelityOption("best", 1.0, 720, 2 / 3)
+
+
+def _config(accuracies=(0.8,)):
+    plans = []
+    for acc in accuracies:
+        plans += [ConsumerPlan(Consumer("diff", acc), CF_DIFF, 0.85, 3000.0),
+                  ConsumerPlan(Consumer("snn", acc), CF_SNN, 0.86, 500.0),
+                  ConsumerPlan(Consumer("nn", acc), CF_NN, 0.82, 30.0)]
+    fast_plans = [p for p in plans if p.consumer.op in ("diff", "snn")]
+    nn_plans = [p for p in plans if p.consumer.op == "nn"]
+    fast = SFNode(CF_DIFF.join(CF_SNN), RAW, fast_plans)
+    golden = SFNode(FidelityOption(), GOLDEN_CODING, nn_plans, golden=True)
+
+    class _Log:
+        nodes = [fast, golden]
+        ingest_cost = storage_cost = 0.0
+        rounds = []
+        budget_met = True
+
+    return DerivedConfig(plans=plans, nodes=[fast, golden], coalesce_log=_Log())
+
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    root = tmp_path_factory.mktemp("vserve")
+    spec = IngestSpec()
+    cfg = _config(accuracies=(0.8, 0.9))
+    vs = VideoStore(str(root), spec)
+    vs.set_formats(cfg.storage_formats())
+    for seg in range(3):
+        frames, _ = generate_segment("jackson", seg, spec)
+        vs.ingest_segment("jackson", seg, frames)
+    return vs, cfg
+
+
+# ---------------------------------------------------------------------------
+# DecodedSegmentCache
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_after_miss(served):
+    vs, _cfg = served
+    cache = DecodedSegmentCache(64 << 20)
+    planner = RetrievalPlanner(vs, cache)
+    a1, c1 = planner.fetch("jackson", 0, "sf_g", CF_NN)
+    assert c1["cache"] == "miss" and cache.stats.misses == 1
+    a2, c2 = planner.fetch("jackson", 0, "sf_g", CF_NN)
+    assert c2["cache"] == "hit" and cache.stats.hits == 1
+    assert np.array_equal(a1, a2)
+    assert planner.decodes == 1  # second fetch decoded nothing
+
+
+def test_cache_eviction_under_byte_budget():
+    rng = np.random.default_rng(0)
+    frames = rng.integers(0, 255, (4, 16, 16), dtype=np.uint8)
+    budget = 3 * frames.nbytes
+    cache = DecodedSegmentCache(budget)
+    want = np.arange(4)
+    cf = FidelityOption()
+    for seg in range(5):
+        cache.insert("s", seg, "sf", cf, want, frames)
+        assert cache.bytes <= budget
+    assert cache.stats.evictions == 2 and len(cache) == 3
+    # LRU: oldest two segments evicted
+    assert cache.lookup("s", 0, "sf", cf, want) is None
+    assert cache.lookup("s", 1, "sf", cf, want) is None
+    assert cache.lookup("s", 4, "sf", cf, want) is not None
+    # an entry larger than the whole budget is refused, not cached
+    big = rng.integers(0, 255, (40, 64, 64), dtype=np.uint8)
+    assert not cache.insert("s", 9, "sf", cf, np.arange(40), big)
+    assert cache.stats.oversize == 1
+
+
+def test_richer_cf_reuse_bit_exact(served):
+    """A cached richer-CF decode serves a poorer CF bit-exactly: the cache
+    keeps storage-grid frames, so reuse runs the same spatial_convert a
+    direct retrieve would."""
+    vs, _cfg = served
+    cache = DecodedSegmentCache(64 << 20)
+    planner = RetrievalPlanner(vs, cache)
+    rich = FidelityOption("best", 1.0, 720, 1.0)
+    poor = FidelityOption("bad", 0.75, 180, 1 / 5)
+    assert rich.richer_eq(poor)
+    planner.fetch("jackson", 1, "sf_g", rich)
+    got, cost = planner.fetch("jackson", 1, "sf_g", poor)
+    assert cost["cache"] == "richer" and cache.stats.richer_hits == 1
+    direct, _ = vs.retrieve_direct("jackson", 1, "sf_g", poor)
+    assert got.dtype == direct.dtype and np.array_equal(got, direct)
+    assert planner.decodes == 1
+
+
+def test_attached_retriever_serves_plain_retrieve(served):
+    vs, cfg = served
+    with VStoreServer(vs, cfg, attach=True) as srv:
+        a, _ = vs.retrieve("jackson", 2, "sf_g", CF_NN)
+        b, c = vs.retrieve("jackson", 2, "sf_g", CF_NN)
+        assert c["cache"] == "hit" and np.array_equal(a, b)
+        assert srv.cache.stats.hits >= 1
+    # detached on close: direct path again
+    _, c = vs.retrieve("jackson", 2, "sf_g", CF_NN)
+    assert "cache" not in c
+
+
+# ---------------------------------------------------------------------------
+# RetrievalPlanner
+# ---------------------------------------------------------------------------
+
+def test_planner_dedup_and_coalesce(served):
+    vs, _cfg = served
+    planner = RetrievalPlanner(vs, DecodedSegmentCache(64 << 20))
+    reqs = [Request("jackson", 0, "sf_g", CF_NN),
+            Request("jackson", 0, "sf_g", CF_DIFF),
+            Request("jackson", 0, "sf_g", CF_NN),      # duplicate fetch
+            Request("jackson", 1, "sf_g", CF_DIFF)]
+    tasks = planner.plan(reqs)
+    assert len(tasks) == 2  # one decode per (stream, seg, sf_id)
+    t0 = next(t for t in tasks if t.seg == 0)
+    assert len(t0.cfs) == 2
+    assert t0.cf_join.richer_eq(CF_NN) and t0.cf_join.richer_eq(CF_DIFF)
+    for cf in t0.cfs:
+        want = vs.want_indices("sf_g", cf)
+        assert np.isin(want, t0.want).all()
+
+
+def test_planner_interest_coalesces_decode(served):
+    """With two CFs registered as in-flight interest, the first miss decodes
+    the union once and the other CF is then served from cache."""
+    vs, _cfg = served
+    cache = DecodedSegmentCache(64 << 20)
+    planner = RetrievalPlanner(vs, cache)
+    reqs = [Request("jackson", 0, "sf_g", CF_NN),
+            Request("jackson", 0, "sf_g", CF_DIFF)]
+    planner.register_query(reqs)
+    planner.fetch("jackson", 0, "sf_g", CF_NN)
+    _, cost = planner.fetch("jackson", 0, "sf_g", CF_DIFF)
+    assert planner.decodes == 1 and planner.coalesced_cfs == 1
+    assert cost["cache"] in ("hit", "richer")
+    planner.release_query(reqs)
+    assert not planner._interest
+
+
+# ---------------------------------------------------------------------------
+# Pipelined executor / server
+# ---------------------------------------------------------------------------
+
+def test_pipelined_matches_sequential(served):
+    vs, cfg = served
+    seq = run_query(vs, cfg, "A", "jackson", [0, 1, 2], 0.8)
+    pip = run_pipelined(vs, cfg, "A", "jackson", [0, 1, 2], 0.8)
+    assert pip.items == seq.items
+    assert [s.op for s in pip.stages] == [s.op for s in seq.stages]
+    assert [s.segments_scanned for s in pip.stages] == \
+        [s.segments_scanned for s in seq.stages]
+
+
+def test_concurrent_queries_match_sequential(served):
+    """N concurrent queries through the server return exactly the items of N
+    sequential run_query calls (mixed accuracies: collapsed and distinct)."""
+    vs, cfg = served
+    subs = [("A", "jackson", [0, 1, 2], acc) for acc in (0.8, 0.9)] * 4
+    expect = {(q, acc): run_query(vs, cfg, q, s, sg, acc).items
+              for q, s, sg, acc in subs}
+    with VStoreServer(vs, cfg, workers=4, max_inflight=8) as srv:
+        results = srv.run_batch(subs)
+        st = srv.stats()
+    assert all(r.items == expect[(q, acc)]
+               for r, (q, _s, _sg, acc) in zip(results, subs))
+    assert st["completed"] == len(subs) and st["failed"] == 0
+    assert st["cache"]["hit_rate"] > 0
+
+
+def test_admission_control(served, monkeypatch):
+    vs, cfg = served
+    release = threading.Event()
+    started = threading.Event()
+
+    def slow_run(*a, **k):
+        started.set()
+        release.wait(5)
+        return run_pipelined(*a, **k)
+
+    import repro.serving.server as server_mod
+    monkeypatch.setattr(server_mod, "run_pipelined", slow_run)
+    with VStoreServer(vs, cfg, workers=2, max_inflight=1,
+                      collapse=False) as srv:
+        t1 = srv.submit("A", "jackson", [0], 0.8)
+        assert started.wait(5)
+        with pytest.raises(AdmissionError):
+            srv.submit("A", "jackson", [1], 0.8)
+        release.set()
+        t1.result(10)
+        st = srv.stats()
+    assert st["rejected"] == 1 and st["completed"] == 1
+
+
+def test_bad_query_does_not_leak_slot(served):
+    vs, cfg = served
+    with VStoreServer(vs, cfg, workers=1, max_inflight=1) as srv:
+        with pytest.raises(KeyError):
+            srv.submit("Z", "jackson", [0], 0.8)  # unknown query name
+        # the admission slot must still be free
+        t = srv.submit("A", "jackson", [0], 0.8)
+        t.result(30)
+        assert srv.stats()["inflight"] == 0
+
+
+def test_request_collapsing(served, monkeypatch):
+    """Identical in-flight queries share one execution."""
+    vs, cfg = served
+    gate = threading.Event()
+    started = threading.Event()
+    calls = []
+
+    real = run_pipelined
+
+    def gated_run(*a, **k):
+        calls.append(a)
+        started.set()
+        gate.wait(5)
+        return real(*a, **k)
+
+    import repro.serving.server as server_mod
+    monkeypatch.setattr(server_mod, "run_pipelined", gated_run)
+    with VStoreServer(vs, cfg, workers=2, max_inflight=4) as srv:
+        t1 = srv.submit("A", "jackson", [0, 1], 0.8)
+        assert started.wait(5)
+        t2 = srv.submit("A", "jackson", [0, 1], 0.8)  # identical, in flight
+        gate.set()
+        r1, r2 = t1.result(10), t2.result(10)
+        st = srv.stats()
+    assert len(calls) == 1 and r1 is r2
+    assert st["collapsed"] == 1 and st["completed"] == 2
