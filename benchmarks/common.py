@@ -27,5 +27,12 @@ def config():
     return cfg
 
 
+# every row() call also lands here so benchmarks.run can dump the whole
+# suite as a JSON artifact (CI uploads BENCH_*.json for the perf trajectory)
+ROWS: list[dict] = []
+
+
 def row(name: str, us_per_call: float, derived: str):
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                 "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")

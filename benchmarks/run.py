@@ -1,11 +1,17 @@
 """Benchmark harness: one function per paper table/figure, plus the
 roofline summary from the dry-run artifacts.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` additionally
+writes every row (plus per-bench wall times and errors) as a JSON file —
+CI uploads these as ``BENCH_*.json`` artifacts so the perf trajectory
+accumulates per commit.  ``--only a,b`` selects a subset of benches by
+name (with or without the ``bench_`` prefix).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import time
 import traceback
@@ -30,8 +36,17 @@ def bench_roofline():
             f"roofline_frac={r['roofline_fraction']:.4f}")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    from . import common
     from . import paper_benches as B
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names to run (bench_ prefix "
+                         "optional); default: all")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write all rows as a JSON file")
+    args = ap.parse_args(argv)
+
     benches = [
         B.bench_fig3_coding,
         B.bench_fig4_knobs,
@@ -41,19 +56,38 @@ def main() -> None:
         B.bench_fig12_erosion,
         B.bench_table3_ingest_budget,
         B.bench_serve_concurrency,
+        B.bench_batched_consumption,
         B.bench_fig13_overhead,
         bench_roofline,
     ]
+    if args.only:
+        wanted = {w if w.startswith("bench_") else f"bench_{w}"
+                  for w in args.only.split(",") if w}
+        benches = [b for b in benches if b.__name__ in wanted]
+        missing = wanted - {b.__name__ for b in benches}
+        if missing:
+            raise SystemExit(f"unknown benches: {sorted(missing)}")
+
     print("name,us_per_call,derived")
     for bench in benches:
         t0 = time.perf_counter()
         try:
             bench()
         except Exception as e:  # noqa: BLE001
-            print(f"{bench.__name__},0.0,ERROR={type(e).__name__}:{e}")
+            msg = f"ERROR={type(e).__name__}:{e}"
+            common.ROWS.append({"name": bench.__name__, "us_per_call": 0.0,
+                                "derived": msg})
+            print(f"{bench.__name__},0.0,{msg}")
             traceback.print_exc()
-        print(f"_{bench.__name__}_wall,"
-              f"{(time.perf_counter() - t0) * 1e6:.0f},done")
+        wall_us = (time.perf_counter() - t0) * 1e6
+        common.ROWS.append({"name": f"_{bench.__name__}_wall",
+                            "us_per_call": round(wall_us), "derived": "done"})
+        print(f"_{bench.__name__}_wall,{wall_us:.0f},done")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": common.ROWS}, f, indent=1)
+        print(f"wrote {len(common.ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

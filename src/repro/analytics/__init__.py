@@ -1,5 +1,7 @@
 from .accuracy import f1_score
+from .batch import BatchedConsumer, ConsumeStats
 from .operators import OPERATORS, Operator
 from .scene import STREAMS, generate_segment
 
-__all__ = ["OPERATORS", "Operator", "f1_score", "generate_segment", "STREAMS"]
+__all__ = ["BatchedConsumer", "ConsumeStats", "OPERATORS", "Operator",
+           "f1_score", "generate_segment", "STREAMS"]

@@ -20,6 +20,7 @@ import time
 import numpy as np
 
 from ..core.knobs import FidelityOption, IngestSpec
+from .batch import BatchedConsumer
 from .operators import OPERATORS, _bucket, _positions
 
 QUERY_A = ("diff", "snn", "nn")            # car detection
@@ -37,6 +38,8 @@ class StageStats:
     frames: int = 0
     items: int = 0
     segments_scanned: int = 0
+    detect_calls: int = 0    # op.detect invocations (batching merges them)
+    batched_frames: int = 0  # rows fed via the batched path, padding incl.
 
 
 @dataclasses.dataclass
@@ -80,11 +83,13 @@ def _active_frame_mask(frames_pos: np.ndarray, active_buckets: set | None,
                        spec: IngestSpec) -> np.ndarray:
     if active_buckets is None:
         return np.ones(len(frames_pos), bool)
-    return np.array([_bucket(p, spec) in active_buckets for p in frames_pos])
+    return np.array([_bucket(p, spec) in active_buckets for p in frames_pos],
+                    dtype=bool)
 
 
 def run_query(store, config, query: str, stream: str, segments: list[int],
-              accuracy: float, retriever=None) -> QueryResult:
+              accuracy: float, retriever=None,
+              batch_segments: int = 0) -> QueryResult:
     """Execute a cascade at one target accuracy for every stage.
 
     ``config`` is a DerivedConfig (repro.core.configure): maps consumer
@@ -92,9 +97,20 @@ def run_query(store, config, query: str, stream: str, segments: list[int],
     substitutes the store's decode path — the serving layer passes its
     planner's cache-aware fetch here so all retrieval routes through the
     shared decoded-segment cache.
+
+    ``batch_segments`` > 0 switches consumption to the cross-segment
+    batched path (repro.analytics.batch): up to that many segments'
+    activated frames are fused into one ``op.detect`` call per static
+    shape bucket, and retrieval goes through ``store.retrieve_many`` so
+    ``want_indices``/``convert`` amortize across the group.  Item sets are
+    bit-exact with the per-segment path; ``StageStats.detect_calls`` shows
+    the dispatch saving.
     """
+    if batch_segments < 0:
+        raise ValueError(f"batch_segments must be >= 0, got {batch_segments}")
     spec = store.spec
     fetch = retriever or store.retrieve
+    consumer = BatchedConsumer(spec) if batch_segments else None
     stages: list[StageStats] = []
     active: dict[int, set] | None = None  # per segment active buckets
     items_all: set = set()
@@ -104,28 +120,62 @@ def run_query(store, config, query: str, stream: str, segments: list[int],
         st = StageStats(op=op_name, cf=cf, sf_id=sf_id)
         stage_items: set = set()
         next_active: dict[int, set] = {}
+        pos = _positions(cf, spec)
 
-        for seg in segments:
-            if active is not None and not active.get(seg):
-                continue  # early stage filtered this segment entirely
-            st.segments_scanned += 1
-            t0 = time.perf_counter()
-            frames, _cost = fetch(stream, seg, sf_id, cf)
-            st.retrieve_s += time.perf_counter() - t0
+        if consumer is not None:
+            segs = [s for s in segments
+                    if active is None or active.get(s)]
+            st.segments_scanned = len(segs)
+            for g0 in range(0, len(segs), batch_segments):
+                group = segs[g0:g0 + batch_segments]
+                t0 = time.perf_counter()
+                if retriever is None:
+                    frames_list, _cost = store.retrieve_many(
+                        stream, group, sf_id, cf)
+                else:
+                    frames_list = [retriever(stream, s, sf_id, cf)[0]
+                                   for s in group]
+                st.retrieve_s += time.perf_counter() - t0
+                pending = []
+                for seg, frames in zip(group, frames_list):
+                    mask = _active_frame_mask(pos, None if active is None
+                                              else active.get(seg, set()),
+                                              spec)
+                    if not mask.any():
+                        continue
+                    sel = np.nonzero(mask)[0]
+                    pending.append((seg, frames[sel], pos[sel]))
+                t0 = time.perf_counter()
+                per_seg, cstats = consumer.consume(op, cf, pending)
+                st.consume_s += time.perf_counter() - t0
+                st.detect_calls += cstats.detect_calls
+                st.frames += cstats.frames
+                st.batched_frames += cstats.batched_frames
+                for seg, items in per_seg.items():
+                    stage_items |= {(seg,) + it for it in items}
+                    next_active[seg] = {it[1] for it in items}
+        else:
+            for seg in segments:
+                if active is not None and not active.get(seg):
+                    continue  # early stage filtered this segment entirely
+                st.segments_scanned += 1
+                t0 = time.perf_counter()
+                frames, _cost = fetch(stream, seg, sf_id, cf)
+                st.retrieve_s += time.perf_counter() - t0
 
-            pos = _positions(cf, spec)
-            mask = _active_frame_mask(pos, None if active is None
-                                      else active.get(seg, set()), spec)
-            if not mask.any():
-                continue
-            t0 = time.perf_counter()
-            # operators are batch programs; feed only activated frames
-            sel = np.nonzero(mask)[0]
-            items = op.detect(frames[sel], cf, spec, positions=pos[sel])
-            st.consume_s += time.perf_counter() - t0
-            st.frames += int(mask.sum())
-            stage_items |= {(seg,) + it for it in items}
-            next_active[seg] = {it[1] for it in items}
+                mask = _active_frame_mask(pos, None if active is None
+                                          else active.get(seg, set()), spec)
+                if not mask.any():
+                    continue
+                t0 = time.perf_counter()
+                # operators are batch programs; feed only activated frames
+                sel = np.nonzero(mask)[0]
+                items = op.detect(frames[sel], cf, spec, positions=pos[sel])
+                st.consume_s += time.perf_counter() - t0
+                st.detect_calls += 1
+                st.frames += int(mask.sum())
+                stage_items |= {(seg,) + it for it in items}
+                next_active[seg] = {it[1] for it in items}
 
         st.items = len(stage_items)
         stages.append(st)

@@ -46,11 +46,22 @@ class DerivedConfig:
             (p.consumer.op, round(p.consumer.target, 4)): p for p in self.plans}
 
     # -- public API ---------------------------------------------------------
+    def _plan_for(self, op: str, accuracy: float) -> "ConsumerPlan":
+        plan = self._consumer_plan.get((op, round(accuracy, 4)))
+        if plan is None:
+            ops = sorted({o for o, _ in self._consumer_plan})
+            accs = sorted({a for _, a in self._consumer_plan}, reverse=True)
+            raise KeyError(
+                f"no consumer plan for op={op!r} at accuracy={accuracy}; "
+                f"this configuration profiled ops {ops} "
+                f"at accuracies {accs}")
+        return plan
+
     def consumption_format(self, op: str, accuracy: float) -> FidelityOption:
-        return self._consumer_plan[(op, round(accuracy, 4))].cf
+        return self._plan_for(op, accuracy).cf
 
     def consumer_speed(self, op: str, accuracy: float) -> float:
-        return self._consumer_plan[(op, round(accuracy, 4))].speed
+        return self._plan_for(op, accuracy).speed
 
     def subscription(self, cf: FidelityOption) -> str:
         return self._sf_ids[self._cf_to_node[cf]]

@@ -66,6 +66,9 @@ def main(argv=None):
     ap.add_argument("--max-inflight", type=int, default=16)
     ap.add_argument("--cache-mb", type=int, default=256)
     ap.add_argument("--prefetch-depth", type=int, default=1)
+    ap.add_argument("--batch-segments", type=int, default=4,
+                    help="segments fused per operator call in the pipelined "
+                         "executor (0 = one detect per segment)")
     ap.add_argument("--no-collapse", action="store_true",
                     help="disable in-flight duplicate-query collapsing")
     ap.add_argument("--baseline", action="store_true",
@@ -92,8 +95,13 @@ def main(argv=None):
             for i in range(args.queries)]
 
     # one warm pass per unique query so jit compile time isn't billed below
+    # (both the per-segment shapes the baseline uses and the static batch
+    # shapes the server's batched consumption uses)
     for q, stream, sg, acc in {s[:2] + (tuple(s[2]), s[3]) for s in subs}:
         run_query(vs, cfg, q, stream, list(sg), acc)
+        if args.batch_segments:
+            run_query(vs, cfg, q, stream, list(sg), acc,
+                      batch_segments=args.batch_segments)
 
     seq_wall = None
     if args.baseline:
@@ -106,6 +114,7 @@ def main(argv=None):
                       max_inflight=args.max_inflight,
                       cache_bytes=args.cache_mb << 20,
                       prefetch_depth=args.prefetch_depth,
+                      batch_segments=args.batch_segments,
                       collapse=not args.no_collapse) as srv:
         t0 = time.perf_counter()
         results = srv.run_batch(subs)
@@ -113,9 +122,12 @@ def main(argv=None):
         stats = srv.stats()
 
     for (q, _s, sg, acc), res in zip(subs, results):
+        calls = sum(s.detect_calls for s in res.stages)
+        frames = sum(s.frames for s in res.stages)
         print(f"  query {q} acc={acc}: {len(res.items)} items, "
               f"wall {res.wall_s * 1e3:.0f}ms, "
-              f"{res.measured_speed:.0f}x realtime")
+              f"{res.measured_speed:.0f}x realtime, "
+              f"{calls} detect calls / {frames} frames")
     vsec = sum(r.video_seconds for r in results)
     print(f"served {len(subs)} queries ({vsec:.0f} video-seconds) in "
           f"{wall:.2f}s -> aggregate {vsec / wall:.0f}x realtime")

@@ -29,6 +29,25 @@ from ..core.knobs import FidelityOption
 Key = tuple  # (stream, seg, sf_id, FidelityOption)
 
 
+def covering_rows(have: np.ndarray, want: np.ndarray) -> np.ndarray | None:
+    """Row indices into a decode's ``have`` (sorted unique) frame-index set
+    realizing ``want`` (which may repeat indices), or None if not fully
+    covered.  Shared by cache entries and the planner's in-flight slots so
+    the temporal-coverage rule lives in one place."""
+    want = np.asarray(want)
+    if want.size == 0:
+        return np.empty(0, np.int64)  # nothing requested: covered
+    if have.size == 0:
+        # an empty decode covers nothing; without this guard the clip
+        # below lands on -1 and "covers" via the last row
+        return None
+    rows = np.searchsorted(have, want)
+    rows = np.clip(rows, 0, len(have) - 1)
+    if not np.array_equal(have[rows], want):
+        return None
+    return rows
+
+
 @dataclasses.dataclass
 class CacheEntry:
     stream: str
@@ -40,13 +59,8 @@ class CacheEntry:
     nbytes: int
 
     def covers(self, want: np.ndarray) -> np.ndarray | None:
-        """Row indices into ``self.frames`` realizing ``want`` (which may
-        repeat indices), or None if not fully covered."""
-        rows = np.searchsorted(self.want, want)
-        rows = np.clip(rows, 0, len(self.want) - 1)
-        if not np.array_equal(self.want[rows], np.asarray(want)):
-            return None
-        return rows
+        """Row indices into ``self.frames`` realizing ``want``, or None."""
+        return covering_rows(self.want, want)
 
 
 @dataclasses.dataclass

@@ -1,12 +1,16 @@
-"""Pipelined cascade executor: overlap retrieval of segment k+1 with
-operator consumption of segment k.
+"""Pipelined cascade executor: overlap retrieval of segments k+1..k+d with
+one fused operator call over segments <= k.
 
 ``run_query`` (repro.analytics.query) times both paths per stage and
-*estimates* the perfectly-pipelined speed; this executor realizes it — a
-one-segment lookahead keeps the decoder busy while the operator consumes,
-so ``QueryResult.wall_s`` (and ``measured_speed``) reflects true overlap.
-The cascade semantics are shared with ``run_query`` via ``stage_specs``;
-item sets are identical by construction.
+*estimates* the perfectly-pipelined speed; this executor realizes it.  A
+prefetch window keeps the decoder busy while the operator consumes, and the
+window feeds a consumption *batch queue* instead of a strict per-segment
+loop: retrieved segments accumulate until ``batch_segments`` of them are
+ready, then the ``BatchedConsumer`` (repro.analytics.batch) runs one
+``op.detect`` per static shape bucket over all their activated frames while
+the pool decodes the next window.  The cascade semantics are shared with
+``run_query`` via ``stage_specs``; item sets are identical by construction
+(see batch.py for the bit-exactness argument).
 """
 
 from __future__ import annotations
@@ -16,23 +20,32 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from ..analytics.batch import BatchedConsumer
+from ..analytics.operators import _positions
 from ..analytics.query import (QueryResult, StageStats, _active_frame_mask,
                                stage_specs)
-from ..analytics.operators import _positions
 
 
 def run_pipelined(store, config, query: str, stream: str, segments: list[int],
                   accuracy: float, retriever=None,
-                  prefetch_depth: int = 1) -> QueryResult:
+                  prefetch_depth: int = 1,
+                  batch_segments: int = 4) -> QueryResult:
     """Execute a cascade with retrieval/consumption overlap.
 
     ``retriever`` has ``store.retrieve``'s signature (the serving layer
     passes the planner's cache-aware ``fetch``).  ``StageStats.retrieve_s``
     counts only time *blocked waiting* on retrieval — under good overlap it
-    approaches zero while consumption runs.
+    approaches zero while consumption runs.  ``batch_segments`` sets how
+    many retrieved segments a fused detect consumes at once; 0 keeps the
+    true per-segment path (exact shapes, no padding — the unbatched A/B
+    baseline), still pipelined.
     """
+    if batch_segments < 0:
+        raise ValueError(f"batch_segments must be >= 0, got {batch_segments}")
     spec = store.spec
     fetch = retriever or store.retrieve
+    consumer = BatchedConsumer(spec) if batch_segments else None
+    group = batch_segments
     stages: list[StageStats] = []
     active: dict[int, set] | None = None
     items_all: set = set()
@@ -47,9 +60,23 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
             segs = [s for s in segments
                     if active is None or active.get(s)]
             st.segments_scanned = len(segs)
+            pos = _positions(cf, spec)
+
+            def flush(pending):
+                nonlocal stage_items
+                t0 = time.perf_counter()
+                per_seg, cstats = consumer.consume(op, cf, pending)
+                st.consume_s += time.perf_counter() - t0
+                st.detect_calls += cstats.detect_calls
+                st.frames += cstats.frames
+                st.batched_frames += cstats.batched_frames
+                for seg, items in per_seg.items():
+                    stage_items |= {(seg,) + it for it in items}
+                    next_active[seg] = {it[1] for it in items}
 
             futures = {i: pool.submit(fetch, stream, segs[i], sf_id, cf)
                        for i in range(min(prefetch_depth, len(segs)))}
+            pending: list[tuple] = []  # retrieved, awaiting a fused detect
             for i, seg in enumerate(segs):
                 t0 = time.perf_counter()
                 frames, _cost = futures.pop(i).result()
@@ -59,18 +86,29 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
                     futures[nxt] = pool.submit(fetch, stream, segs[nxt],
                                                sf_id, cf)
 
-                pos = _positions(cf, spec)
                 mask = _active_frame_mask(pos, None if active is None
                                           else active.get(seg, set()), spec)
                 if not mask.any():
                     continue
-                t0 = time.perf_counter()
                 sel = np.nonzero(mask)[0]
-                items = op.detect(frames[sel], cf, spec, positions=pos[sel])
-                st.consume_s += time.perf_counter() - t0
-                st.frames += int(mask.sum())
-                stage_items |= {(seg,) + it for it in items}
-                next_active[seg] = {it[1] for it in items}
+                if consumer is None:  # per-segment detect, exact shapes
+                    t0 = time.perf_counter()
+                    items = op.detect(frames[sel], cf, spec,
+                                      positions=pos[sel])
+                    st.consume_s += time.perf_counter() - t0
+                    st.detect_calls += 1
+                    st.frames += int(mask.sum())
+                    stage_items |= {(seg,) + it for it in items}
+                    next_active[seg] = {it[1] for it in items}
+                    continue
+                pending.append((seg, frames[sel], pos[sel]))
+                if len(pending) >= group:
+                    # the fused detect runs here while the pool retrieves
+                    # segments i+1 .. i+prefetch_depth in the background
+                    flush(pending)
+                    pending = []
+            if pending:
+                flush(pending)
 
             st.items = len(stage_items)
             stages.append(st)

@@ -27,7 +27,7 @@ from collections import Counter
 import numpy as np
 
 from ..core.knobs import FidelityOption
-from .cache import DecodedSegmentCache
+from .cache import DecodedSegmentCache, covering_rows
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,15 +51,32 @@ class DecodeTask:
     cf_join: FidelityOption    # knob-wise lub; richer_eq every member
 
 
+class _InFlight:
+    """Single-flight slot for one in-progress union decode.  The leader
+    parks its decoded frames here before signalling, so followers are
+    served even when the decode was too large for the cache (``insert``
+    returned False) — without this hand-off, every waiting follower would
+    re-miss and become a serial leader, degrading N waiters to N
+    sequential decodes of the same segment."""
+    __slots__ = ("event", "cf", "want", "frames")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.cf: FidelityOption | None = None
+        self.want: np.ndarray | None = None
+        self.frames: np.ndarray | None = None
+
+
 class RetrievalPlanner:
     def __init__(self, store, cache: DecodedSegmentCache):
         self.store = store
         self.cache = cache
         self._lock = threading.Lock()
         self._interest: dict[tuple, Counter] = {}
-        self._inflight: dict[tuple, threading.Event] = {}
+        self._inflight: dict[tuple, _InFlight] = {}
         self.decodes = 0          # actual store decodes issued
         self.coalesced_cfs = 0    # extra CFs folded into union decodes
+        self.inflight_hits = 0    # follower fetches served from a leader
 
     # -- query lifecycle -----------------------------------------------------
     def register_query(self, requests: list[Request]):
@@ -118,19 +135,36 @@ class RetrievalPlanner:
                 return out, {"decode_s": 0.0, "convert_s": 0.0, "bytes": 0,
                              "chunks": 0, "frames": len(want), "cache": kind}
             with self._lock:
-                ev = self._inflight.get(gkey)
-                if ev is None:
-                    self._inflight[gkey] = threading.Event()
-            if ev is not None:
-                ev.wait()
-                continue  # leader finished; re-check the cache
+                slot = self._inflight.get(gkey)
+                if slot is None:
+                    self._inflight[gkey] = _InFlight()
+            if slot is not None:
+                slot.event.wait()
+                served = self._from_slot(slot, sf_id, cf, want)
+                if served is not None:
+                    return served
+                continue  # leader's decode can't serve this CF; retry
             try:
-                return self._decode_miss(stream, seg, sf_id, cf, want)
+                return self._decode_miss(stream, seg, sf_id, cf, want, gkey)
             finally:
                 with self._lock:
-                    self._inflight.pop(gkey).set()
+                    self._inflight.pop(gkey).event.set()
 
-    def _decode_miss(self, stream, seg, sf_id, cf, want):
+    def _from_slot(self, slot: _InFlight, sf_id, cf, want):
+        """Serve a follower from the leader's parked decode (the slot's CF
+        join must cover the follower's CF and temporal want)."""
+        if slot.frames is None or not slot.cf.richer_eq(cf):
+            return None
+        rows = covering_rows(slot.want, want)
+        if rows is None:
+            return None
+        with self._lock:
+            self.inflight_hits += 1
+        out = self.store.convert(slot.frames[rows], sf_id, cf)
+        return out, {"decode_s": 0.0, "convert_s": 0.0, "bytes": 0,
+                     "chunks": 0, "frames": len(want), "cache": "inflight"}
+
+    def _decode_miss(self, stream, seg, sf_id, cf, want, gkey):
         with self._lock:
             interested = list(self._interest.get((stream, seg, sf_id), ()))
         sf = self.store.formats[sf_id]
@@ -141,6 +175,10 @@ class RetrievalPlanner:
         self.decodes += 1
         self.coalesced_cfs += len(cfs) - 1
         self.cache.insert(stream, seg, sf_id, task.cf_join, task.want, frames)
+        with self._lock:
+            slot = self._inflight.get(gkey)
+        if slot is not None:  # park for followers before the event fires
+            slot.cf, slot.want, slot.frames = task.cf_join, task.want, frames
         rows = np.searchsorted(task.want, want)
         out = self.store.convert(frames[rows], sf_id, cf)
         cost["cache"] = "miss"

@@ -52,8 +52,8 @@ class QueryTicket:
 class VStoreServer:
     def __init__(self, store, config, *, workers: int = 4,
                  max_inflight: int = 16, cache_bytes: int = 256 << 20,
-                 prefetch_depth: int = 1, attach: bool = False,
-                 collapse: bool = True):
+                 prefetch_depth: int = 1, batch_segments: int = 4,
+                 attach: bool = False, collapse: bool = True):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         if workers < 1:
@@ -64,6 +64,7 @@ class VStoreServer:
         self.planner = RetrievalPlanner(store, self.cache)
         self.max_inflight = max_inflight
         self.prefetch_depth = prefetch_depth
+        self.batch_segments = batch_segments
         self._pool = ThreadPoolExecutor(workers,
                                         thread_name_prefix="vstore-query")
         self._mu = threading.Lock()
@@ -158,7 +159,8 @@ class VStoreServer:
             res = run_pipelined(self.store, self.config, query, stream,
                                 segments, accuracy,
                                 retriever=self.planner.fetch,
-                                prefetch_depth=self.prefetch_depth)
+                                prefetch_depth=self.prefetch_depth,
+                                batch_segments=self.batch_segments)
             with self._mu:
                 self.completed += 1
                 self.video_seconds += res.video_seconds
@@ -202,6 +204,7 @@ class VStoreServer:
                 "cache_bytes": self.cache.bytes,
                 "decodes": self.planner.decodes,
                 "coalesced_cfs": self.planner.coalesced_cfs,
+                "inflight_hits": self.planner.inflight_hits,
             }
 
     def close(self):

@@ -144,6 +144,45 @@ class VideoStore:
         cost["convert_s"] = time.perf_counter() - t0
         return out, cost
 
+    def retrieve_many(self, stream: str, segs: list[int], sf_id: str,
+                      cf: FidelityOption) -> tuple[list[np.ndarray], dict]:
+        """Retrieve several segments at one consumption fidelity.
+
+        Amortizes the per-segment fixed costs: ``want_indices`` is computed
+        once for the whole group and the crop/resize ``convert`` runs as one
+        fused call over the concatenated decode (one jit dispatch instead of
+        ``len(segs)``), then splits back per segment — ``convert`` is a
+        per-frame program, so results are bit-exact with ``retrieve``.  When
+        a serving-layer retriever is attached, routes each segment through
+        it instead (the decoded-segment cache owns reuse there).  Returns
+        ``(frames_per_segment, aggregate_cost)``.
+        """
+        if self._retriever is not None:
+            outs = [self._retriever(stream, s, sf_id, cf) for s in segs]
+            cost = {"decode_s": 0.0, "convert_s": 0.0, "bytes": 0,
+                    "chunks": 0, "frames": 0}
+            for _, c in outs:
+                for k in cost:
+                    cost[k] += c.get(k, 0)
+            return [f for f, _ in outs], cost
+        cost = {"decode_s": 0.0, "convert_s": 0.0, "bytes": 0,
+                "chunks": 0, "frames": 0}
+        if not segs:
+            return [], cost
+        want = self.want_indices(sf_id, cf)
+        decoded = []
+        for s in segs:
+            frames, c = self.decode_for(stream, s, sf_id, want)
+            decoded.append(frames)
+            for k in ("decode_s", "bytes", "chunks", "frames"):
+                cost[k] += c[k]
+        t0 = time.perf_counter()
+        stacked = decoded[0] if len(decoded) == 1 else np.concatenate(decoded)
+        conv = self.convert(stacked, sf_id, cf)
+        cost["convert_s"] = time.perf_counter() - t0
+        n = len(want)
+        return [conv[i * n:(i + 1) * n] for i in range(len(segs))], cost
+
     # serving-layer primitives: retrieval = want_indices -> decode_for ->
     # convert.  The decoded-segment cache keeps decode_for outputs (frames on
     # the storage fidelity's grid) so any CF a cached decode covers is served

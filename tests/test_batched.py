@@ -1,0 +1,283 @@
+"""Cross-segment batched consumption: batched cascades are bit-exact with
+the per-segment path while issuing strictly fewer ``op.detect`` calls;
+``BatchedConsumer`` scatter/padding mechanics; ``retrieve_many`` fusion;
+friendly config lookup errors."""
+
+import functools
+import tempfile
+
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro.analytics.batch import (DEFAULT_BATCH_SHAPES, BatchedConsumer,
+                                   _MIN_SLOT_GAP)
+from repro.analytics.operators import OPERATORS, Operator, _positions
+from repro.analytics.query import _active_frame_mask, run_query
+from repro.analytics.scene import generate_segment
+from repro.core.knobs import FidelityOption, IngestSpec
+from repro.launch.vserve import demo_config
+from repro.serving import run_pipelined
+from repro.videostore import VideoStore
+
+N_SEGS = 4
+CF_FAST = FidelityOption("good", 1.0, 270, 1 / 2)
+
+
+@functools.cache
+def _built_store():
+    # cached module-level (not a pytest fixture) so the hypothesis property
+    # test can share it without tripping fixture health checks
+    root = tempfile.mkdtemp(prefix="repro_batched_")
+    spec = IngestSpec()
+    cfg = demo_config()
+    vs = VideoStore(root, spec)
+    vs.set_formats(cfg.storage_formats())
+    for seg in range(N_SEGS):
+        frames, _ = generate_segment("jackson", seg, spec)
+        vs.ingest_segment("jackson", seg, frames)
+    # an all-black stream: the first cascade stage activates nothing, so
+    # later stages exercise the empty-activation path
+    n, h, w = spec.resolve(FidelityOption())
+    for seg in range(2):
+        vs.ingest_segment("blank", seg, np.zeros((n, h, w), np.uint8))
+    return vs, cfg
+
+
+@pytest.fixture(scope="module")
+def store_and_config():
+    return _built_store()
+
+
+def _stage_key(res):
+    return [(s.op, s.frames, s.segments_scanned, s.items)
+            for s in res.stages]
+
+
+# ---------------------------------------------------------------------------
+# batched == per-segment, across executors and batch sizes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("query,accuracy", [("A", 0.8), ("B", 0.8),
+                                            ("A", 0.9)])
+def test_batched_matches_per_segment(store_and_config, query, accuracy):
+    vs, cfg = store_and_config
+    segs = list(range(N_SEGS))
+    seq = run_query(vs, cfg, query, "jackson", segs, accuracy)
+    for bs in (1, 2, 3, N_SEGS, N_SEGS + 3):
+        bat = run_query(vs, cfg, query, "jackson", segs, accuracy,
+                        batch_segments=bs)
+        assert bat.items == seq.items
+        assert _stage_key(bat) == _stage_key(seq)
+        for s, b in zip(seq.stages, bat.stages):
+            assert b.detect_calls <= s.detect_calls
+            if bs > 1 and b.segments_scanned > 1:
+                assert b.detect_calls < s.detect_calls
+            assert b.batched_frames >= b.frames
+    pip = run_pipelined(vs, cfg, query, "jackson", segs, accuracy,
+                        prefetch_depth=2, batch_segments=3)
+    assert pip.items == seq.items
+    assert _stage_key(pip) == _stage_key(seq)
+
+
+def test_batched_strictly_fewer_calls(store_and_config):
+    """On a multi-segment stage the batched path must merge dispatches."""
+    vs, cfg = store_and_config
+    segs = list(range(N_SEGS))
+    seq = run_query(vs, cfg, "B", "jackson", segs, 0.8)
+    bat = run_query(vs, cfg, "B", "jackson", segs, 0.8,
+                    batch_segments=N_SEGS)
+    assert sum(b.detect_calls for b in bat.stages) < \
+        sum(s.detect_calls for s in seq.stages)
+    assert all(s.detect_calls == s.segments_scanned
+               for s in seq.stages if s.frames)
+
+
+def test_batch_segments_validation_and_fallback(store_and_config):
+    vs, cfg = store_and_config
+    with pytest.raises(ValueError):
+        run_query(vs, cfg, "A", "jackson", [0], 0.8, batch_segments=-2)
+    with pytest.raises(ValueError):
+        run_pipelined(vs, cfg, "A", "jackson", [0], 0.8, batch_segments=-1)
+    # batch_segments=0 is the true per-segment baseline: no padding, one
+    # detect per consumed segment
+    seq = run_query(vs, cfg, "B", "jackson", list(range(N_SEGS)), 0.8)
+    pip = run_pipelined(vs, cfg, "B", "jackson", list(range(N_SEGS)), 0.8,
+                        batch_segments=0)
+    assert pip.items == seq.items
+    for s, p in zip(seq.stages, pip.stages):
+        assert p.detect_calls == s.detect_calls
+        assert p.batched_frames == 0
+
+
+def test_empty_activation(store_and_config):
+    """A stream where stage 1 activates nothing: later stages consume zero
+    frames and issue zero detect calls, batched and not."""
+    vs, cfg = store_and_config
+    seq = run_query(vs, cfg, "A", "blank", [0, 1], 0.8)
+    bat = run_query(vs, cfg, "A", "blank", [0, 1], 0.8, batch_segments=2)
+    pip = run_pipelined(vs, cfg, "A", "blank", [0, 1], 0.8)
+    assert seq.items == bat.items == pip.items == set()
+    for res in (seq, bat, pip):
+        assert res.stages[1].frames == 0 and res.stages[2].frames == 0
+    assert bat.stages[1].detect_calls == 0
+    assert bat.stages[2].detect_calls == 0
+
+
+@settings(max_examples=5, deadline=None)
+@given(bs=st.integers(1, 6), n_take=st.integers(1, N_SEGS))
+def test_batched_equivalence_property(bs, n_take):
+    vs, cfg = _built_store()
+    segs = list(range(n_take))
+    seq = run_query(vs, cfg, "B", "jackson", segs, 0.9)
+    bat = run_query(vs, cfg, "B", "jackson", segs, 0.9, batch_segments=bs)
+    pip = run_pipelined(vs, cfg, "B", "jackson", segs, 0.9,
+                        batch_segments=bs)
+    assert bat.items == seq.items == pip.items
+    assert _stage_key(bat) == _stage_key(seq) == _stage_key(pip)
+
+
+# ---------------------------------------------------------------------------
+# BatchedConsumer mechanics
+# ---------------------------------------------------------------------------
+
+class _Recorder(Operator):
+    """Echoes one item per frame carrying its bucket, recording call
+    shapes — exposes padding, fusion, and scatter directly."""
+    name = "recorder"
+
+    def __init__(self):
+        self.calls = []
+
+    def detect(self, frames_u8, cf, spec, positions=None):
+        self.calls.append(frames_u8.shape)
+        bsz = max(1, spec.fps // 2)
+        # skip all-zero frames so padding rows are distinguishable
+        return {("rec", int(p) // bsz, i)
+                for i, p in enumerate(positions)
+                if frames_u8[i].any()}
+
+
+def test_consumer_scatter_and_padding():
+    spec = IngestSpec()
+    consumer = BatchedConsumer(spec)
+    rng = np.random.default_rng(0)
+    batch = []
+    for seg, n in ((3, 5), (7, 1), (11, 9)):
+        frames = rng.integers(1, 255, (n, 8, 8), dtype=np.uint8)
+        pos = np.sort(rng.choice(spec.frames_per_segment, n, replace=False))
+        batch.append((seg, frames, pos))
+    op = _Recorder()
+    per_seg, stats = consumer.consume(op, FidelityOption(), batch)
+    assert stats.detect_calls == 1 and len(op.calls) == 1
+    assert op.calls[0][0] in DEFAULT_BATCH_SHAPES  # padded to a static shape
+    assert stats.frames == 15 and stats.batched_frames == op.calls[0][0]
+    assert set(per_seg) == {3, 7, 11}
+    bsz = max(1, spec.fps // 2)
+    for (seg, frames, pos) in batch:
+        got_buckets = {it[1] for it in per_seg[seg]}
+        assert got_buckets == {int(p) // bsz for p in pos}  # exact scatter
+        assert len(per_seg[seg]) == len(frames)  # no padding leakage
+
+
+def test_consumer_empty_and_oversize_batches():
+    spec = IngestSpec()
+    consumer = BatchedConsumer(spec, shapes=(4, 8))
+    op = _Recorder()
+    per_seg, stats = consumer.consume(op, FidelityOption(), [])
+    assert per_seg == {} and stats.detect_calls == 0
+    # segments never split across chunks: 3 segments of 3 frames with an
+    # 8-frame cap go as (3+3 padded to 8) + (3 padded to 4)
+    rng = np.random.default_rng(1)
+    batch = [(s, rng.integers(1, 255, (3, 8, 8), dtype=np.uint8),
+              np.arange(3) * 4) for s in range(3)]
+    per_seg, stats = consumer.consume(op, FidelityOption(), batch)
+    assert [c[0] for c in op.calls] == [8, 4]
+    assert stats.detect_calls == 2 and stats.batched_frames == 12
+    assert all(len(v) == 3 for v in per_seg.values())
+
+
+def test_single_frame_tail_diff_stays_empty():
+    """Per-segment Diff on a single frame returns nothing; the batched call
+    concatenates single-frame segments with others, and the slot gap must
+    keep every cross-segment pair below threshold."""
+    spec = IngestSpec()
+    consumer = BatchedConsumer(spec)
+    diff = OPERATORS["diff"]
+    cf = FidelityOption()
+    rng = np.random.default_rng(2)
+    _, h, w = spec.resolve(cf)
+    # extreme contrast between neighbours: black, white, black ...
+    batch = [(s, np.full((1, h, w), 255 * (s % 2), np.uint8),
+              np.array([0])) for s in range(6)]
+    per_seg, stats = consumer.consume(diff, cf, batch)
+    assert stats.detect_calls == 1
+    assert all(items == set() for items in per_seg.values())
+    # and the per-segment reference agrees
+    for seg, frames, pos in batch:
+        assert diff.detect(frames, cf, spec, positions=pos) == set()
+
+
+def test_slot_gap_suppresses_cross_segment_diff():
+    spec = IngestSpec()
+    consumer = BatchedConsumer(spec)
+    assert consumer._stride >= spec.frames_per_segment + _MIN_SLOT_GAP
+    assert consumer._stride % max(1, spec.fps // 2) == 0
+    assert _MIN_SLOT_GAP > 1.0 / OPERATORS["diff"].threshold
+
+
+def test_active_frame_mask_empty_positions_bool():
+    spec = IngestSpec()
+    mask = _active_frame_mask(np.array([], np.int64), {1, 2}, spec)
+    assert mask.dtype == np.bool_ and mask.size == 0
+    mask = _active_frame_mask(np.array([], np.int64), None, spec)
+    assert mask.dtype == np.bool_
+
+
+# ---------------------------------------------------------------------------
+# retrieve_many
+# ---------------------------------------------------------------------------
+
+def test_retrieve_many_bit_exact(store_and_config):
+    vs, cfg = store_and_config
+    sf_id = cfg.subscription(CF_FAST)
+    segs = list(range(N_SEGS))
+    many, cost = vs.retrieve_many("jackson", segs, sf_id, CF_FAST)
+    assert len(many) == N_SEGS
+    for seg, got in zip(segs, many):
+        direct, _ = vs.retrieve_direct("jackson", seg, sf_id, CF_FAST)
+        assert got.dtype == direct.dtype and np.array_equal(got, direct)
+    assert cost["frames"] == sum(len(f) for f in many)
+    assert vs.retrieve_many("jackson", [], sf_id, CF_FAST)[0] == []
+
+
+def test_retrieve_many_routes_through_attached_retriever(store_and_config):
+    vs, cfg = store_and_config
+    seen = []
+
+    def spy(stream, seg, sf_id, cf):
+        seen.append(seg)
+        return vs.retrieve_direct(stream, seg, sf_id, cf)
+
+    sf_id = cfg.subscription(CF_FAST)
+    vs.attach_retriever(spy)
+    try:
+        many, _ = vs.retrieve_many("jackson", [0, 2], sf_id, CF_FAST)
+    finally:
+        vs.attach_retriever(None)
+    assert seen == [0, 2] and len(many) == 2
+
+
+# ---------------------------------------------------------------------------
+# friendly config lookup errors
+# ---------------------------------------------------------------------------
+
+def test_config_lookup_error_lists_available(store_and_config):
+    _vs, cfg = store_and_config
+    with pytest.raises(KeyError) as ei:
+        cfg.consumption_format("nn", 0.123)
+    msg = str(ei.value)
+    assert "0.123" in msg and "profiled ops" in msg and "nn" in msg
+    with pytest.raises(KeyError) as ei:
+        cfg.consumer_speed("nosuchop", 0.8)
+    assert "nosuchop" in str(ei.value) and "0.8" in str(ei.value)

@@ -124,6 +124,24 @@ def test_attached_retriever_serves_plain_retrieve(served):
     assert "cache" not in c
 
 
+def test_cache_covers_empty_wants():
+    """An entry with an empty want set must not 'cover' real requests (the
+    old clip-to--1 indexed the last row); an empty request is trivially
+    covered by anything."""
+    from repro.serving.cache import CacheEntry
+    cf = FidelityOption()
+    empty = CacheEntry("s", 0, "sf", cf, np.array([], np.int64),
+                       np.zeros((0, 8, 8), np.uint8), 0)
+    assert empty.covers(np.array([0, 1])) is None
+    rows = empty.covers(np.array([], np.int64))
+    assert rows is not None and rows.size == 0
+    full = CacheEntry("s", 0, "sf", cf, np.arange(4),
+                      np.zeros((4, 8, 8), np.uint8), 4 * 64)
+    rows = full.covers(np.array([], np.int64))
+    assert rows is not None and rows.size == 0
+    assert full.covers(np.array([2, 9])) is None  # out of range, no wrap
+
+
 # ---------------------------------------------------------------------------
 # RetrievalPlanner
 # ---------------------------------------------------------------------------
@@ -160,6 +178,61 @@ def test_planner_interest_coalesces_decode(served):
     assert cost["cache"] in ("hit", "richer")
     planner.release_query(reqs)
     assert not planner._interest
+
+
+def test_oversize_decode_single_flight_no_stampede(served):
+    """When the leader's decode exceeds the cache budget (insert refused),
+    waiting followers must be served from the leader's in-flight slot —
+    not degrade into N serial decodes of the same segment."""
+    vs, _cfg = served
+    cache = DecodedSegmentCache(max_bytes=1)  # nothing is cacheable
+    planner = RetrievalPlanner(vs, cache)
+
+    decoding = threading.Event()
+    release = threading.Event()
+    real_decode = vs.decode_for
+
+    class _GatedStore:
+        """Store proxy whose decode blocks until every follower queues."""
+
+        def __getattr__(self, name):
+            return getattr(vs, name)
+
+        def decode_for(self, stream, seg, sf_id, want):
+            decoding.set()
+            release.wait(5)
+            return real_decode(stream, seg, sf_id, want)
+
+    planner.store = _GatedStore()
+    results, errors = [], []
+
+    def fetch():
+        try:
+            results.append(planner.fetch("jackson", 0, "sf_g", CF_NN))
+        except Exception as e:  # pragma: no cover - surfaced via assert
+            errors.append(e)
+
+    leader = threading.Thread(target=fetch)
+    leader.start()
+    assert decoding.wait(5)
+    followers = [threading.Thread(target=fetch) for _ in range(4)]
+    for t in followers:
+        t.start()
+    import time
+    time.sleep(0.3)  # let followers reach the in-flight wait
+    release.set()
+    for t in [leader] + followers:
+        t.join(10)
+    assert not errors
+    assert len(results) == 5
+    assert planner.decodes == 1, \
+        f"oversize decode stampeded: {planner.decodes} decodes for 5 fetches"
+    assert cache.stats.oversize >= 1  # the scenario really was uncacheable
+    assert planner.inflight_hits >= 1
+    direct, _ = vs.retrieve_direct("jackson", 0, "sf_g", CF_NN)
+    for frames, cost in results:
+        assert np.array_equal(frames, direct)
+        assert cost["cache"] in ("miss", "inflight")
 
 
 # ---------------------------------------------------------------------------
