@@ -1,0 +1,114 @@
+"""Regression guard for the benchmark JSON artifacts.
+
+``benchmarks.run --check BASELINE.json`` compares the rows of the current
+run against a committed baseline so the perf trajectory actually gates in
+CI.  Rules, designed to be robust across machines of different speeds:
+
+* any row whose ``derived`` field records an ``ERROR=`` fails the check;
+* *relative* metrics (``speedup``, ``hit_rate`` — same-host ratios of two
+  measurements, which transfer between machines) must reach at least
+  ``factor`` x their baseline value.  Absolute numbers — ``us_per_call``
+  and the ``*_x`` x-realtime speeds — are NOT compared: they scale with
+  host speed and would fail spuriously on a slower CI runner;
+* boolean metrics that were ``True`` in the baseline (``identical``,
+  ``fewer_calls``, ...) must still be ``True`` — correctness claims never
+  get a tolerance, and one going missing is itself a violation.
+
+Rows are matched by bench name plus their identity parameters (the
+knob-valued ``k=v`` pairs such as ``mode=sparse`` or ``query=B``); only
+bench names present in the current run are checked, so ``--only`` subsets
+work.
+"""
+
+from __future__ import annotations
+
+# k=v keys that identify a row (workload knobs), as opposed to measurements
+ID_KEYS = {
+    "mode", "config", "query", "op", "acc", "kint", "n", "step", "q",
+    "res", "segments", "arch", "shape", "budget_frac", "sampling",
+}
+# measured same-host ratio metrics guarded with a factor (absolute *_x
+# x-realtime speeds are deliberately excluded — host-speed dependent)
+GUARD_KEYS = {"speedup", "hit_rate"}
+# boolean claims guarded exactly
+BOOL_VALUES = {"True", "False"}
+
+
+def parse_derived(derived: str) -> dict[str, str]:
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def _row_key(row: dict) -> tuple:
+    kv = parse_derived(row.get("derived", ""))
+    ident = tuple(sorted((k, v) for k, v in kv.items() if k in ID_KEYS))
+    return (row["name"], ident)
+
+
+def _guarded(kv: dict) -> dict[str, float]:
+    out = {}
+    for k, v in kv.items():
+        if k in GUARD_KEYS:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                pass
+    return out
+
+
+def check_rows(baseline_rows: list[dict], rows: list[dict],
+               factor: float = 0.5) -> list[str]:
+    """Compare a run against a baseline; returns human-readable violations
+    (empty = pass)."""
+    violations = []
+    current: dict[tuple, dict] = {}
+    names_run = set()
+    for r in rows:
+        if r.get("derived", "").startswith("ERROR="):
+            violations.append(f"{r['name']}: {r['derived']}")
+            continue
+        names_run.add(r["name"])
+        key = _row_key(r)
+        kv = parse_derived(r.get("derived", ""))
+        slot = current.setdefault(key, {})
+        for k, v in _guarded(kv).items():  # duplicates keep the best
+            slot[k] = max(slot.get(k, float("-inf")), v)
+        for k, v in kv.items():
+            if v in BOOL_VALUES:
+                # a single False among duplicates taints the claim
+                slot[k] = slot.get(k, True) and v == "True"
+
+    for b in baseline_rows:
+        if b["name"] not in names_run:
+            continue  # bench not selected this run (--only)
+        key = _row_key(b)
+        kv = parse_derived(b.get("derived", ""))
+        cur = current.get(key)
+        if cur is None:
+            violations.append(f"{b['name']}{dict(key[1])}: row missing "
+                              f"from current run")
+            continue
+        for k, base in _guarded(kv).items():
+            got = cur.get(k)
+            if got is None:
+                violations.append(f"{b['name']}{dict(key[1])}: metric "
+                                  f"{k} missing")
+            elif got < base * factor:
+                violations.append(
+                    f"{b['name']}{dict(key[1])}: {k}={got:g} fell below "
+                    f"{factor:g}x baseline ({base:g})")
+        for k, v in kv.items():
+            if v != "True":
+                continue
+            got = cur.get(k)
+            if got is None:
+                violations.append(
+                    f"{b['name']}{dict(key[1])}: boolean claim {k} missing")
+            elif got is False:
+                violations.append(
+                    f"{b['name']}{dict(key[1])}: {k} regressed to False")
+    return violations

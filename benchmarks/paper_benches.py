@@ -354,6 +354,50 @@ def bench_batched_consumption(tmp_root="/tmp/repro_bench_batched"):
             f"identical={identical};fewer_calls={fewer}")
 
 
+def bench_decode_path(n_segs=8, kint=10):
+    """Beyond-paper: the fused batched decode path (blob format v2 +
+    one-dispatch residual IDCT) vs the seed decoder.
+
+    The seed decoder (``decode_segment_scan``) entropy-decodes the whole
+    v1 payload and runs one jit dispatch per chunk with the IDCT inside
+    the DPCM scan; the fused path (``decode_many`` on v2 blobs) touches
+    only the wanted chunks' payload spans and reconstructs every wanted
+    chunk of the whole segment group in one batched residual-IDCT
+    dispatch.  Reports x-realtime and touched bytes at dense and
+    1/30-sparse sampling; outputs must be bit-identical."""
+    from repro.codec.segment import decode_many, decode_segment_scan
+
+    frames = [generate_segment("tucson", i, SPEC)[0] for i in range(n_segs)]
+    enc = lambda f, v: encode_segment(  # noqa: E731
+        f, quant_scale=2.0, keyframe_interval=kint, zstd_level=3, version=v)
+    blobs_v1 = [enc(f, 1) for f in frames]
+    blobs_v2 = [enc(f, 2) for f in frames]
+
+    def timed(fn, repeats=5):
+        fn(), fn()  # warm jit caches
+        t0 = time.perf_counter()
+        outs = [fn() for _ in range(repeats)]
+        return (time.perf_counter() - t0) / repeats, outs[-1]
+
+    vsec = n_segs * SPEC.segment_seconds
+    for name, sampling in (("dense", 1.0), ("sparse", 1 / 30)):
+        want = temporal_indices(FidelityOption(),
+                                FidelityOption(sampling=sampling), SPEC)
+        t_seed, seed_out = timed(
+            lambda: [decode_segment_scan(b, want) for b in blobs_v1])
+        t_fused, fused = timed(lambda: decode_many(blobs_v2, want))
+        fused_out, cost = fused
+        identical = all(np.array_equal(a, b)
+                        for a, b in zip(seed_out, fused_out))
+        row("decode_path", t_fused * 1e6,
+            f"mode={name};segments={n_segs};kint={kint};"
+            f"seed_x={vsec / t_seed:.0f};fused_x={vsec / t_fused:.0f};"
+            f"speedup={t_seed / t_fused:.2f};"
+            f"bytes_total={sum(len(b) for b in blobs_v2)};"
+            f"bytes_touched={cost['bytes']};dispatches={cost['dispatches']};"
+            f"identical={identical}")
+
+
 def bench_fig13_overhead():
     """Fig. 13 / §6.4: boundary-search + memoization profiling overhead vs
     exhaustive profiling of the full fidelity space."""

@@ -5,7 +5,10 @@ Prints ``name,us_per_call,derived`` CSV rows; ``--json PATH`` additionally
 writes every row (plus per-bench wall times and errors) as a JSON file —
 CI uploads these as ``BENCH_*.json`` artifacts so the perf trajectory
 accumulates per commit.  ``--only a,b`` selects a subset of benches by
-name (with or without the ``bench_`` prefix).
+name (with or without the ``bench_`` prefix).  ``--check BASELINE.json``
+turns the run into a regression gate: ratio metrics (speedups,
+x-realtime) must stay within ``--check-factor`` of the committed baseline
+and boolean correctness claims must hold (see benchmarks.check).
 """
 
 from __future__ import annotations
@@ -45,6 +48,12 @@ def main(argv=None) -> None:
                          "optional); default: all")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write all rows as a JSON file")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="regression-gate this run against a baseline "
+                         "bench JSON (exit 1 on violations)")
+    ap.add_argument("--check-factor", type=float, default=0.5,
+                    help="minimum fraction of a baseline ratio metric the "
+                         "current run must reach (default 0.5)")
     args = ap.parse_args(argv)
 
     benches = [
@@ -57,6 +66,7 @@ def main(argv=None) -> None:
         B.bench_table3_ingest_budget,
         B.bench_serve_concurrency,
         B.bench_batched_consumption,
+        B.bench_decode_path,
         B.bench_fig13_overhead,
         bench_roofline,
     ]
@@ -88,6 +98,19 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump({"rows": common.ROWS}, f, indent=1)
         print(f"wrote {len(common.ROWS)} rows to {args.json}")
+
+    if args.check:
+        from .check import check_rows
+        with open(args.check) as f:
+            baseline = json.load(f)["rows"]
+        violations = check_rows(baseline, common.ROWS,
+                                factor=args.check_factor)
+        if violations:
+            for v in violations:
+                print(f"CHECK FAILED: {v}")
+            raise SystemExit(1)
+        print(f"check passed against {args.check} "
+              f"(factor {args.check_factor})")
 
 
 if __name__ == "__main__":

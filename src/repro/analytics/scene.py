@@ -15,10 +15,19 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import zlib
 
 import numpy as np
 
 from ..core.knobs import IngestSpec
+
+
+def _stream_seed(stream: str) -> int:
+    """Stable per-stream seed.  Python's ``hash()`` is randomized per
+    process (PYTHONHASHSEED), which silently made every process render
+    different scenes — benchmarks comparing runs across processes (and the
+    CI regression gate) need identical workloads, so use crc32."""
+    return zlib.crc32(stream.encode())
 
 # 7x5 digit glyph bitmaps.
 _DIGITS_ROWS = {
@@ -74,7 +83,7 @@ class SegmentTruth:
 
 
 def _background(stream: str, h: int, w: int) -> np.ndarray:
-    rng = np.random.default_rng(abs(hash(stream)) % (2**31))
+    rng = np.random.default_rng(_stream_seed(stream))
     y = np.linspace(0, 1, h)[:, None]
     x = np.linspace(0, 1, w)[None, :]
     bg = 90 + 50 * y + 15 * np.sin(x * 13) + 10 * np.cos(y * 21 + x * 7)
@@ -122,7 +131,7 @@ def generate_segment(stream: str, seg: int,
     spec = spec or IngestSpec()
     n, h, w = spec.frames_per_segment, spec.height, spec.width
     rate, speed, pan, plate_p = STREAMS.get(stream, STREAMS["tucson"])
-    rng = np.random.default_rng((abs(hash(stream)) % (2**31)) * 1000003 + seg)
+    rng = np.random.default_rng(_stream_seed(stream) * 1000003 + seg)
 
     bg = _background(stream, h, w + int(abs(pan) * n) + 8)
     n_cars = rng.poisson(rate)

@@ -1,8 +1,12 @@
-from .segment import (decode_segment, decoded_chunks, encode_raw,
+from .segment import (decode_many, decode_segment, decode_segment_ex,
+                      decode_segment_scan, decoded_chunks, encode_raw,
                       encode_segment, segment_info)
-from .transform import convert_fidelity, resize, sample_indices
+from .transform import (convert_fidelity, dct_backend, resize, sample_indices,
+                        set_dct_backend)
 
 __all__ = [
-    "encode_segment", "encode_raw", "decode_segment", "segment_info",
-    "decoded_chunks", "convert_fidelity", "resize", "sample_indices",
+    "encode_segment", "encode_raw", "decode_segment", "decode_segment_ex",
+    "decode_segment_scan", "decode_many", "segment_info", "decoded_chunks",
+    "convert_fidelity", "resize", "sample_indices",
+    "dct_backend", "set_dct_backend",
 ]

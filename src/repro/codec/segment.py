@@ -11,7 +11,30 @@ level realizes the *speed step* knob (paper Fig. 3a); when the optional
 the entropy coder in the blob header (``"ec"``), so blobs stay
 self-describing and either coder can read its own output.
 
-Blob layout: [u32 header_len][msgpack header][payload bytes].
+Blob layout (common): ``[u32 header_len][msgpack header][payload bytes]``.
+
+Two header-versioned payload formats coexist (``"v"`` field; absent = v1):
+
+* **v1** — one entropy-coded stream over the whole segment's symbols.
+  Any decode, however sparse, must decompress the entire payload.
+* **v2** (default) — each chunk is entropy-coded *independently* and the
+  header records per-chunk compressed byte lengths (``"spans"``), VSS-style
+  chunk-granular physical layout.  Chunk-skip then skips decompression and
+  payload *bytes*, not just transform work: a 1/30-sparse read touches
+  ``header + spans[c]`` bytes for the one chunk ``c`` it needs.  Symbols of
+  a short tail chunk are stored unpadded (``n`` and ``k`` determine each
+  chunk's frame count).
+
+Decoding is *batched*: all wanted chunks' residuals are reconstructed in a
+single jit dispatch (``_decode_chunks`` — dequantize + IDCT over every
+frame at once, zero-padded to the keyframe interval), then a cheap
+sequential add+clip scan runs over the precomputed residuals.  Per-frame
+float ops and their order are identical to the per-chunk reference scan
+(``decode_segment_scan``), so results are bit-exact by construction.  The
+dequantize+IDCT (and the encoder's forward DCT) route through the fused
+Pallas kernels in ``repro.kernels.dct8`` when the transform backend
+resolves to ``"pallas"`` (see ``transform.set_dct_backend``); the pure-jnp
+path is the oracle and the CPU default.
 """
 
 from __future__ import annotations
@@ -31,8 +54,12 @@ except ImportError:  # pragma: no cover - exercised on bare interpreters
     zstandard = None
 
 from . import transform as T
+from ..kernels.dct8.dct8 import dct8_dequantize, dct8_quantize
 
 _MAGIC = "tpucodec-v1"
+
+#: Blob format written by :func:`encode_segment` when ``version`` is None.
+DEFAULT_VERSION = 2
 
 
 def _compress(payload: bytes, level: int) -> tuple[str, bytes]:
@@ -55,17 +82,25 @@ def _decompress(coder: str, payload: bytes) -> bytes:
 
 
 # ---------------------------------------------------------------------------
-# Chunk coding (jitted; one compile per (chunk_len, hb, wb))
+# Chunk coding (jitted; tail chunks are padded to the keyframe interval
+# before encode and sliced after, so there is ONE compile per (k, hb, wb)
+# regardless of segment length)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=())
-def _encode_chunk(frames_f32: jnp.ndarray, quant_scale: jnp.ndarray):
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def _encode_chunk(frames_f32: jnp.ndarray, quant_scale: jnp.ndarray,
+                  backend: str = "jnp", interpret: bool = True):
     """frames (k, h, w) float32 -> (symbols (k, hb, wb, 8, 8) int16)."""
 
     def step(pred, frame):
-        resid = T.to_blocks((frame - pred)[None])[0]
-        sym = T.quantize(T.dct2(resid), quant_scale)
-        recon_resid = T.from_blocks(T.idct2(T.dequantize(sym, quant_scale))[None])[0]
+        resid = (frame - pred)[None]
+        if backend == "pallas":
+            sym = dct8_quantize(resid, quant_scale, interpret=interpret)[0]
+            recon_resid = dct8_dequantize(sym[None], quant_scale,
+                                          interpret=interpret)[0]
+        else:
+            sym = T.frames_to_symbols(resid, quant_scale)[0]
+            recon_resid = T.symbols_to_residuals(sym[None], quant_scale)[0]
         recon = jnp.clip(pred + recon_resid, 0.0, 255.0)
         return recon, sym
 
@@ -76,10 +111,14 @@ def _encode_chunk(frames_f32: jnp.ndarray, quant_scale: jnp.ndarray):
 
 @functools.partial(jax.jit, static_argnames=())
 def _decode_chunk(symbols: jnp.ndarray, quant_scale: jnp.ndarray):
-    """Inverse of _encode_chunk: (k, hb, wb, 8, 8) int16 -> (k, h, w) f32."""
+    """Per-chunk reference decoder (k, hb, wb, 8, 8) int16 -> (k, h, w) f32.
+
+    The seed decode path: dequantize+IDCT trapped inside the DPCM scan, one
+    dispatch per chunk.  Kept as the bit-exactness oracle for the batched
+    ``_decode_chunks`` and as the baseline of the ``decode_path`` bench."""
 
     def step(pred, sym):
-        recon_resid = T.from_blocks(T.idct2(T.dequantize(sym, quant_scale))[None])[0]
+        recon_resid = T.symbols_to_residuals(sym[None], quant_scale)[0]
         recon = jnp.clip(pred + recon_resid, 0.0, 255.0)
         return recon, recon
 
@@ -89,29 +128,126 @@ def _decode_chunk(symbols: jnp.ndarray, quant_scale: jnp.ndarray):
     return frames
 
 
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def _chunk_residuals(symbols: jnp.ndarray, quant_scale: jnp.ndarray,
+                     backend: str = "jnp", interpret: bool = True):
+    """One-dispatch batched residual IDCT: (C, k, hb, wb, 8, 8) int16 ->
+    (k, C, h, w) float32 residuals for ALL wanted chunks' frames at once
+    (one fused Pallas dispatch or one pair of big GEMMs), hoisted out of
+    the DPCM recursion.  k-major layout so the downstream scan consumes
+    its leading axis with no float32 transposes."""
+    C, k, hb, wb, _, _ = symbols.shape
+    kmajor = symbols.transpose(1, 0, 2, 3, 4, 5).reshape(
+        k * C, hb, wb, T.BLOCK, T.BLOCK)
+    if backend == "pallas":
+        resid = dct8_dequantize(kmajor, quant_scale, interpret=interpret)
+    else:
+        resid = T.symbols_to_residuals(kmajor, quant_scale)
+    return resid.reshape(k, C, hb * T.BLOCK, wb * T.BLOCK)
+
+
+@jax.jit
+def _residuals_scan(resid: jnp.ndarray) -> jnp.ndarray:
+    """The cheap sequential DPCM tail over precomputed residuals:
+    (k, C, h, w) f32 -> (k, C, h, w) u8.  Each step adds+clips and emits
+    rounded uint8 directly, so the float32 frame stack never materializes
+    in memory (only the (C, h, w) carry stays float)."""
+
+    def step(pred, r):
+        recon = jnp.clip(pred + r, 0.0, 255.0)
+        return recon, jnp.round(recon).astype(jnp.uint8)
+
+    init = jnp.full(resid.shape[1:], 128.0, jnp.float32)
+    _, frames = jax.lax.scan(step, init, resid)
+    return frames
+
+
+def _decode_chunks(symbols: jnp.ndarray, quant_scale: jnp.ndarray,
+                   backend: str = "jnp", interpret: bool = True):
+    """Batched chunk decode: (C, k, hb, wb, 8, 8) int16 -> (k, C, h, w) u8.
+
+    Two jit dispatches regardless of chunk count — the batched residual
+    IDCT and the add+clip scan (kept as separate programs: XLA:CPU fuses
+    the GEMM chain into the scan body when compiled together, which is
+    measurably slower).  Per-frame float ops and their order match
+    ``_decode_chunk`` exactly, so reconstruction is bit-exact with the
+    per-chunk path; callers index ``[frame_in_chunk, chunk_row]``."""
+    return _residuals_scan(_chunk_residuals(symbols, quant_scale,
+                                            backend=backend,
+                                            interpret=interpret))
+
+
+def _pad_chunk_count(c: int) -> int:
+    """Next power of two >= c: the static chunk-batch shapes ``_decode_chunks``
+    compiles for, so arbitrary want-sets reuse a small ladder of jit entries."""
+    return 1 << max(0, c - 1).bit_length()
+
+
+def _k_eff(k: int, n: int) -> int:
+    """The chunk-stack frame dimension: ``min(k, n)``.  A keyframe interval
+    larger than the segment yields a single chunk of n frames — padding to
+    the full interval would scan k-n ghost frames per chunk."""
+    return min(k, n)
+
+
+def _pad_tail(chunk: np.ndarray, k_eff: int) -> np.ndarray:
+    """Edge-pad a short tail chunk to the (effective) keyframe interval
+    (DPCM is causal, so padded frames cannot affect the real frames'
+    symbols)."""
+    if len(chunk) == k_eff:
+        return chunk
+    return np.concatenate(
+        [chunk, np.repeat(chunk[-1:], k_eff - len(chunk), axis=0)])
+
+
 # ---------------------------------------------------------------------------
 # Public segment API
 # ---------------------------------------------------------------------------
 
 def encode_segment(frames_u8: np.ndarray, *, quant_scale: float,
-                   keyframe_interval: int, zstd_level: int) -> bytes:
+                   keyframe_interval: int, zstd_level: int,
+                   version: int | None = None) -> bytes:
     """Encode (n, h, w) uint8 frames.  n need not divide the interval; the
-    final chunk is simply shorter."""
+    final chunk is simply shorter (padded for the jit call, sliced before
+    serialization).  ``version`` selects the blob format (default
+    ``DEFAULT_VERSION``); v1 is retained for back-compat tests/benches."""
+    version = DEFAULT_VERSION if version is None else version
+    if version not in (1, 2):
+        raise ValueError(f"unknown blob format version {version}")
     frames = np.asarray(frames_u8)
     n, h, w = frames.shape
+    k = keyframe_interval
+    backend, interp = T.dct_backend(), T.dct_interpret()
     parts = []
-    for start in range(0, n, keyframe_interval):
-        chunk = jnp.asarray(frames[start:start + keyframe_interval], jnp.float32)
-        sym = _encode_chunk(chunk, jnp.float32(quant_scale))
-        parts.append(np.asarray(sym))
-    payload = b"".join(p.tobytes() for p in parts)
-    coder, comp = _compress(payload, zstd_level)
-    header = msgpack.packb({
+    for start in range(0, n, k):
+        kc = min(k, n - start)
+        chunk = jnp.asarray(_pad_tail(frames[start:start + kc], _k_eff(k, n)),
+                            jnp.float32)
+        sym = _encode_chunk(chunk, jnp.float32(quant_scale),
+                            backend=backend, interpret=interp)
+        parts.append(np.asarray(sym)[:kc])
+    header = {
         "magic": _MAGIC, "raw": False, "n": n, "h": h, "w": w,
-        "k": keyframe_interval, "qs": float(quant_scale), "lvl": zstd_level,
-        "ec": coder,
-    })
-    return struct.pack("<I", len(header)) + header + comp
+        "k": k, "qs": float(quant_scale), "lvl": zstd_level,
+    }
+    if version == 1:
+        coder, comp = _compress(b"".join(p.tobytes() for p in parts),
+                                zstd_level)
+        header["ec"] = coder
+        payload = comp
+    else:
+        spans, blobs = [], []
+        coder = None
+        for p in parts:
+            coder, comp = _compress(p.tobytes(), zstd_level)
+            spans.append(len(comp))
+            blobs.append(comp)
+        header["v"] = 2
+        header["ec"] = coder or _compress(b"", zstd_level)[0]
+        header["spans"] = spans
+        payload = b"".join(blobs)
+    packed = msgpack.packb(header)
+    return struct.pack("<I", len(packed)) + packed + payload
 
 
 def encode_raw(frames_u8: np.ndarray) -> bytes:
@@ -135,35 +271,204 @@ def segment_info(blob: bytes) -> dict:
     return header
 
 
+def _chunk_symbols(header: dict, payload: bytes, chunks: np.ndarray,
+                   pad_to: int) -> tuple[np.ndarray, int]:
+    """Entropy-decode the selected ``chunks`` into a zero-padded
+    (pad_to, k, hb, wb, 8, 8) int16 stack.  Returns (symbols,
+    payload_bytes_touched): v2 touches only the selected chunks' spans, v1
+    must decompress the whole stream."""
+    n, h, w, k = header["n"], header["h"], header["w"], header["k"]
+    hb, wb = h // T.BLOCK, w // T.BLOCK
+    ec = header.get("ec", "zstd")
+    out = np.zeros((pad_to, _k_eff(k, n), hb, wb, T.BLOCK, T.BLOCK),
+                   np.int16)
+    if header.get("v", 1) >= 2:
+        offsets = np.concatenate([[0], np.cumsum(header["spans"])])
+        touched = 0
+        for i, c in enumerate(chunks):
+            c = int(c)
+            raw = _decompress(ec, payload[offsets[c]:offsets[c + 1]])
+            kc = min(k, n - c * k)
+            out[i, :kc] = np.frombuffer(raw, np.int16).reshape(
+                kc, hb, wb, T.BLOCK, T.BLOCK)
+            touched += int(header["spans"][c])
+        return out, touched
+    sym_all = np.frombuffer(_decompress(ec, payload), np.int16).reshape(
+        n, hb, wb, T.BLOCK, T.BLOCK)
+    for i, c in enumerate(chunks):
+        start = int(c) * k
+        kc = min(k, n - start)
+        out[i, :kc] = sym_all[start:start + kc]
+    return out, len(payload)
+
+
+def _decode_cost(header: dict, header_bytes: int, payload_bytes: int,
+                 chunks: int, frames: int) -> dict:
+    """The header dict augmented with bytes/chunks/frames actually touched —
+    what ``VideoStore.decode_for`` reports, from the single parse that the
+    decode itself performed."""
+    return dict(header) | {
+        "bytes": header_bytes + payload_bytes,
+        "chunks": chunks,
+        "frames": frames,
+    }
+
+
+def decode_segment_ex(blob: bytes,
+                      want: np.ndarray | None = None
+                      ) -> tuple[np.ndarray, dict]:
+    """Decode stored frames and return ``(frames, info)`` from one parse.
+
+    ``want`` (sorted indices into the stored frame sequence) enables
+    chunk-skip: only chunks containing wanted frames are entropy-decoded
+    (v2: only their payload bytes are even touched) and reconstructed, all
+    in a single batched jit dispatch.  ``info`` is the blob header plus
+    ``bytes``/``chunks``/``frames`` actually touched, so callers need no
+    second ``segment_info`` parse."""
+    header, payload = _parse(blob)
+    hlen = len(blob) - len(payload)
+    n, h, w = header["n"], header["h"], header["w"]
+    if header["raw"]:
+        return _decode_raw(header, payload, hlen, want)
+
+    k = header["k"]
+    want = np.arange(n) if want is None else np.asarray(want, np.int64)
+    if want.size == 0:
+        return (np.empty((0, h, w), np.uint8),
+                _decode_cost(header, hlen, 0, 0, 0))
+    chunk_of = want // k
+    chunks = np.unique(chunk_of)
+    sym, touched = _chunk_symbols(header, payload, chunks,
+                                  _pad_chunk_count(len(chunks)))
+    decoded = _run_decode(sym, header)  # (k_eff, C_padded, h, w)
+    out = _scatter_rows(decoded, want, k, chunks)
+    return out, _decode_cost(header, hlen, touched, len(chunks), len(want))
+
+
+def _decode_raw(header: dict, payload: bytes, hlen: int,
+                want: np.ndarray | None) -> tuple[np.ndarray, dict]:
+    """Coding-bypass read: slice (or, for a dense read, copy — frombuffer
+    views are read-only and callers may mutate) the raw frame array."""
+    n, h, w = header["n"], header["h"], header["w"]
+    frames = np.frombuffer(payload, np.uint8).reshape(n, h, w)
+    out = frames[want] if want is not None else frames.copy()
+    return out, _decode_cost(header, hlen, out.nbytes, 0, len(out))
+
+
+def _run_decode(sym_padded: np.ndarray, header: dict) -> np.ndarray:
+    """One ``_decode_chunks`` dispatch on the resolved transform backend."""
+    return np.asarray(_decode_chunks(
+        jnp.asarray(sym_padded), jnp.float32(header["qs"]),
+        backend=T.dct_backend(), interpret=T.dct_interpret()))
+
+
+def _scatter_rows(decoded: np.ndarray, want: np.ndarray, k: int,
+                  chunks: np.ndarray, row0: int = 0) -> np.ndarray:
+    """Select ``want`` frames from a decoded (k_eff, C, h, w) chunk stack
+    whose rows ``row0 .. row0+len(chunks)`` hold ``chunks`` (sorted unique).
+    The single scatter-math implementation shared by the one-segment and
+    grouped decoders, so their indexing cannot diverge."""
+    chunk_of = want // k
+    rows = row0 + np.searchsorted(chunks, chunk_of)
+    return decoded[want - chunk_of * k, rows]
+
+
 def decode_segment(blob: bytes, want: np.ndarray | None = None) -> np.ndarray:
-    """Decode stored frames.  ``want`` (sorted indices into the stored frame
-    sequence) enables chunk-skip: only chunks containing wanted frames are
-    reconstructed.  Returns (len(want) or n, h, w) uint8."""
+    """Decode stored frames (see ``decode_segment_ex``; this drops the cost
+    info).  Returns (len(want) or n, h, w) uint8, always writable."""
+    return decode_segment_ex(blob, want)[0]
+
+
+def decode_many(blobs: list[bytes],
+                want: np.ndarray | None = None
+                ) -> tuple[list[np.ndarray], dict]:
+    """Decode several segments' ``want`` frames with ONE batched dispatch.
+
+    All coded blobs sharing a transform shape (h, w, k, qs) — which every
+    segment of one storage format does — contribute their wanted chunks to
+    a single stacked ``_decode_chunks`` call; raw or odd-shaped blobs fall
+    back to per-blob decode.  Returns ``(frames_per_blob, cost)`` where
+    cost aggregates bytes/chunks/frames touched plus the jit ``dispatches``
+    issued (one per distinct coded shape group; raw blobs need none)."""
+    outs: list[np.ndarray | None] = [None] * len(blobs)
+    cost = {"bytes": 0, "chunks": 0, "frames": 0, "dispatches": 0}
+    groups: dict[tuple, list] = {}
+    for i, blob in enumerate(blobs):
+        header, payload = _parse(blob)
+        hlen = len(blob) - len(payload)
+        if header["raw"]:
+            outs[i], info = _decode_raw(header, payload, hlen, want)
+            for key in ("bytes", "chunks", "frames"):
+                cost[key] += info[key]
+            continue
+        key = (header["h"], header["w"], header["k"], header["qs"],
+               _k_eff(header["k"], header["n"]))
+        groups.setdefault(key, []).append((i, header, payload, hlen))
+
+    for (_h, _w, k, _qs, k_eff), members in groups.items():
+        per_member = []
+        total_chunks = 0
+        for i, header, payload, hlen in members:
+            n = header["n"]
+            w_i = (np.arange(n) if want is None
+                   else np.asarray(want, np.int64))
+            chunks = np.unique(w_i // k) if w_i.size else np.empty(0, np.int64)
+            per_member.append((i, header, payload, hlen, w_i, chunks))
+            total_chunks += len(chunks)
+        if total_chunks == 0:
+            for i, header, payload, hlen, w_i, _c in per_member:
+                outs[i] = np.empty((0, header["h"], header["w"]), np.uint8)
+                cost["bytes"] += hlen
+            continue
+        pad = _pad_chunk_count(total_chunks)
+        header0 = per_member[0][1]
+        hb, wb = header0["h"] // T.BLOCK, header0["w"] // T.BLOCK
+        sym = np.zeros((pad, k_eff, hb, wb, T.BLOCK, T.BLOCK), np.int16)
+        row = 0
+        rowspans = []
+        for i, header, payload, hlen, w_i, chunks in per_member:
+            part, touched = _chunk_symbols(header, payload, chunks,
+                                           len(chunks))
+            sym[row:row + len(chunks)] = part
+            rowspans.append(row)
+            row += len(chunks)
+            cost["bytes"] += hlen + touched
+            cost["chunks"] += len(chunks)
+            cost["frames"] += len(w_i)
+        decoded = _run_decode(sym, header0)
+        cost["dispatches"] += 1
+        for (i, header, payload, hlen, w_i, chunks), r0 in zip(per_member,
+                                                              rowspans):
+            if w_i.size == 0:
+                outs[i] = np.empty((0, header["h"], header["w"]), np.uint8)
+                continue
+            outs[i] = _scatter_rows(decoded, w_i, k, chunks, row0=r0)
+    return outs, cost
+
+
+def decode_segment_scan(blob: bytes,
+                        want: np.ndarray | None = None) -> np.ndarray:
+    """The seed decode path, kept as oracle and bench baseline: one
+    ``_decode_chunk`` jit dispatch + one float32 host transfer per wanted
+    chunk, with the dequantize+IDCT inside the DPCM scan, and (for v1
+    blobs) a whole-payload entropy decode."""
     header, payload = _parse(blob)
     n, h, w = header["n"], header["h"], header["w"]
     if header["raw"]:
         frames = np.frombuffer(payload, np.uint8).reshape(n, h, w)
-        return frames[want] if want is not None else frames
-
+        return frames[want] if want is not None else frames.copy()
     k, qs = header["k"], np.float32(header["qs"])
-    hb, wb = h // T.BLOCK, w // T.BLOCK
-    sym_all = np.frombuffer(
-        _decompress(header.get("ec", "zstd"), payload), np.int16
-    ).reshape(n, hb, wb, T.BLOCK, T.BLOCK)
-
-    if want is None:
-        want = np.arange(n)
-    want = np.asarray(want)
+    want = np.arange(n) if want is None else np.asarray(want, np.int64)
     out = np.empty((len(want), h, w), np.uint8)
-
-    # Group wanted indices by chunk; skip chunks with no wanted frame.
     chunk_of = want // k
-    for c in np.unique(chunk_of):
-        start = int(c) * k
-        sym = jnp.asarray(sym_all[start:start + k])
-        frames = np.asarray(_decode_chunk(sym, qs))
+    chunks = np.unique(chunk_of)
+    sym_all, _ = _chunk_symbols(header, payload, chunks, len(chunks))
+    for row, c in enumerate(chunks):
+        kc = min(k, n - int(c) * k)
+        frames = np.asarray(_decode_chunk(jnp.asarray(sym_all[row, :kc]), qs))
         sel = np.nonzero(chunk_of == c)[0]
-        out[sel] = np.clip(np.round(frames[want[sel] - start]), 0, 255).astype(np.uint8)
+        out[sel] = np.clip(np.round(frames[want[sel] - int(c) * k]),
+                           0, 255).astype(np.uint8)
     return out
 
 

@@ -10,12 +10,47 @@ module is the pure-jnp implementation used as its oracle and as the CPU path.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 BLOCK = 8
+
+# ---------------------------------------------------------------------------
+# DCT backend selection: which implementation the codec's hot transforms
+# (batched residual IDCT, encoder forward DCT) run on.  "auto" resolves to
+# the fused Pallas kernels (repro.kernels.dct8) on TPU and the pure-jnp
+# oracle elsewhere; "pallas" forces the kernels (interpret mode off-TPU,
+# slow but bit-faithful — used by oracle tests), "jnp" forces the oracle.
+# ---------------------------------------------------------------------------
+
+_DCT_BACKENDS = ("auto", "jnp", "pallas")
+_dct_backend = os.environ.get("REPRO_DCT_BACKEND", "auto")
+if _dct_backend not in _DCT_BACKENDS:  # pragma: no cover - env misuse
+    raise ValueError(f"REPRO_DCT_BACKEND must be one of {_DCT_BACKENDS}, "
+                     f"got {_dct_backend!r}")
+
+
+def set_dct_backend(name: str) -> None:
+    """Select the codec transform backend: 'auto' | 'jnp' | 'pallas'."""
+    global _dct_backend
+    if name not in _DCT_BACKENDS:
+        raise ValueError(f"backend must be one of {_DCT_BACKENDS}, got {name!r}")
+    _dct_backend = name
+
+
+def dct_backend() -> str:
+    """The resolved backend ('jnp' or 'pallas') for the current platform."""
+    if _dct_backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return _dct_backend
+
+
+def dct_interpret() -> bool:
+    """Whether a Pallas dispatch must run in interpret mode (off-TPU)."""
+    return jax.default_backend() != "tpu"
 
 
 @functools.cache
@@ -52,15 +87,30 @@ def from_blocks(blocks: jnp.ndarray) -> jnp.ndarray:
 
 
 def dct2(blocks: jnp.ndarray) -> jnp.ndarray:
-    """Forward 2D DCT over trailing (8, 8) dims."""
+    """Forward 2D DCT over trailing (8, 8) dims: D @ X @ D.T.
+
+    Formulated as two large (M*8, 8) @ (8, 8) GEMMs instead of an einsum
+    over per-block 8x8 matmuls — XLA:CPU runs one big GEMM several times
+    faster than 10^5 tiny batched dots, and the contraction order (j then
+    k, each an in-order 8-term dot) is identical, so results are bit-exact
+    with the einsum ``ij,...jk,lk->...il`` form."""
     d = jnp.asarray(dct_basis())
-    return jnp.einsum("ij,...jk,lk->...il", d, blocks, d)
+    shp = blocks.shape
+    x = blocks.reshape(-1, BLOCK, BLOCK)
+    tmp = x.transpose(0, 2, 1).reshape(-1, BLOCK) @ d.T   # rows (b,k) cols i
+    tmp = tmp.reshape(-1, BLOCK, BLOCK).transpose(0, 2, 1)  # (b, i, k)
+    return (tmp.reshape(-1, BLOCK) @ d.T).reshape(shp)    # rows (b,i) cols l
 
 
 def idct2(coefs: jnp.ndarray) -> jnp.ndarray:
-    """Inverse 2D DCT over trailing (8, 8) dims."""
+    """Inverse 2D DCT over trailing (8, 8) dims: D.T @ C @ D (same two-GEMM
+    formulation and contraction order as ``dct2`` — see its docstring)."""
     d = jnp.asarray(dct_basis())
-    return jnp.einsum("ji,...jk,kl->...il", d, coefs, d)
+    shp = coefs.shape
+    x = coefs.reshape(-1, BLOCK, BLOCK)
+    tmp = x.transpose(0, 2, 1).reshape(-1, BLOCK) @ d     # rows (b,k) cols i
+    tmp = tmp.reshape(-1, BLOCK, BLOCK).transpose(0, 2, 1)  # (b, i, k)
+    return (tmp.reshape(-1, BLOCK) @ d).reshape(shp)      # rows (b,i) cols l
 
 
 def quantize(coefs: jnp.ndarray, quant_scale: float) -> jnp.ndarray:
@@ -71,6 +121,42 @@ def quantize(coefs: jnp.ndarray, quant_scale: float) -> jnp.ndarray:
 def dequantize(symbols: jnp.ndarray, quant_scale: float) -> jnp.ndarray:
     q = jnp.asarray(quant_table()) * quant_scale
     return symbols.astype(jnp.float32) * q
+
+
+def symbols_to_residuals(symbols: jnp.ndarray,
+                         quant_scale: float) -> jnp.ndarray:
+    """Fused dequantize + IDCT + de-blocking for a frame stack:
+    (n, hb, wb, 8, 8) int16 -> (n, h, w) float32.
+
+    The decode hot path.  Equivalent to
+    ``from_blocks(idct2(dequantize(symbols, qs)))`` — per-element dot
+    products and their order are identical (bit-exact) — but the
+    de-blocking transpose is folded into the second GEMM's batch layout so
+    the frame stack is materialized once, not three times."""
+    n, hb, wb = symbols.shape[:3]
+    d = jnp.asarray(dct_basis())
+    coef = dequantize(symbols, quant_scale)
+    tmp = coef.reshape(-1, BLOCK, BLOCK).transpose(0, 2, 1)
+    tmp = (tmp.reshape(-1, BLOCK) @ d).reshape(n, hb, wb, BLOCK, BLOCK)
+    tmp = tmp.transpose(0, 1, 4, 2, 3)                    # (n, hb, i, wb, k)
+    out = tmp.reshape(-1, BLOCK) @ d                      # rows (n,hb,i,wb)
+    return out.reshape(n, hb * BLOCK, wb * BLOCK)
+
+
+def frames_to_symbols(frames: jnp.ndarray, quant_scale: float) -> jnp.ndarray:
+    """Fused blocking + DCT + quantize for a frame stack:
+    (n, h, w) float32 -> (n, hb, wb, 8, 8) int16 — the encode-side twin of
+    ``symbols_to_residuals`` (bit-exact with
+    ``quantize(dct2(to_blocks(frames)), qs)``)."""
+    n, h, w = frames.shape
+    hb, wb = h // BLOCK, w // BLOCK
+    d = jnp.asarray(dct_basis())
+    x = frames.reshape(n, hb, BLOCK, wb, BLOCK)
+    tmp = x.transpose(0, 1, 3, 4, 2)                      # (n, hb, wb, k, j)
+    tmp = (tmp.reshape(-1, BLOCK) @ d.T).reshape(n, hb, wb, BLOCK, BLOCK)
+    tmp = tmp.transpose(0, 1, 2, 4, 3)                    # (n, hb, wb, i, k)
+    coef = (tmp.reshape(-1, BLOCK) @ d.T).reshape(n, hb, wb, BLOCK, BLOCK)
+    return quantize(coef, quant_scale)
 
 
 def frame_to_symbols(frame_f32: jnp.ndarray, quant_scale: float) -> jnp.ndarray:

@@ -1,24 +1,24 @@
 """Jit'd dispatch for the dct8 kernel: Pallas on TPU, interpret-mode Pallas
-or the jnp oracle elsewhere."""
-import jax
+or the jnp oracle elsewhere.  ``use_pallas=None`` defers to the codec-wide
+transform backend (``repro.codec.transform.set_dct_backend`` /
+``REPRO_DCT_BACKEND``), which is the same flag the batched segment decoder
+(``repro.codec.segment._decode_chunks``) and the encoder's forward DCT
+route through — one switch flips the whole codec."""
 
+from ...codec.transform import dct_backend, dct_interpret
 from .dct8 import dct8_dequantize, dct8_quantize
 from .ref import dct8_dequantize_ref, dct8_quantize_ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def dct_quantize(frames, quant_scale, use_pallas: bool | None = None):
-    use = _on_tpu() if use_pallas is None else use_pallas
+    use = (dct_backend() == "pallas") if use_pallas is None else use_pallas
     if use:
-        return dct8_quantize(frames, quant_scale, interpret=not _on_tpu())
+        return dct8_quantize(frames, quant_scale, interpret=dct_interpret())
     return dct8_quantize_ref(frames, quant_scale)
 
 
 def dct_dequantize(symbols, quant_scale, use_pallas: bool | None = None):
-    use = _on_tpu() if use_pallas is None else use_pallas
+    use = (dct_backend() == "pallas") if use_pallas is None else use_pallas
     if use:
-        return dct8_dequantize(symbols, quant_scale, interpret=not _on_tpu())
+        return dct8_dequantize(symbols, quant_scale, interpret=dct_interpret())
     return dct8_dequantize_ref(symbols, quant_scale)

@@ -77,6 +77,8 @@ class RetrievalPlanner:
         self.decodes = 0          # actual store decodes issued
         self.coalesced_cfs = 0    # extra CFs folded into union decodes
         self.inflight_hits = 0    # follower fetches served from a leader
+        self.decode_bytes = 0     # blob bytes the misses actually touched
+        self.decode_chunks = 0    # chunks the misses actually reconstructed
 
     # -- query lifecycle -----------------------------------------------------
     def register_query(self, requests: list[Request]):
@@ -172,8 +174,14 @@ class RetrievalPlanner:
                       if c != cf and sf.fidelity.richer_eq(c)]
         task = self._task(stream, seg, sf_id, cfs)
         frames, cost = self.store.decode_for(stream, seg, sf_id, task.want)
-        self.decodes += 1
-        self.coalesced_cfs += len(cfs) - 1
+        with self._lock:
+            self.decodes += 1
+            self.coalesced_cfs += len(cfs) - 1
+            # decode_for's cost reflects bytes/chunks actually touched (v2
+            # blobs charge only the wanted chunks' spans), so these counters
+            # track real I/O+decompression work, not blob sizes.
+            self.decode_bytes += cost["bytes"]
+            self.decode_chunks += cost["chunks"]
         self.cache.insert(stream, seg, sf_id, task.cf_join, task.want, frames)
         with self._lock:
             slot = self._inflight.get(gkey)

@@ -205,6 +205,8 @@ class VStoreServer:
                 "decodes": self.planner.decodes,
                 "coalesced_cfs": self.planner.coalesced_cfs,
                 "inflight_hits": self.planner.inflight_hits,
+                "decode_bytes": self.planner.decode_bytes,
+                "decode_chunks": self.planner.decode_chunks,
             }
 
     def close(self):

@@ -149,10 +149,12 @@ class VideoStore:
         """Retrieve several segments at one consumption fidelity.
 
         Amortizes the per-segment fixed costs: ``want_indices`` is computed
-        once for the whole group and the crop/resize ``convert`` runs as one
-        fused call over the concatenated decode (one jit dispatch instead of
-        ``len(segs)``), then splits back per segment — ``convert`` is a
-        per-frame program, so results are bit-exact with ``retrieve``.  When
+        once for the whole group, the chunk-skip *decode* of every segment
+        runs as one batched dispatch (``decode_many_for`` stacks all wanted
+        chunks), and the crop/resize ``convert`` runs as one fused call over
+        the concatenated decode, then splits back per segment — decode and
+        ``convert`` are per-frame programs, so results are bit-exact with
+        ``retrieve``.  When
         a serving-layer retriever is attached, routes each segment through
         it instead (the decoded-segment cache owns reuse there).  Returns
         ``(frames_per_segment, aggregate_cost)``.
@@ -170,12 +172,9 @@ class VideoStore:
         if not segs:
             return [], cost
         want = self.want_indices(sf_id, cf)
-        decoded = []
-        for s in segs:
-            frames, c = self.decode_for(stream, s, sf_id, want)
-            decoded.append(frames)
-            for k in ("decode_s", "bytes", "chunks", "frames"):
-                cost[k] += c[k]
+        decoded, c = self.decode_many_for(stream, segs, sf_id, want)
+        for k in ("decode_s", "bytes", "chunks", "frames"):
+            cost[k] += c[k]
         t0 = time.perf_counter()
         stacked = decoded[0] if len(decoded) == 1 else np.concatenate(decoded)
         conv = self.convert(stacked, sf_id, cf)
@@ -199,19 +198,35 @@ class VideoStore:
     def decode_for(self, stream: str, seg: int, sf_id: str,
                    want: np.ndarray) -> tuple[np.ndarray, dict]:
         """Fetch + chunk-skip-decode stored frames ``want`` at the storage
-        fidelity's own grid (no consumption conversion)."""
+        fidelity's own grid (no consumption conversion).  The decode's own
+        single header parse supplies the cost accounting, and ``bytes`` /
+        ``chunks`` report what the decode actually touched — with v2 blobs
+        a sparse read only pays for the chunks it lands in."""
         blob = self.backend.get(_sf_key(sf_id, stream, seg))
         t0 = time.perf_counter()
-        frames = codec.decode_segment(blob, np.asarray(want))
+        frames, info = codec.decode_segment_ex(blob, np.asarray(want))
         t_dec = time.perf_counter() - t0
-        info = codec.segment_info(blob)
         cost = {
-            "decode_s": t_dec, "convert_s": 0.0, "bytes": len(blob),
-            "chunks": (codec.decoded_chunks(info["n"], info["k"], want)
-                       if not info["raw"] else 0),
-            "frames": len(want),
+            "decode_s": t_dec, "convert_s": 0.0, "bytes": info["bytes"],
+            "chunks": info["chunks"], "frames": info["frames"],
         }
         return frames, cost
+
+    def decode_many_for(self, stream: str, segs: list[int], sf_id: str,
+                        want: np.ndarray) -> tuple[list[np.ndarray], dict]:
+        """Chunk-skip-decode ``want`` from several segments of one storage
+        format in a single batched jit dispatch (``codec.decode_many``
+        stacks every wanted chunk across the group), instead of one
+        dispatch + host transfer per segment."""
+        blobs = [self.backend.get(_sf_key(sf_id, stream, s)) for s in segs]
+        t0 = time.perf_counter()
+        frames_list, info = codec.decode_many(blobs, np.asarray(want))
+        cost = {
+            "decode_s": time.perf_counter() - t0, "convert_s": 0.0,
+            "bytes": info["bytes"], "chunks": info["chunks"],
+            "frames": info["frames"], "dispatches": info["dispatches"],
+        }
+        return frames_list, cost
 
     def convert(self, frames: np.ndarray, sf_id: str,
                 cf: FidelityOption) -> np.ndarray:

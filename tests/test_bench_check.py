@@ -1,0 +1,106 @@
+"""benchmarks.run --check regression-guard logic."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.check import check_rows, parse_derived  # noqa: E402
+
+
+def _row(name, derived):
+    return {"name": name, "us_per_call": 0.0, "derived": derived}
+
+
+BASE = [
+    _row("decode_path", "mode=dense;seed_x=400;fused_x=700;speedup=1.7;"
+                        "identical=True"),
+    _row("decode_path", "mode=sparse;seed_x=900;fused_x=2500;speedup=2.6;"
+                        "identical=True"),
+    _row("other_bench", "query=A;speedup=1.3;identical=True"),
+]
+
+
+def test_parse_derived():
+    assert parse_derived("a=1;b=x;c=2.5") == {"a": "1", "b": "x", "c": "2.5"}
+
+
+def test_identical_run_passes():
+    assert check_rows(BASE, list(BASE)) == []
+
+
+def test_slower_but_within_factor_passes():
+    rows = [_row("decode_path", "mode=dense;seed_x=300;fused_x=400;"
+                                "speedup=1.0;identical=True"),
+            _row("decode_path", "mode=sparse;seed_x=600;fused_x=1400;"
+                                "speedup=1.4;identical=True")]
+    assert check_rows(BASE, rows, factor=0.5) == []
+
+
+def test_ratio_regression_fails():
+    rows = [_row("decode_path", "mode=dense;seed_x=400;fused_x=100;"
+                                "speedup=0.2;identical=True"),
+            _row("decode_path", "mode=sparse;seed_x=900;fused_x=2500;"
+                                "speedup=2.6;identical=True")]
+    violations = check_rows(BASE, rows, factor=0.5)
+    assert any("speedup" in v and "mode" in v for v in violations)
+
+
+def test_boolean_claim_regression_fails():
+    rows = [_row("decode_path", "mode=dense;seed_x=400;fused_x=700;"
+                                "speedup=1.7;identical=False"),
+            _row("decode_path", "mode=sparse;seed_x=900;fused_x=2500;"
+                                "speedup=2.6;identical=True")]
+    violations = check_rows(BASE, rows)
+    assert any("identical regressed" in v for v in violations)
+
+
+def test_boolean_claim_missing_fails():
+    rows = [_row("decode_path", "mode=dense;seed_x=400;fused_x=700;"
+                                "speedup=1.7"),  # identical= vanished
+            _row("decode_path", "mode=sparse;seed_x=900;fused_x=2500;"
+                                "speedup=2.6;identical=True")]
+    violations = check_rows(BASE, rows)
+    assert any("boolean claim identical missing" in v for v in violations)
+
+
+def test_absolute_x_metrics_not_compared():
+    # *_x x-realtime speeds are host-dependent; a 10x slower machine with
+    # intact ratios must pass
+    rows = [_row("decode_path", "mode=dense;seed_x=40;fused_x=70;"
+                                "speedup=1.7;identical=True"),
+            _row("decode_path", "mode=sparse;seed_x=90;fused_x=250;"
+                                "speedup=2.6;identical=True")]
+    assert check_rows(BASE, rows) == []
+
+
+def test_error_rows_fail():
+    rows = list(BASE) + [_row("decode_path", "ERROR=RuntimeError:boom")]
+    violations = check_rows(BASE, rows)
+    assert any("ERROR" in v for v in violations)
+
+
+def test_only_subset_is_checked():
+    # other_bench didn't run (--only): its baseline rows are not enforced
+    rows = BASE[:2]
+    assert check_rows(BASE, rows) == []
+
+
+def test_missing_row_within_running_bench_fails():
+    rows = BASE[:1]  # dense ran, sparse row vanished
+    violations = check_rows(BASE, rows)
+    assert any("missing" in v for v in violations)
+
+
+def test_duplicates_keep_best_value():
+    rows = list(BASE) + [_row("other_bench", "query=A;speedup=0.1;"
+                                             "identical=True")]
+    # best duplicate (1.3) passes the ratio check; booleans all True
+    assert check_rows(BASE, rows) == []
+
+
+def test_duplicate_false_taints_boolean():
+    rows = list(BASE) + [_row("other_bench", "query=A;speedup=1.3;"
+                                             "identical=False")]
+    violations = check_rows(BASE, rows)
+    assert any("identical regressed" in v for v in violations)

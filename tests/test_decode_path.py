@@ -1,0 +1,302 @@
+"""Fused batched decode path: bit-exact equivalence against the seed
+per-chunk scan decoder (property over want sets, keyframe intervals, blob
+versions, and entropy coders), v1 back-compat, chunk-granular byte
+accounting, batched multi-segment decode, Pallas-vs-jnp oracle checks, and
+jit-cache stability for tail chunks."""
+
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro.codec import segment as S
+from repro.codec import transform as T
+from repro.codec.transform import temporal_indices
+from repro.core.knobs import FidelityOption, IngestSpec
+
+
+def _frames(n=16, h=48, w=64, seed=0):
+    rng = np.random.default_rng(seed)
+    t = np.arange(n)[:, None, None]
+    y = np.arange(h)[None, :, None]
+    x = np.arange(w)[None, None, :]
+    f = 120 + 50 * np.sin((x + 2 * t) / 9) + 30 * np.cos((y - t) / 7)
+    return (f + rng.normal(0, 3, (n, h, w))).clip(0, 255).astype(np.uint8)
+
+
+def _encode(f, *, kint=5, version=None, qs=2.0, lvl=3):
+    return S.encode_segment(f, quant_scale=qs, keyframe_interval=kint,
+                            zstd_level=lvl, version=version)
+
+
+# ---------------------------------------------------------------------------
+# bit-exact equivalence with the seed scan decoder
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.sampled_from([3, 5, 10, 50]),
+       st.integers(0, 16), st.sampled_from([1, 2]))
+def test_batched_decode_matches_seed_scan(seed, kint, n_want, version):
+    f = _frames(n=13, seed=seed)  # 13 !% kint exercises the tail chunk
+    blob = _encode(f, kint=kint, version=version)
+    rng = np.random.default_rng(seed)
+    want = np.sort(rng.choice(len(f), size=min(n_want, len(f)),
+                              replace=False))
+    assert np.array_equal(S.decode_segment(blob, want),
+                          S.decode_segment_scan(blob, want))
+    assert np.array_equal(S.decode_segment(blob),
+                          S.decode_segment_scan(blob))
+
+
+@pytest.mark.parametrize("version", [1, 2])
+def test_zlib_coder_roundtrip(version, monkeypatch):
+    """Both blob versions stay self-describing under the zlib fallback."""
+    monkeypatch.setattr(S, "zstandard", None)
+    f = _frames()
+    blob = _encode(f, version=version)
+    assert S.segment_info(blob)["ec"] == "zlib"
+    assert np.array_equal(S.decode_segment(blob),
+                          S.decode_segment_scan(blob))
+
+
+def test_repeated_and_empty_want():
+    f = _frames()
+    blob = _encode(f)
+    full = S.decode_segment(blob)
+    want = np.array([2, 2, 7, 7, 7, 12])  # temporal_indices can repeat
+    assert np.array_equal(S.decode_segment(blob, want), full[want])
+    out, info = S.decode_segment_ex(blob, np.empty(0, np.int64))
+    assert out.shape == (0, 48, 64) and info["chunks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# v1 back-compat + byte accounting
+# ---------------------------------------------------------------------------
+
+def test_v1_blob_backcompat():
+    f = _frames()
+    blob = _encode(f, version=1)
+    info = S.segment_info(blob)
+    assert "v" not in info and "spans" not in info
+    full, cost = S.decode_segment_ex(blob)
+    assert np.array_equal(full, S.decode_segment_scan(blob))
+    # v1 must decompress the whole payload whatever the want set
+    _, sparse_cost = S.decode_segment_ex(blob, np.array([0]))
+    assert sparse_cost["bytes"] == cost["bytes"] == len(blob)
+
+
+def test_v2_sparse_read_touches_fewer_bytes():
+    f = _frames(n=32)
+    blob = _encode(f, kint=5, version=2)
+    info = S.segment_info(blob)
+    header_bytes = len(blob) - sum(info["spans"])
+    full, cost_full = S.decode_segment_ex(blob)
+    assert cost_full["bytes"] == len(blob)  # dense touches everything
+    part, cost = S.decode_segment_ex(blob, np.array([7]))
+    assert np.array_equal(part, full[[7]])
+    assert cost["chunks"] == 1
+    assert cost["bytes"] == header_bytes + info["spans"][1]
+    assert cost["bytes"] < len(blob) // 2
+
+
+def test_decode_for_cost_from_single_parse(tmp_path):
+    """VideoStore.decode_for reports touched bytes/chunks without a second
+    segment_info parse, and sparse v2 reads are charged per chunk."""
+    from repro.core.knobs import CodingOption, StorageFormat
+    from repro.videostore import VideoStore
+
+    spec = IngestSpec()
+    vs = VideoStore(str(tmp_path), spec)
+    sf = StorageFormat(FidelityOption(), CodingOption("fast", 5))
+    vs.set_formats({"sf0": sf})
+    f = _frames(spec.frames_per_segment, spec.height, spec.width)
+    vs.ingest_segment("s", 0, f)
+    blob_len = vs.backend.get("s:sf0:000000")
+    dense, dcost = vs.decode_for("s", 0, "sf0", np.arange(len(f)))
+    sparse, scost = vs.decode_for("s", 0, "sf0", np.array([3]))
+    assert np.array_equal(sparse[0], dense[3])
+    assert scost["chunks"] == 1 and dcost["chunks"] == -(-len(f) // 5)
+    assert scost["bytes"] < dcost["bytes"] == len(blob_len)
+
+
+# ---------------------------------------------------------------------------
+# batched multi-segment decode
+# ---------------------------------------------------------------------------
+
+def test_decode_many_matches_per_blob():
+    blobs = [_encode(_frames(seed=s), kint=5) for s in range(4)]
+    want = np.array([0, 6, 11])
+    outs, cost = S.decode_many(blobs, want)
+    for blob, out in zip(blobs, outs):
+        assert np.array_equal(out, S.decode_segment(blob, want))
+    assert cost["dispatches"] == 1  # one fused jit call for all four
+    assert cost["chunks"] == 4 * 3 and cost["frames"] == 4 * 3
+
+
+def test_decode_many_dense_and_mixed_raw():
+    coded = _encode(_frames(seed=1), kint=10)
+    raw = S.encode_raw(_frames(seed=2))
+    outs, cost = S.decode_many([coded, raw, coded], None)
+    assert np.array_equal(outs[0], S.decode_segment(coded))
+    assert np.array_equal(outs[1], S.decode_segment(raw))
+    assert np.array_equal(outs[2], outs[0])
+    assert cost["dispatches"] == 1  # raw needs no jit dispatch at all
+    outs[1][0, 0, 0] ^= 0xFF  # raw fallback must also be writable
+
+
+def test_retrieve_many_uses_batched_decode(tmp_path):
+    from repro.core.knobs import CodingOption, StorageFormat
+    from repro.videostore import VideoStore
+
+    spec = IngestSpec()
+    vs = VideoStore(str(tmp_path), spec)
+    sf = StorageFormat(FidelityOption(), CodingOption("fast", 10))
+    vs.set_formats({"sf0": sf})
+    for seg in range(3):
+        vs.ingest_segment("s", seg, _frames(spec.frames_per_segment,
+                                            spec.height, spec.width,
+                                            seed=seg))
+    cf = FidelityOption("good", 1.0, 360, 1 / 2)
+    many, cost = vs.retrieve_many("s", [0, 1, 2], "sf0", cf)
+    for seg, out in enumerate(many):
+        one, _ = vs.retrieve("s", seg, "sf0", cf)
+        assert np.array_equal(out, one)
+    assert cost["chunks"] > 0 and cost["bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# raw-blob decode is writable
+# ---------------------------------------------------------------------------
+
+def test_raw_decode_returns_writable_copy():
+    f = _frames()
+    blob = S.encode_raw(f)
+    out = S.decode_segment(blob)
+    assert out.flags.writeable
+    out += 1  # must not raise, must not corrupt the blob
+    again = S.decode_segment(blob)
+    assert np.array_equal(again, f)
+    assert S.decode_segment_scan(blob).flags.writeable
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel wiring: oracle equivalence through the codec
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def _restore_backend():
+    yield
+    T.set_dct_backend("auto")
+
+
+def test_pallas_backend_bit_identical(_restore_backend):
+    f = _frames(n=6, h=16, w=24)
+    T.set_dct_backend("jnp")
+    blob_jnp = _encode(f, kint=3)
+    dec_jnp = S.decode_segment(blob_jnp)
+    T.set_dct_backend("pallas")  # interpret mode off-TPU
+    blob_pl = _encode(f, kint=3)
+    dec_pl = S.decode_segment(blob_jnp)
+    assert blob_pl == blob_jnp          # encoder forward DCT matches
+    assert np.array_equal(dec_pl, dec_jnp)  # fused residual IDCT matches
+
+
+def test_ops_dispatch_follows_backend(_restore_backend):
+    import jax.numpy as jnp
+
+    from repro.kernels.dct8.ops import dct_dequantize, dct_quantize
+
+    x = jnp.asarray(_frames(n=2, h=16, w=16), jnp.float32)
+    for backend in ("jnp", "pallas"):
+        T.set_dct_backend(backend)
+        sym = dct_quantize(x, 2.0)
+        rec = dct_dequantize(sym, 2.0)
+        if backend == "jnp":
+            base_sym, base_rec = np.asarray(sym), np.asarray(rec)
+    np.testing.assert_array_equal(np.asarray(sym), base_sym)
+    np.testing.assert_allclose(np.asarray(rec), base_rec, atol=1e-4)
+
+
+def test_bad_backend_rejected():
+    with pytest.raises(ValueError):
+        T.set_dct_backend("cuda")
+
+
+# ---------------------------------------------------------------------------
+# jit-cache stability: tail chunks share the (k, h, w) compile
+# ---------------------------------------------------------------------------
+
+def test_tail_chunk_shares_jit_cache_entry():
+    import jax
+
+    if not hasattr(S._encode_chunk, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable on this jax")
+    jax.clear_caches()
+    f = _frames(n=13)  # 13 = 5 + 5 + 3: tail chunk shorter than k
+    blob = _encode(f, kint=5)
+    assert S._encode_chunk._cache_size() == 1
+    S.decode_segment(blob)                    # 3 chunks -> padded to 4
+    S.decode_segment(blob, np.array([1, 12]))  # 2 chunks -> padded to 2
+    S.decode_segment(blob, np.array([0]))     # 1 chunk
+    # one entry per padded chunk-count on the power-of-two ladder, never
+    # one per raw tail shape
+    assert S._chunk_residuals._cache_size() <= 3
+    assert np.array_equal(S.decode_segment(blob),
+                          S.decode_segment_scan(blob))
+
+
+def test_pad_tail_does_not_change_real_symbols():
+    """DPCM is causal: padding frames after the tail cannot change the
+    stored symbols, so padded-encode == seed unpadded-encode."""
+    f = _frames(n=13)
+    import jax.numpy as jnp
+    tail = f[10:13]
+    sym_padded = np.asarray(S._encode_chunk(
+        jnp.asarray(S._pad_tail(tail, 5), jnp.float32),
+        jnp.float32(2.0)))[:3]
+    sym_exact = np.asarray(S._encode_chunk(
+        jnp.asarray(tail, jnp.float32), jnp.float32(2.0)))
+    np.testing.assert_array_equal(sym_padded, sym_exact)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: query results identical on v1 and v2 blobs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("query", ["A", "B"])
+def test_run_query_items_identical_v1_v2(query, tmp_path, monkeypatch):
+    from repro.analytics.query import run_query
+    from repro.analytics.scene import generate_segment
+    from repro.launch.vserve import demo_config
+    from repro.videostore import VideoStore
+
+    spec = IngestSpec()
+    cfg = demo_config()
+    results = {}
+    for version in (1, 2):
+        monkeypatch.setattr(S, "DEFAULT_VERSION", version)
+        vs = VideoStore(str(tmp_path / f"v{version}"), spec)
+        vs.set_formats(cfg.storage_formats())
+        for seg in range(3):
+            frames, _ = generate_segment("jackson", seg, spec)
+            vs.ingest_segment("jackson", seg, frames)
+        results[version] = (
+            run_query(vs, cfg, query, "jackson", [0, 1, 2], 0.8),
+            run_query(vs, cfg, query, "jackson", [0, 1, 2], 0.8,
+                      batch_segments=3))
+    assert results[1][0].items == results[2][0].items
+    assert results[1][1].items == results[2][0].items
+    assert results[2][1].items == results[2][0].items
+
+
+def test_sparse_sampling_decode_via_temporal_indices():
+    """The chunk-skip driver (temporal_indices) composed with v2 spans: a
+    1/30-sampled read of a 32-frame segment touches exactly one chunk."""
+    spec = IngestSpec()
+    f = _frames(spec.frames_per_segment, spec.height, spec.width)
+    blob = _encode(f, kint=10, version=2)
+    want = temporal_indices(FidelityOption(),
+                            FidelityOption(sampling=1 / 30), spec)
+    out, cost = S.decode_segment_ex(blob, want)
+    assert np.array_equal(out, S.decode_segment_scan(blob, want))
+    assert cost["chunks"] == len(np.unique(want // 10))
+    assert cost["bytes"] < len(blob) // 2
