@@ -26,12 +26,18 @@ from __future__ import annotations
 ID_KEYS = {
     "mode", "config", "query", "op", "acc", "kint", "n", "step", "q",
     "res", "segments", "arch", "shape", "budget_frac", "sampling",
+    "streams",
 }
 # measured same-host ratio metrics guarded with a factor (absolute *_x
 # x-realtime speeds are deliberately excluded — host-speed dependent)
 GUARD_KEYS = {"speedup", "hit_rate"}
 # boolean claims guarded exactly
 BOOL_VALUES = {"True", "False"}
+# boolean claims that encode an absolute-speed threshold (e.g. "golden
+# encode >= 1x realtime") — true on any reasonable host but a property of
+# the machine, not the code, so excluded from the exact gate for the same
+# reason the *_x speeds are
+HOST_SPEED_BOOL_KEYS = {"golden_realtime"}
 
 
 def parse_derived(derived: str) -> dict[str, str]:
@@ -102,7 +108,7 @@ def check_rows(baseline_rows: list[dict], rows: list[dict],
                     f"{b['name']}{dict(key[1])}: {k}={got:g} fell below "
                     f"{factor:g}x baseline ({base:g})")
         for k, v in kv.items():
-            if v != "True":
+            if v != "True" or k in HOST_SPEED_BOOL_KEYS:
                 continue
             got = cur.get(k)
             if got is None:

@@ -7,7 +7,7 @@ from .coalesce import CoalesceResult, SFNode, choose_coding, coalesce
 from .configure import (DEFAULT_ACCURACIES, DEFAULT_OPS, DerivedConfig,
                         derive_config)
 from .consumption import Consumer, ConsumerPlan, derive_all
-from .erosion import ErosionPlan, plan_erosion
+from .erosion import ErosionPlan, plan_erosion, recovery_cost
 from .knobs import (CodingOption, FidelityOption, IngestSpec, StorageFormat,
                     coding_space, fidelity_space)
 from .profiler import Profiler, TableProfiler
@@ -16,7 +16,8 @@ __all__ = [
     "boundary_search", "coalesce", "choose_coding", "CoalesceResult",
     "SFNode", "derive_config", "DerivedConfig", "DEFAULT_ACCURACIES",
     "DEFAULT_OPS", "Consumer", "ConsumerPlan", "derive_all", "ErosionPlan",
-    "plan_erosion", "FidelityOption", "CodingOption", "StorageFormat",
+    "plan_erosion", "recovery_cost", "FidelityOption", "CodingOption",
+    "StorageFormat",
     "IngestSpec", "fidelity_space", "coding_space", "Profiler",
     "TableProfiler",
 ]

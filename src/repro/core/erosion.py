@@ -90,6 +90,26 @@ class _Chains:
         return self.overall(e_full)
 
 
+def recovery_cost(profiler, nodes: list[SFNode],
+                  subscriptions: dict[ConsumerPlan, int]) -> dict[int, float]:
+    """Per-node fleet slowdown if that node is entirely absent and every
+    read is served over its fallback chain: ``1 - overall({i: 1.0})``.
+
+    This is the same chain math the erosion planner optimizes with, reused
+    by the ingest scheduler to rank transcode work: a format whose absence
+    barely slows the fleet is cheap to recover (its ancestor serves reads
+    nearly as fast), so under transcode-budget pressure it is shed first.
+    Golden is never shed and scores +inf."""
+    chains = _Chains(profiler, nodes, subscriptions)
+    out: dict[int, float] = {}
+    for i, n in enumerate(nodes):
+        if n.golden:
+            out[i] = float("inf")
+        else:
+            out[i] = max(0.0, 1.0 - chains.overall({i: 1.0}))
+    return out
+
+
 def _erode_to_target(chains: _Chains, e: dict[int, float], target: float
                      ) -> dict[int, float]:
     """Fair-scheduler erosion: repeatedly erode the format that least hurts

@@ -1,0 +1,25 @@
+"""Live ingestion: the third leg (ingest) of the paper's
+ingest -> store -> retrieve -> consume path.
+
+* ``StreamSource`` / ``interleave`` — deterministic simulated cameras;
+* ``IngestScheduler`` — golden written synchronously (durability), all
+  other storage formats materialized by a prioritized background transcode
+  queue under a transcode-cycle budget, shedding the cheapest-to-recover
+  formats first (ranked by the erosion fallback-chain math);
+* ``FallbackChain`` — bit-exact retrieval of not-yet-materialized (or
+  eroded) formats from the nearest richer ancestor on the format tree;
+* ``ErosionExecutor`` — applies ``ErosionPlan`` fractions to the live
+  store on an age schedule and triggers compaction to reclaim bytes.
+"""
+
+from .erosion_exec import ErosionExecutor, ErosionReport
+from .fallback import (ByteRatioProfiler, FallbackChain, build_parents,
+                       chain_of)
+from .scheduler import IngestScheduler, TranscodeTask
+from .source import Arrival, StreamSource, interleave
+
+__all__ = [
+    "Arrival", "ByteRatioProfiler", "ErosionExecutor", "ErosionReport",
+    "FallbackChain", "IngestScheduler", "StreamSource", "TranscodeTask",
+    "build_parents", "chain_of", "interleave",
+]

@@ -1,0 +1,137 @@
+"""ErosionExecutor: drives an ``ErosionPlan`` against the live store.
+
+The planner (``repro.core.erosion``) decides per-age erosion *fractions*;
+until now nothing ever applied them.  The executor keeps an age ledger —
+segments are registered into per-(stream, day) cohorts as golden ingest
+admits them — and on every ``advance()`` of the logical day clock erodes
+each cohort up to its age's cumulative target: for cohort age ``a`` and
+plan node ``i``, ``round(fractions[a-1][i] × cohort_size)`` segments of
+that format must be gone.  Victims are chosen by ``VideoStore.erode``'s
+stratified deterministic spread, deletions are counted in bytes and chunk
+spans (blob v2), and the backing ``SegmentStore``'s auto-compaction (or an
+explicit ``compact()``) turns the dead index entries into reclaimed disk
+bytes.  Golden is never eroded, and queries keep answering across erosion:
+reads of an eroded format fall back to the nearest richer ancestor
+(``repro.ingest.fallback``) bit-exactly.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+
+from ..core.erosion import ErosionPlan
+
+
+@dataclasses.dataclass
+class ErosionReport:
+    """One ``advance()``'s accounting."""
+    day: int
+    segments: int = 0
+    bytes: int = 0
+    chunks: int = 0
+    chunk_bytes: int = 0
+    per_format: dict = dataclasses.field(default_factory=dict)
+    dead_bytes_after: int = 0
+    compactions: int = 0
+
+
+class ErosionExecutor:
+    def __init__(self, store, plan: ErosionPlan, node_ids: list[str],
+                 *, golden_id: str = "sf_g", seed: int = 0,
+                 compact: bool = True):
+        """``node_ids`` aligns the plan's node indices with the store's
+        sf ids (``DerivedConfig.node_id``).  ``compact=True`` forces a
+        compaction after any sweep that deleted segments (auto-compaction
+        may have already run; forcing makes reclaim deterministic)."""
+        self.store = store
+        self.plan = plan
+        self.node_ids = list(node_ids)
+        self.golden_id = golden_id
+        self.seed = seed
+        self.compact = compact
+        self.day = 0
+        # (stream, ingest_day) -> [segs]; ages derive from the day clock
+        self._cohorts: dict[tuple[str, int], list[int]] = {}
+        # (stream, ingest_day, sf_id) -> segments already eroded
+        self._eroded: dict[tuple[str, int, str], int] = {}
+        self.total = ErosionReport(day=0)
+
+    # -- age ledger -----------------------------------------------------------
+    def note_ingested(self, stream: str, seg: int):
+        """Place a segment in today's cohort (wire to
+        ``IngestScheduler.on_ingest``, or call directly)."""
+        self._cohorts.setdefault((stream, self.day), []).append(seg)
+
+    def register_existing(self, streams: list[str], day: int | None = None):
+        """Adopt already-stored golden segments into a cohort (e.g. a store
+        ingested before the executor attached)."""
+        d = self.day if day is None else day
+        for stream in streams:
+            segs = self.store.available_segments(stream, self.golden_id)
+            if segs:
+                self._cohorts.setdefault((stream, d), []).extend(segs)
+
+    # -- execution ------------------------------------------------------------
+    def advance(self, days: int = 1) -> ErosionReport:
+        """Move the day clock and erode every cohort to its age target."""
+        self.day += days
+        return self.apply()
+
+    def apply(self) -> ErosionReport:
+        rep = ErosionReport(day=self.day)
+        before_compactions = self.store.backend.compactions
+        for (stream, born), segs in sorted(self._cohorts.items()):
+            age = self.day - born
+            if age < 1 or not segs:
+                continue
+            # the plan's fractions are cumulative per planned age; apply
+            # the latest planned age <= this cohort's age (sparse age
+            # schedules allowed), saturating at the plan's last entry
+            ai = bisect.bisect_right(self.plan.ages, age) - 1
+            if ai < 0:
+                continue  # younger than the first planned age
+            frac = self.plan.fractions[ai]
+            for idx, sf_id in enumerate(self.node_ids):
+                if sf_id == self.golden_id:
+                    continue
+                target = int(round(frac.get(idx, 0.0) * len(segs)))
+                done_key = (stream, born, sf_id)
+                done = self._eroded.get(done_key, 0)
+                delta = target - done
+                if delta <= 0:
+                    continue
+                res = self.store.erode(
+                    stream, sf_id, segments=segs, count=delta,
+                    seed=self.seed + self.day + idx)
+                self._eroded[done_key] = done + res.segments
+                rep.segments += res.segments
+                rep.bytes += res.bytes
+                rep.chunks += res.chunks
+                rep.chunk_bytes += res.chunk_bytes
+                slot = rep.per_format.setdefault(
+                    sf_id, {"segments": 0, "bytes": 0, "chunks": 0,
+                            "chunk_bytes": 0})
+                slot["segments"] += res.segments
+                slot["bytes"] += res.bytes
+                slot["chunks"] += res.chunks
+                slot["chunk_bytes"] += res.chunk_bytes
+        if self.compact and rep.segments and self.store.backend.dead_bytes:
+            self.store.backend.compact()
+        rep.compactions = self.store.backend.compactions - before_compactions
+        rep.dead_bytes_after = self.store.backend.dead_bytes
+        self.total.segments += rep.segments
+        self.total.bytes += rep.bytes
+        self.total.chunks += rep.chunks
+        self.total.chunk_bytes += rep.chunk_bytes
+        return rep
+
+    def stats(self) -> dict:
+        return {
+            "day": self.day,
+            "cohorts": len(self._cohorts),
+            "eroded_segments": self.total.segments,
+            "eroded_bytes": self.total.bytes,
+            "eroded_chunks": self.total.chunks,
+            "eroded_chunk_bytes": self.total.chunk_bytes,
+        }

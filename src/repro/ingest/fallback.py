@@ -1,0 +1,223 @@
+"""Fallback-chain retrieval: serve a missing storage format from its
+nearest richer ancestor, bit-exactly.
+
+Storage formats form a *richer-than* tree rooted at the golden format (the
+same tree the erosion planner's chain math assumes, ``repro.core.erosion``).
+The live ingest path writes only golden synchronously; every other format is
+materialized later by transcoding **from its tree parent's blob** — a
+deterministic function of the parent bytes (``VideoStore.encode_format``).
+Because materialization and read-time reconstruction run the identical
+function on the identical parent bytes, a query served over the fallback
+chain sees *the same blob bytes* the materialized format would hold: queries
+issued mid-ingest (or after erosion reclaimed a format's segments) return
+items identical to a fully-materialized store, not merely accuracy-preserving
+approximations.
+
+Scope of that bit-exactness: it holds for stores whose non-golden formats
+were materialized by this golden-derived path (the ``IngestScheduler``).  A
+store populated by the blocking ``VideoStore.ingest_segment`` encodes every
+format from the original ingest frames, and the golden roundtrip is lossy —
+reconstruction of an *eroded* format there is accuracy-preserving (richer
+ancestor, R1) but not byte-identical to the deleted blob.
+
+``FallbackChain`` is installed on a ``VideoStore`` via ``set_fallback``; the
+store's ``_blob`` routes every decode path (direct retrieve, retrieve_many,
+the serving planner's ``decode_for``) through ``reconstruct`` on a miss.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+from ..core.knobs import IngestSpec, StorageFormat
+
+
+def build_parents(formats: dict[str, StorageFormat],
+                  golden_id: str | None = None
+                  ) -> tuple[str, dict[str, str]]:
+    """(golden_id, parent map) for a storage-format set.
+
+    Parent = nearest richer ancestor: among formats whose fidelity is
+    richer-than-or-equal, the one with minimal total fidelity rank
+    (tie-broken on sf id) — the same nearest-ancestor rule
+    ``repro.core.erosion._Chains`` builds its fallback chains with.  The
+    golden root must be richer-eq every other format (it is the knob-wise
+    join by construction)."""
+    if golden_id is None:
+        golden_id = "sf_g" if "sf_g" in formats else None
+    if golden_id is None:
+        roots = [sid for sid, sf in formats.items()
+                 if all(sf.fidelity.richer_eq(o.fidelity)
+                        for o in formats.values())]
+        if not roots:
+            raise ValueError("no golden root: no format is richer-eq all "
+                             "others")
+        golden_id = sorted(roots)[0]
+    root_f = formats[golden_id].fidelity
+    ids = sorted(formats)
+    parent: dict[str, str] = {}
+    for sid, sf in formats.items():
+        if sid == golden_id:
+            continue
+        if not root_f.richer_eq(sf.fidelity):
+            raise ValueError(f"golden {golden_id} is not richer-eq {sid}")
+        # strictly-richer candidates keep the tree acyclic (richness is a
+        # partial order); a format sharing golden's fidelity parents golden
+        cands = [oid for oid in ids
+                 if oid != sid and oid != golden_id
+                 and formats[oid].fidelity.richer(sf.fidelity)]
+        parent[sid] = min(
+            cands, key=lambda oid: (sum(formats[oid].fidelity.rank()), oid),
+            default=golden_id)
+    return golden_id, parent
+
+
+def chain_of(sf_id: str, golden_id: str, parents: dict[str, str]
+             ) -> list[str]:
+    """The fallback chain sf_id -> ... -> golden (inclusive)."""
+    chain = [sf_id]
+    while chain[-1] != golden_id:
+        chain.append(parents[chain[-1]])
+    return chain
+
+
+class FallbackChain:
+    """Reconstructs missing blobs from tree ancestors, with a small memo.
+
+    The memo caches reconstructed blob bytes keyed (stream, seg, sf_id) so
+    a multi-stage cascade that reads the same unmaterialized format several
+    times pays the transcode once.  Entries stay valid forever: a later
+    materialization of the same format writes byte-identical content (same
+    deterministic transcode from the same parent bytes)."""
+
+    def __init__(self, formats: dict[str, StorageFormat],
+                 spec: IngestSpec | None = None,
+                 golden_id: str | None = None, memo_blobs: int = 32):
+        self.formats = dict(formats)
+        self.spec = spec
+        self.golden_id, self.parents = build_parents(formats, golden_id)
+        self.memo_blobs = memo_blobs
+        self._memo: OrderedDict[tuple, bytes] = OrderedDict()
+        self._lock = threading.Lock()
+        self._inflight: dict[tuple, threading.Event] = {}
+        self.reconstructions = 0       # transcodes actually executed
+        self.fallback_reads = 0        # _blob misses served via the chain
+        self.per_format: dict[str, int] = {}
+
+    def depth(self, sf_id: str) -> int:
+        return len(chain_of(sf_id, self.golden_id, self.parents)) - 1
+
+    def invalidate(self, stream: str, seg: int) -> None:
+        """Drop memoized reconstructions of one segment — required when
+        the segment is *re-ingested* with different content (the memo's
+        stay-valid-forever rule assumes the golden source is immutable)."""
+        with self._lock:
+            for key in [k for k in self._memo
+                        if k[0] == stream and k[1] == seg]:
+                del self._memo[key]
+
+    # -- reconstruction ------------------------------------------------------
+    def can_reconstruct(self, store, stream: str, seg: int,
+                        sf_id: str) -> bool:
+        """True when some ancestor on the chain is materialized."""
+        for anc in chain_of(sf_id, self.golden_id, self.parents):
+            if store.has_segment(stream, seg, anc):
+                return True
+        return False
+
+    def reconstruct(self, store, stream: str, seg: int, sf_id: str) -> bytes:
+        """The exact blob bytes format ``sf_id`` would hold for this
+        segment, derived from the nearest materialized ancestor.  Raises
+        KeyError when no ancestor (not even golden) holds the segment."""
+        with self._lock:
+            self.fallback_reads += 1
+            self.per_format[sf_id] = self.per_format.get(sf_id, 0) + 1
+        return self._blob_of(store, stream, seg, sf_id)
+
+    def _blob_of(self, store, stream: str, seg: int, sf_id: str) -> bytes:
+        from ..videostore.video_store import _sf_key
+        key = (stream, seg, sf_id)
+        while True:
+            try:  # physical copy wins; KeyError = missing (or eroded)
+                return store.backend.get(_sf_key(sf_id, stream, seg))
+            except KeyError:
+                pass
+            # single-flight: concurrent misses on one blob elect a leader
+            # to run the (expensive, recursive) transcode; followers wait
+            # and re-check the memo instead of duplicating it
+            with self._lock:
+                memo = self._memo.get(key)
+                if memo is not None:
+                    self._memo.move_to_end(key)
+                    return memo
+                leader_ev = self._inflight.get(key)
+                if leader_ev is None:
+                    self._inflight[key] = threading.Event()
+            if leader_ev is not None:
+                leader_ev.wait()
+                continue  # re-check memo (or physical) on wakeup
+            try:
+                if sf_id == self.golden_id:
+                    raise KeyError(
+                        f"segment {stream}:{seg} missing everywhere "
+                        f"(golden {sf_id} not ingested)")
+                blob = self.transcode_from_parent(store, stream, seg, sf_id)
+                with self._lock:
+                    self.reconstructions += 1
+                    self._memo[key] = blob
+                    while len(self._memo) > self.memo_blobs:
+                        self._memo.popitem(last=False)
+                return blob
+            finally:
+                with self._lock:
+                    self._inflight.pop(key).set()
+
+    def transcode_from_parent(self, store, stream: str, seg: int,
+                              sf_id: str) -> bytes:
+        """Materialize ``sf_id``'s blob from its tree parent: dense-decode
+        the parent (recursively reconstructed if needed), convert fidelity,
+        encode with the format's own coding.  The single transcode function
+        the background scheduler also runs — so read-time reconstruction
+        and deferred materialization are byte-identical by construction."""
+        from ..codec import segment as codec
+        parent = self.parents[sf_id]
+        parent_blob = self._blob_of(store, stream, seg, parent)
+        parent_frames = codec.decode_segment(parent_blob)
+        return store.encode_format(parent_frames,
+                                   self.formats[parent].fidelity,
+                                   self.formats[sf_id])
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "fallback_reads": self.fallback_reads,
+                "reconstructions": self.reconstructions,
+                "per_format": dict(self.per_format),
+                "memo_blobs": len(self._memo),
+            }
+
+
+class ByteRatioProfiler:
+    """Deterministic profiler stand-in for chain math when no measured
+    profiler exists (e.g. the hand-built demo config): models retrieval
+    speed from decoded bytes — ``segment_seconds / (bytes_touched / rate)``
+    with a fixed penalty for entropy-coded formats.  Only *relative* speeds
+    matter to ``repro.core.erosion`` ranking; the rate is pitched low
+    enough that retrieval (not the consumer's own speed) is usually the
+    binding term, as in the paper's decode-bound regime — otherwise every
+    format would rank as free to erode/shed."""
+
+    def __init__(self, spec: IngestSpec, bytes_per_second: float = 5e6,
+                 coded_penalty: float = 4.0):
+        self.spec = spec
+        self.bytes_per_second = bytes_per_second
+        self.coded_penalty = coded_penalty
+
+    def retrieval_speed(self, sf: StorageFormat, cf) -> float:
+        n_cf, _, _ = self.spec.resolve(cf)
+        _, h, w = self.spec.resolve(sf.fidelity)
+        work = n_cf * h * w
+        if not sf.coding.bypass:
+            work *= self.coded_penalty
+        return self.spec.segment_seconds / (work / self.bytes_per_second)

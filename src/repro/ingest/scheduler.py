@@ -1,0 +1,375 @@
+"""Budgeted multi-stream ingest scheduler.
+
+The paper's ingestion contract (§4.3): the store must keep pace with many
+live camera streams under a bounded transcoding budget.  This scheduler
+splits one arriving segment's work in two:
+
+* **golden, synchronously** — the richest format is encoded and made durable
+  before ``ingest`` returns (the segment can never be lost; every other
+  format is derivable from it);
+* **everything else, in the background** — one transcode task per remaining
+  format goes onto a priority queue ordered by *recovery cost* (the erosion
+  chain math of ``repro.core.erosion.recovery_cost``: how much the consumer
+  fleet slows down if the format is absent and reads fall back to its
+  ancestor).  Under budget pressure the cheapest-to-recover formats are the
+  ones that wait (or are shed outright past a debt cap) — exactly the
+  formats whose fallback chain serves reads nearly as fast.
+
+The budget is a token bucket in *encode-seconds per video-second*: each
+arriving segment credits ``budget_x × segment_seconds``; the synchronous
+golden encode and every background transcode debit their measured cost.
+Background work only runs while credit is positive, so a budget below the
+full materialization cost accumulates *transcode debt* (estimated encode
+seconds still queued) that ``stats()`` surfaces per stream and per format —
+and that drains to zero once the budget is raised (``set_budget_x`` +
+``drain``), because shed tasks are kept re-enqueueable.
+
+Queries issued mid-ingest are correct throughout: unmaterialized formats are
+served over the fallback chain (``repro.ingest.fallback``) with bit-exact
+results, since the background worker and the read-time reconstruction run
+the identical golden-derived transcode.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import threading
+import time
+
+from ..core.erosion import recovery_cost
+from ..core.knobs import FidelityOption
+from .fallback import ByteRatioProfiler, FallbackChain
+
+
+@dataclasses.dataclass(order=True)
+class TranscodeTask:
+    """One deferred materialization, ordered most-expensive-to-recover
+    first (the head of the queue is the format the fleet misses most)."""
+    sort_key: tuple
+    stream: str = dataclasses.field(compare=False)
+    seg: int = dataclasses.field(compare=False)
+    sf_id: str = dataclasses.field(compare=False)
+    est_s: float = dataclasses.field(compare=False, default=0.0)
+
+
+@dataclasses.dataclass
+class _StreamState:
+    segments: int = 0
+    video_seconds: float = 0.0
+    golden_encode_s: float = 0.0
+    max_golden_lag_s: float = 0.0   # worst sync (durability) latency
+
+
+class IngestScheduler:
+    """Live ingestion front end for one ``VideoStore``."""
+
+    def __init__(self, store, config=None, *, budget_x: float | None = None,
+                 profiler=None, golden_id: str | None = None,
+                 shed_debt_s: float | None = None, ema: float = 0.3):
+        """``config`` (a DerivedConfig) supplies consumer subscriptions for
+        the recovery-cost ranking; ``profiler`` supplies measured retrieval
+        speeds for it (falling back to the deterministic byte-ratio model).
+        ``budget_x`` is the transcode-cycle budget in encode-seconds per
+        arriving video-second (None = unbounded).  ``shed_debt_s`` caps the
+        queue's estimated debt: beyond it the cheapest-to-recover tasks are
+        shed (kept aside, re-enqueueable via ``requeue_shed``)."""
+        if not store.formats:
+            raise ValueError("store has no formats installed")
+        self.store = store
+        self.spec = store.spec
+        self.budget_x = budget_x
+        self.shed_debt_s = shed_debt_s
+        self._ema = ema
+        self.fallback = FallbackChain(store.formats, store.spec,
+                                      golden_id=golden_id)
+        store.set_fallback(self.fallback)
+        self.golden_id = self.fallback.golden_id
+        self._rank = self._build_rank(config, profiler)
+        self._mu = threading.Lock()
+        self._work = threading.Condition(self._mu)
+        self._queue: list[TranscodeTask] = []   # kept sorted; [0] = next
+        self._shed: list[TranscodeTask] = []
+        self._est_s: dict[str, float] = {}      # sf_id -> EMA encode seconds
+        self._credit = 0.0
+        self._video_s_arrived = 0.0   # stream seconds admitted so far
+        self._spent_s = 0.0           # encode seconds spent (golden + bg)
+        self._streams: dict[str, _StreamState] = {}
+        self._stop = threading.Event()
+        self._worker: threading.Thread | None = None
+        self.transcodes = 0
+        self.transcode_s = 0.0
+        self.shed_total = 0
+        self.task_errors = 0
+        self.last_task_error: str | None = None
+        self._on_ingest: list = []   # callbacks(stream, seg) after golden
+
+    # -- ranking --------------------------------------------------------------
+    def _build_rank(self, config, profiler) -> dict[str, float]:
+        """sf_id -> recovery cost (higher = materialize sooner)."""
+        if config is not None:
+            prof = profiler or ByteRatioProfiler(self.spec)
+            subs = {}
+            for i, node in enumerate(config.nodes):
+                for p in node.plans:
+                    subs[p] = i
+            by_idx = recovery_cost(prof, config.nodes, subs)
+            return {config.node_id(i): c for i, c in by_idx.items()}
+        # no config: deeper formats are cheaper to recover (their parent is
+        # closer in fidelity), golden never queued anyway
+        return {sid: float("inf") if sid == self.golden_id
+                else 1.0 / (1.0 + self.fallback.depth(sid))
+                for sid in self.store.formats}
+
+    def recovery_rank(self) -> dict[str, float]:
+        return dict(self._rank)
+
+    # -- ingest (the synchronous golden path) ---------------------------------
+    def on_ingest(self, cb) -> None:
+        """Register ``cb(stream, seg)`` to run after each golden write
+        (the erosion executor uses this to place segments in age cohorts)."""
+        self._on_ingest.append(cb)
+
+    def ingest(self, stream: str, seg: int, frames_u8,
+               ingest_fidelity: FidelityOption | None = None) -> float:
+        """Admit one arriving segment: golden written durably before
+        returning, all other formats queued for background transcode.
+        Returns the golden (durability) latency in seconds."""
+        src_f = ingest_fidelity or FidelityOption()
+        self.fallback.invalidate(stream, seg)  # re-ingest: stale memos die
+        t0 = time.perf_counter()
+        blob = self.store.encode_format(
+            frames_u8, src_f, self.store.formats[self.golden_id])
+        golden_dt = time.perf_counter() - t0
+        self.store.put_segment(stream, seg, self.golden_id, blob,
+                               encode_s=golden_dt, count_segment=True)
+        with self._mu:
+            st = self._streams.setdefault(stream, _StreamState())
+            st.segments += 1
+            st.video_seconds += self.spec.segment_seconds
+            st.golden_encode_s += golden_dt
+            st.max_golden_lag_s = max(st.max_golden_lag_s, golden_dt)
+            self._video_s_arrived += self.spec.segment_seconds
+            self._spent_s += golden_dt
+            if self.budget_x is not None:
+                self._credit += (self.budget_x * self.spec.segment_seconds
+                                 - golden_dt)
+            for sf_id in self.store.formats:
+                if sf_id == self.golden_id:
+                    continue
+                task = TranscodeTask(
+                    self._sort_key(sf_id, seg, stream), stream, seg, sf_id,
+                    est_s=self._estimate(sf_id, golden_dt))
+                bisect.insort(self._queue, task)
+            self._shed_over_cap_locked()
+            self._work.notify_all()
+        for cb in self._on_ingest:
+            cb(stream, seg)
+        return golden_dt
+
+    def _sort_key(self, sf_id: str, seg: int, stream: str) -> tuple:
+        # most expensive to recover first; FIFO within a format's cost tier
+        return (-self._rank.get(sf_id, 0.0), self.fallback.depth(sf_id),
+                seg, stream, sf_id)
+
+    def _estimate(self, sf_id: str, golden_dt: float) -> float:
+        """Expected encode seconds for one segment of ``sf_id``: observed
+        EMA once available, else the golden cost scaled by raw-byte ratio."""
+        got = self._est_s.get(sf_id)
+        if got is not None:
+            return got
+        g = self.store.formats[self.golden_id].fidelity
+        f = self.store.formats[sf_id].fidelity
+        ratio = (self.spec.raw_bytes_per_segment(f)
+                 / max(1, self.spec.raw_bytes_per_segment(g)))
+        return max(1e-4, golden_dt * ratio)
+
+    def _shed_over_cap_locked(self):
+        if self.shed_debt_s is None:
+            return
+        while self._queue and self._debt_locked() > self.shed_debt_s:
+            task = self._queue.pop()  # tail = cheapest to recover
+            self._shed.append(task)
+            self.shed_total += 1
+
+    # -- background transcode -------------------------------------------------
+    def _debt_locked(self) -> float:
+        return sum(t.est_s for t in self._queue)
+
+    def debt_seconds(self) -> float:
+        """Estimated encode-seconds of queued (unshed) transcode work."""
+        with self._mu:
+            return self._debt_locked()
+
+    def pending(self) -> int:
+        with self._mu:
+            return len(self._queue)
+
+    def set_budget_x(self, budget_x: float | None):
+        """Raise/lower the transcode budget (None = unbounded).  A raise
+        re-credits the bucket retroactively — credit becomes at least
+        ``new_rate × video-seconds-arrived − encode-seconds-spent`` — and
+        wakes the worker, so accumulated debt the new budget can afford
+        starts draining immediately rather than waiting for new arrivals."""
+        with self._mu:
+            raised = budget_x is None or (self.budget_x is not None
+                                          and budget_x > self.budget_x)
+            self.budget_x = budget_x
+            if raised and budget_x is not None:
+                self._credit = max(
+                    self._credit,
+                    budget_x * self._video_s_arrived - self._spent_s)
+            self._work.notify_all()
+
+    def requeue_shed(self) -> int:
+        """Put shed tasks back on the queue (after a budget raise)."""
+        with self._mu:
+            n = len(self._shed)
+            for task in self._shed:
+                bisect.insort(self._queue, task)
+            self._shed.clear()
+            self._work.notify_all()
+            return n
+
+    def _pop_runnable_locked(self) -> TranscodeTask | None:
+        if not self._queue:
+            return None
+        if self.budget_x is not None and self._credit <= 0:
+            return None
+        return self._queue.pop(0)
+
+    def _run_task(self, task: TranscodeTask):
+        if self.store.has_segment(task.stream, task.seg, task.sf_id):
+            return  # raced with another materializer
+        t0 = time.perf_counter()
+        blob = self.fallback.transcode_from_parent(
+            self.store, task.stream, task.seg, task.sf_id)
+        dt = time.perf_counter() - t0
+        self.store.put_segment(task.stream, task.seg, task.sf_id, blob,
+                               encode_s=dt)
+        with self._mu:
+            self.transcodes += 1
+            self.transcode_s += dt
+            self._spent_s += dt
+            if self.budget_x is not None:
+                self._credit -= dt
+            prev = self._est_s.get(task.sf_id)
+            self._est_s[task.sf_id] = (dt if prev is None else
+                                       (1 - self._ema) * prev + self._ema * dt)
+
+    def _run_task_guarded(self, task: TranscodeTask, reraise: bool):
+        """Run one popped task; on failure park it with the shed set (so
+        ``requeue_shed`` can retry it — a popped task must never simply
+        vanish from the accounting) and optionally re-raise."""
+        try:
+            self._run_task(task)
+        except Exception as e:  # noqa: BLE001
+            with self._mu:
+                self.task_errors += 1
+                self.last_task_error = f"{type(e).__name__}: {e}"
+                self._shed.append(task)
+            if reraise:
+                raise
+
+    def pump(self, max_tasks: int | None = None) -> int:
+        """Synchronously run queued transcodes while budget credit lasts
+        (deterministic alternative to the worker thread).  Returns the
+        number of tasks completed."""
+        done = 0
+        while max_tasks is None or done < max_tasks:
+            with self._mu:
+                task = self._pop_runnable_locked()
+            if task is None:
+                break
+            self._run_task_guarded(task, reraise=True)
+            done += 1
+        return done
+
+    def drain(self, include_shed: bool = True) -> int:
+        """Run the whole queue to empty, ignoring budget credit (the
+        'budget raised' path).  Returns tasks completed."""
+        if include_shed:
+            self.requeue_shed()
+        done = 0
+        while True:
+            with self._mu:
+                if not self._queue:
+                    return done
+                task = self._queue.pop(0)
+            self._run_task_guarded(task, reraise=True)
+            done += 1
+
+    # -- worker thread --------------------------------------------------------
+    def start(self):
+        """Run background transcodes on a worker thread (budget-gated)."""
+        if self._worker is not None:
+            return
+        self._stop.clear()
+        self._worker = threading.Thread(target=self._worker_loop,
+                                        name="vstore-ingest", daemon=True)
+        self._worker.start()
+
+    def stop(self, drain: bool = False):
+        """Stop the worker; ``drain=True`` first empties the queue
+        (ignoring budget)."""
+        if drain:
+            self.drain()
+        self._stop.set()
+        with self._mu:
+            self._work.notify_all()
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+
+    def _worker_loop(self):
+        while not self._stop.is_set():
+            with self._mu:
+                task = self._pop_runnable_locked()
+                if task is None:
+                    self._work.wait(timeout=0.05)
+                    continue
+            self._run_task_guarded(task, reraise=False)  # keep worker alive
+
+    # -- stats ----------------------------------------------------------------
+    def stats(self) -> dict:
+        with self._mu:
+            streams = {}
+            for name, st in self._streams.items():
+                streams[name] = {
+                    "segments": st.segments,
+                    "video_seconds": st.video_seconds,
+                    "golden_encode_s": st.golden_encode_s,
+                    "golden_x": st.video_seconds
+                    / max(st.golden_encode_s, 1e-9),
+                    "max_golden_lag_s": st.max_golden_lag_s,
+                }
+            per_format: dict[str, dict] = {}
+            for sid in self.store.formats:
+                if sid == self.golden_id:
+                    continue
+                per_format[sid] = {"pending": 0, "est_debt_s": 0.0,
+                                   "shed": 0,
+                                   "recovery_cost": self._rank.get(sid, 0.0)}
+            for t in self._queue:
+                per_format[t.sf_id]["pending"] += 1
+                per_format[t.sf_id]["est_debt_s"] += t.est_s
+            for t in self._shed:
+                per_format[t.sf_id]["shed"] += 1
+            total_video = sum(st.video_seconds
+                              for st in self._streams.values())
+            return {
+                "streams": streams,
+                "formats": per_format,
+                "debt_s": self._debt_locked(),
+                "pending": len(self._queue),
+                "shed": len(self._shed),
+                "shed_total": self.shed_total,
+                "credit_s": self._credit,
+                "budget_x": self.budget_x,
+                "transcodes": self.transcodes,
+                "transcode_s": self.transcode_s,
+                "task_errors": self.task_errors,
+                "last_task_error": self.last_task_error,
+                "video_seconds": total_video,
+                "fallback": self.fallback.stats(),
+            }

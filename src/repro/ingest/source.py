@@ -1,0 +1,78 @@
+"""Deterministic simulated camera streams feeding the ingest scheduler.
+
+A ``StreamSource`` renders synthetic street-scene segments
+(``repro.analytics.scene``) on demand: segment ``i`` of stream ``s`` is a
+pure function of ``(s, i, spec)``, so two processes (or an ingest run and
+its later verification pass) see bit-identical footage.  ``interleave``
+merges several sources into one arrival order — round-robin by segment
+index, the way segments of concurrently recording cameras land at the
+store — optionally paced against the wall clock at a realtime multiple.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterator
+
+import numpy as np
+
+from ..analytics.scene import generate_segment
+from ..core.knobs import IngestSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One segment arriving from a camera."""
+    stream: str
+    seg: int
+    frames: np.ndarray          # uint8, ingest fidelity
+    t_video: float              # stream time (s) at which the segment ends
+
+
+class StreamSource:
+    """One simulated camera: deterministic segments at the ingest spec."""
+
+    def __init__(self, stream: str, spec: IngestSpec | None = None,
+                 n_segments: int | None = None, start_seg: int = 0):
+        self.stream = stream
+        self.spec = spec or IngestSpec()
+        self.n_segments = n_segments
+        self.start_seg = start_seg
+
+    def segment(self, seg: int) -> np.ndarray:
+        frames, _truth = generate_segment(self.stream, seg, self.spec)
+        return frames
+
+    def __iter__(self) -> Iterator[Arrival]:
+        seg = self.start_seg
+        while self.n_segments is None or seg < self.start_seg + self.n_segments:
+            yield Arrival(self.stream, seg, self.segment(seg),
+                          (seg - self.start_seg + 1)
+                          * self.spec.segment_seconds)
+            seg += 1
+
+
+def interleave(sources: list[StreamSource],
+               pace_x: float | None = None) -> Iterator[Arrival]:
+    """Round-robin arrival order across cameras: all streams' segment 0,
+    then segment 1, ...  With ``pace_x`` set, sleeps so arrivals land at
+    ``pace_x`` × realtime (1.0 = live cameras); None runs flat out."""
+    iters = [iter(s) for s in sources]
+    t0 = time.perf_counter()
+    done = [False] * len(iters)
+    while not all(done):
+        for i, it in enumerate(iters):
+            if done[i]:
+                continue
+            try:
+                arr = next(it)
+            except StopIteration:
+                done[i] = True
+                continue
+            if pace_x:
+                due = t0 + arr.t_video / pace_x
+                delay = due - time.perf_counter()
+                if delay > 0:
+                    time.sleep(delay)
+            yield arr

@@ -74,6 +74,8 @@ class VStoreServer:
         self._collapse = collapse
         self._live: dict[tuple, Future] = {}  # in-flight query key -> future
         self._attached = attach
+        self._ingest = None      # live-ingest scheduler (attach_ingest)
+        self._erosion = None     # erosion executor (attach_ingest)
         if attach:
             store.attach_retriever(self.planner.fetch)
         # aggregate stats
@@ -184,11 +186,23 @@ class VStoreServer:
         tickets = [self.submit(*s, block=block) for s in submissions]
         return [t.result() for t in tickets]
 
+    def attach_ingest(self, scheduler, erosion=None) -> None:
+        """Surface a live-ingest scheduler's (and optionally an erosion
+        executor's) per-stream/per-format lag, debt and reclaim stats
+        through this server's ``stats()`` — one observability endpoint for
+        the whole ingest -> store -> serve path."""
+        self._ingest = scheduler
+        self._erosion = erosion
+
     # -- stats / lifecycle ---------------------------------------------------
     def stats(self) -> dict:
+        ingest = self._ingest.stats() if self._ingest is not None else None
+        erosion = self._erosion.stats() if self._erosion is not None else None
         with self._mu:
             uptime = time.perf_counter() - self._t_up
             return {
+                "ingest": ingest,
+                "erosion": erosion,
                 "completed": self.completed,
                 "rejected": self.rejected,
                 "failed": self.failed,

@@ -1,9 +1,13 @@
 """On-disk segment store (LMDB-like: MB-size values behind a keyed index).
 
 Layout: ``root/shard-XXXX.bin`` append-only blob shards + ``root/index.msgpack``
-mapping key -> (shard, offset, length).  Deletes drop index entries (space is
-reclaimed by compaction).  This mirrors the paper's use of LMDB for 8-second
-MB-size segment values without an external dependency.
+mapping key -> (shard, offset, length).  Deletes drop index entries; the dead
+bytes they leave in the shards are tracked and reclaimed by compaction —
+either an explicit ``compact()`` or automatically once dead bytes exceed
+``auto_compact_frac`` of the store (erosion deletes many segments over time,
+so space reclamation must not depend on a manual call).  This mirrors the
+paper's use of LMDB for 8-second MB-size segment values without an external
+dependency.
 """
 
 from __future__ import annotations
@@ -17,14 +21,24 @@ _SHARD_LIMIT = 64 * 1024 * 1024
 
 
 class SegmentStore:
-    def __init__(self, root: str):
+    def __init__(self, root: str, auto_compact_frac: float | None = 0.5,
+                 auto_compact_min_bytes: int = 1 << 16):
+        if auto_compact_frac is not None and not 0 < auto_compact_frac <= 1:
+            raise ValueError(f"auto_compact_frac must be in (0, 1], "
+                             f"got {auto_compact_frac}")
         self.root = root
         os.makedirs(root, exist_ok=True)
+        self.auto_compact_frac = auto_compact_frac
+        self.auto_compact_min_bytes = auto_compact_min_bytes
         self._lock = threading.Lock()
         self._index: dict[str, tuple[int, int, int]] = {}
         self._shard_id = 0
         self._shard_size = 0
+        self._live_bytes = 0  # sum of indexed value lengths (incremental)
+        self._dead_bytes = 0  # shard bytes no index entry references
         self._gen = 0  # bumped by compact(); lets readers detect shard rewrites
+        self.compactions = 0  # total (manual + automatic)
+        self.auto_compactions = 0
         self._load()
 
     # -- persistence --------------------------------------------------------
@@ -35,19 +49,37 @@ class SegmentStore:
         return os.path.join(self.root, f"shard-{sid:04d}.bin")
 
     def _load(self):
-        if os.path.exists(self._index_path()):
-            with open(self._index_path(), "rb") as f:
-                raw = msgpack.unpackb(f.read())
-            self._index = {k: tuple(v) for k, v in raw["index"].items()}
-            self._shard_id = raw["shard_id"]
-            self._shard_size = raw["shard_size"]
+        if not os.path.exists(self._index_path()):
+            return
+        with open(self._index_path(), "rb") as f:
+            raw = msgpack.unpackb(f.read())
+        self._index = {k: tuple(v) for k, v in raw["index"].items()}
+        self._shard_id = raw["shard_id"]
+        self._shard_size = raw["shard_size"]
+        self._live_bytes = sum(v[2] for v in self._index.values())
+        self._dead_bytes = raw.get("dead_bytes", 0)
+        # drop shard files the durable index no longer references — the
+        # garbage a crash may leave on either side of a compaction (old
+        # shards not yet removed, or new shards written before the index
+        # flush); never data loss, because compaction makes the new index
+        # durable before deleting the old shards
+        live = {v[0] for v in self._index.values()} | {self._shard_id}
+        for name in os.listdir(self.root):
+            if name.startswith("shard-") and name.endswith(".bin"):
+                sid = int(name[6:-4])
+                if sid not in live:
+                    os.remove(os.path.join(self.root, name))
 
     def flush(self):
         with self._lock:
-            blob = msgpack.packb({
-                "index": {k: list(v) for k, v in self._index.items()},
-                "shard_id": self._shard_id, "shard_size": self._shard_size,
-            })
+            self._flush_locked()
+
+    def _flush_locked(self):
+        blob = msgpack.packb({
+            "index": {k: list(v) for k, v in self._index.items()},
+            "shard_id": self._shard_id, "shard_size": self._shard_size,
+            "dead_bytes": self._dead_bytes,
+        })
         tmp = self._index_path() + ".tmp"
         with open(tmp, "wb") as f:
             f.write(blob)
@@ -65,7 +97,13 @@ class SegmentStore:
                 offset = f.tell()
                 f.write(value)
             self._shard_size = offset + len(value)
+            old = self._index.get(key)
+            if old is not None:
+                self._dead_bytes += old[2]
+                self._live_bytes -= old[2]
             self._index[key] = (sid, offset, len(value))
+            self._live_bytes += len(value)
+            self._maybe_compact_locked()
 
     def get(self, key: str) -> bytes:
         # Optimistic read: snapshot the index entry under the lock, read the
@@ -93,7 +131,13 @@ class SegmentStore:
 
     def delete(self, key: str) -> bool:
         with self._lock:
-            return self._index.pop(key, None) is not None
+            entry = self._index.pop(key, None)
+            if entry is None:
+                return False
+            self._dead_bytes += entry[2]
+            self._live_bytes -= entry[2]
+            self._maybe_compact_locked()
+            return True
 
     def __contains__(self, key: str) -> bool:
         with self._lock:
@@ -112,34 +156,63 @@ class SegmentStore:
             return sum(v[2] for k, v in self._index.items()
                        if k.startswith(prefix))
 
+    @property
+    def dead_bytes(self) -> int:
+        """Shard bytes deletes/overwrites orphaned (reclaimed by compact)."""
+        with self._lock:
+            return self._dead_bytes
+
+    def _maybe_compact_locked(self):
+        """Auto-compaction check (caller holds the lock): rewrite the shards
+        once orphaned bytes exceed ``auto_compact_frac`` of the store (the
+        rewrite itself makes the index durable before deleting shards)."""
+        if self.auto_compact_frac is None:
+            return
+        if (self._dead_bytes >= self.auto_compact_min_bytes
+                and self._dead_bytes > self.auto_compact_frac
+                * max(1, self._live_bytes + self._dead_bytes)):
+            self._compact_locked()
+            self.auto_compactions += 1
+
     def compact(self):
         """Rewrite shards dropping deleted blobs (reclaims space)."""
         with self._lock:
-            items = sorted(self._index.items())
-            new_index, sid, size = {}, 0, 0
-            out = open(self._shard_path(10000), "wb")  # temp shard namespace
-            paths = [out.name]
-            for key, (osid, off, ln) in items:
-                with open(self._shard_path(osid), "rb") as f:
-                    f.seek(off)
-                    blob = f.read(ln)
-                if size + ln > _SHARD_LIMIT and size:
-                    out.close()
-                    sid += 1
-                    out = open(self._shard_path(10000 + sid), "wb")
-                    paths.append(out.name)
-                    size = 0
-                new_index[key] = (sid, size, ln)
-                out.write(blob)
-                size += ln
-            out.close()
-            for name in os.listdir(self.root):
-                if name.startswith("shard-") and \
-                        int(name[6:].split(".")[0]) < 10000:
-                    os.remove(os.path.join(self.root, name))
-            for i, p in enumerate(paths):
-                os.replace(p, self._shard_path(i))
-            self._index = new_index
-            self._shard_id, self._shard_size = sid, size
-            self._gen += 1
-        self.flush()
+            self._compact_locked()
+
+    def _compact_locked(self):
+        """Crash-safe rewrite: surviving blobs are copied into *fresh*
+        shard ids (never reusing old names, so no renames), the index is
+        made durable pointing at them, and only then are the old shards
+        deleted.  A crash at any point leaves a readable store — before
+        the index flush the old index + old shards are intact (new shards
+        are orphans ``_load`` cleans up); after it, the new layout is live
+        (old shards are the orphans)."""
+        old_sids = {v[0] for v in self._index.values()} | {self._shard_id}
+        base = self._shard_id + 1
+        items = sorted(self._index.items())
+        new_index, si, size = {}, 0, 0
+        out = open(self._shard_path(base), "wb")
+        for key, (osid, off, ln) in items:
+            with open(self._shard_path(osid), "rb") as f:
+                f.seek(off)
+                blob = f.read(ln)
+            if size + ln > _SHARD_LIMIT and size:
+                out.close()
+                si += 1
+                out = open(self._shard_path(base + si), "wb")
+                size = 0
+            new_index[key] = (base + si, size, ln)
+            out.write(blob)
+            size += ln
+        out.close()
+        self._index = new_index
+        self._shard_id, self._shard_size = base + si, size
+        self._live_bytes = sum(v[2] for v in new_index.values())
+        self._dead_bytes = 0
+        self._gen += 1
+        self.compactions += 1
+        self._flush_locked()  # durable before the destructive deletes
+        for sid in old_sids:
+            path = self._shard_path(sid)
+            if os.path.exists(path):
+                os.remove(path)

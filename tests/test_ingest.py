@@ -1,0 +1,444 @@
+"""Live ingestion subsystem (repro.ingest): budgeted scheduler, bit-exact
+fallback-chain retrieval, erosion executor, stratified erode byte
+accounting, and SegmentStore auto-compaction."""
+
+import numpy as np
+import pytest
+
+from repro.analytics.query import run_query
+from repro.analytics.scene import generate_segment
+from repro.core.coalesce import SFNode
+from repro.core.configure import DerivedConfig
+from repro.core.consumption import Consumer, ConsumerPlan
+from repro.core.erosion import ErosionPlan
+from repro.core.knobs import (GOLDEN_CODING, RAW, CodingOption,
+                              FidelityOption, IngestSpec, StorageFormat)
+from repro.ingest import (ErosionExecutor, IngestScheduler, StreamSource,
+                          build_parents, chain_of, interleave)
+from repro.serving import VStoreServer
+from repro.videostore import SegmentStore, VideoStore
+from repro.videostore.video_store import _sf_key, stratified_pick
+
+SPEC = IngestSpec()
+
+CF_LOW = FidelityOption("bad", 1.0, 180, 1 / 5)
+CF_MID = FidelityOption("good", 1.0, 360, 1 / 2)
+CF_HI = FidelityOption("best", 1.0, 540, 1 / 2)
+
+
+def _mini_config() -> DerivedConfig:
+    """Three-format chain low -> mid -> golden with query A's cascade ops
+    subscribed across it (hand-built: no profiling)."""
+    plans = [
+        ConsumerPlan(Consumer("diff", 0.8), CF_LOW, 0.85, 2000.0),
+        ConsumerPlan(Consumer("snn", 0.8), CF_MID, 0.86, 400.0),
+        ConsumerPlan(Consumer("nn", 0.8), CF_HI, 0.82, 30.0),
+    ]
+    nodes = [
+        SFNode(CF_LOW, RAW, [plans[0]]),
+        SFNode(CF_MID, CodingOption("fast", 10), [plans[1]]),
+        SFNode(CF_HI, GOLDEN_CODING, [plans[2]], golden=True),
+    ]
+
+    class _Log:
+        ingest_cost = storage_cost = 0.0
+        rounds = []
+        budget_met = True
+
+    _Log.nodes = nodes
+    return DerivedConfig(plans=plans, nodes=nodes, coalesce_log=_Log())
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return _mini_config()
+
+
+def _golden_only_store(tmp_path, cfg, streams=("jackson",), n_segs=2,
+                       budget_x=0.0):
+    vs = VideoStore(str(tmp_path / "vs"), SPEC)
+    vs.set_formats(cfg.storage_formats())
+    sched = IngestScheduler(vs, cfg, budget_x=budget_x)
+    for stream in streams:
+        for seg in range(n_segs):
+            frames, _ = generate_segment(stream, seg, SPEC)
+            sched.ingest(stream, seg, frames)
+    return vs, sched
+
+
+# -- format tree ------------------------------------------------------------
+
+def test_build_parents_chain(cfg):
+    formats = cfg.storage_formats()
+    golden_id, parents = build_parents(formats)
+    assert golden_id == "sf_g"
+    low = cfg.subscription(CF_LOW)
+    mid = cfg.subscription(CF_MID)
+    assert parents[low] == mid and parents[mid] == "sf_g"
+    assert chain_of(low, golden_id, parents) == [low, mid, "sf_g"]
+
+
+def test_build_parents_rejects_no_root():
+    a = StorageFormat(FidelityOption("best", 1.0, 720, 1 / 5), RAW)
+    b = StorageFormat(FidelityOption("bad", 1.0, 180, 1.0), RAW)
+    with pytest.raises(ValueError):
+        build_parents({"x": a, "y": b})
+
+
+# -- fallback-chain retrieval ----------------------------------------------
+
+def test_fallback_blob_bit_exact(tmp_path, cfg):
+    """Read-time reconstruction of an unmaterialized format produces the
+    exact bytes the background transcoder later writes."""
+    vs, sched = _golden_only_store(tmp_path, cfg)
+    low = cfg.subscription(CF_LOW)
+    mid = cfg.subscription(CF_MID)
+    assert not vs.has_segment("jackson", 0, low)
+    recon = {sid: sched.fallback.reconstruct(vs, "jackson", 0, sid)
+             for sid in (low, mid)}
+    assert sched.drain() == 4  # 2 segments x 2 deferred formats
+    for sid, blob in recon.items():
+        assert vs.backend.get(_sf_key(sid, "jackson", 0)) == blob
+
+
+def test_query_mid_ingest_identical(tmp_path, cfg):
+    """A cascade run while only golden exists returns items identical to
+    the fully materialized store."""
+    vs, sched = _golden_only_store(tmp_path, cfg)
+    segs = [0, 1]
+    mid = run_query(vs, cfg, "A", "jackson", segs, 0.8)
+    assert sched.pending() == 4
+    fb = sched.fallback.stats()
+    assert fb["fallback_reads"] > 0
+    sched.drain()
+    full = run_query(vs, cfg, "A", "jackson", segs, 0.8)
+    assert mid.items == full.items
+
+
+def test_fallback_after_erosion_identical(tmp_path, cfg):
+    """Eroding a format's segments does not change query answers: reads
+    fall back to the ancestor and reconstruct the identical blob."""
+    vs, sched = _golden_only_store(tmp_path, cfg)
+    sched.drain()
+    before = run_query(vs, cfg, "A", "jackson", [0, 1], 0.8)
+    low = cfg.subscription(CF_LOW)
+    res = vs.erode("jackson", low, 1.0)
+    assert res.segments == 2
+    after = run_query(vs, cfg, "A", "jackson", [0, 1], 0.8)
+    assert after.items == before.items
+
+
+def test_missing_golden_raises(tmp_path, cfg):
+    vs, sched = _golden_only_store(tmp_path, cfg, n_segs=1)
+    with pytest.raises(KeyError):
+        vs.retrieve("jackson", 7, cfg.subscription(CF_LOW), CF_LOW)
+    assert vs.can_serve("jackson", 0, cfg.subscription(CF_LOW))
+    assert not vs.can_serve("jackson", 7, cfg.subscription(CF_LOW))
+
+
+# -- scheduler budget / debt / shedding ------------------------------------
+
+def test_scheduler_budget_gates_background(tmp_path, cfg):
+    vs, sched = _golden_only_store(tmp_path, cfg, budget_x=0.0)
+    assert sched.pump() == 0            # no credit: nothing runs
+    st = sched.stats()
+    assert st["debt_s"] > 0 and st["pending"] == 4
+    assert st["streams"]["jackson"]["segments"] == 2
+    sched.set_budget_x(None)
+    assert sched.pump() == 4            # unbounded: queue drains
+    assert sched.debt_seconds() == 0
+    for sid in cfg.storage_formats():
+        assert vs.available_segments("jackson", sid) == [0, 1]
+
+
+def test_scheduler_priority_order(tmp_path, cfg):
+    """Most-expensive-to-recover formats materialize first; the rank comes
+    from the erosion chain math (absence of mid hurts its consumer more
+    than absence of low, whose fallback is the nearby mid)."""
+    vs, sched = _golden_only_store(tmp_path, cfg, budget_x=0.0)
+    rank = sched.recovery_rank()
+    low = cfg.subscription(CF_LOW)
+    mid = cfg.subscription(CF_MID)
+    assert rank["sf_g"] == float("inf")
+    first = sorted({low, mid},
+                   key=lambda sid: -rank[sid])[0]
+    sched.set_budget_x(None)
+    sched.pump(max_tasks=1)
+    done = [sid for sid in (low, mid)
+            if vs.has_segment("jackson", 0, sid)]
+    assert done == [first]
+
+
+def test_budget_raise_recredits_retroactively(tmp_path, cfg):
+    """Raising to a *finite* budget that covers the arrived footage must
+    drain the debt immediately — the bucket is re-credited as
+    rate x video-arrived - spent, not left at its accumulated deficit."""
+    vs, sched = _golden_only_store(tmp_path, cfg, budget_x=0.0)
+    assert sched.stats()["credit_s"] < 0   # golden overran the zero budget
+    assert sched.pump() == 0
+    sched.set_budget_x(100.0)              # generous but finite
+    assert sched.stats()["credit_s"] > 0
+    assert sched.pump() == 4
+    assert sched.debt_seconds() == 0
+
+
+def test_scheduler_shed_and_requeue(tmp_path, cfg):
+    vs = VideoStore(str(tmp_path / "vs"), SPEC)
+    vs.set_formats(cfg.storage_formats())
+    sched = IngestScheduler(vs, cfg, budget_x=0.0, shed_debt_s=0.0)
+    frames, _ = generate_segment("jackson", 0, SPEC)
+    sched.ingest("jackson", 0, frames)
+    st = sched.stats()
+    assert st["pending"] == 0 and st["shed"] == 2  # everything shed
+    assert sched.requeue_shed() == 2
+    sched.set_budget_x(None)
+    assert sched.drain() == 2
+    assert sched.stats()["shed"] == 0
+
+
+def test_stream_source_deterministic():
+    src = StreamSource("jackson", SPEC, n_segments=2)
+    arrs = list(src)
+    assert [a.seg for a in arrs] == [0, 1]
+    again = list(StreamSource("jackson", SPEC, n_segments=2))
+    assert all(np.array_equal(a.frames, b.frames)
+               for a, b in zip(arrs, again))
+    order = [(a.stream, a.seg) for a in interleave(
+        [StreamSource("a", SPEC, 2), StreamSource("b", SPEC, 2)])]
+    assert order == [("a", 0), ("b", 0), ("a", 1), ("b", 1)]
+
+
+# -- concurrent ingest + serve (the stress test) ----------------------------
+
+def test_server_queries_during_materialization(tmp_path, cfg):
+    """VStoreServer answers cascades (fallback-chain retrieval through the
+    planner) while the scheduler's worker thread is still materializing
+    formats; every answer matches the fully-ingested store."""
+    streams = ("jackson", "tucson")
+    n_segs = 2
+    vs = VideoStore(str(tmp_path / "vs"), SPEC)
+    vs.set_formats(cfg.storage_formats())
+    # reference: an independently fully-ingested store via the same
+    # golden-derived path (blocking drain after each segment)
+    ref = VideoStore(str(tmp_path / "ref"), SPEC)
+    ref.set_formats(cfg.storage_formats())
+    ref_sched = IngestScheduler(ref, cfg)
+    truth = {}
+    for stream in streams:
+        for seg in range(n_segs):
+            frames, _ = generate_segment(stream, seg, SPEC)
+            ref_sched.ingest(stream, seg, frames)
+    ref_sched.drain()
+    for stream in streams:
+        truth[stream] = run_query(ref, cfg, "A", stream,
+                                  list(range(n_segs)), 0.8).items
+
+    sched = IngestScheduler(vs, cfg, budget_x=0.02)  # a trickle: the
+    # worker materializes slowly while queries run against fallback
+    sched.start()
+    try:
+        with VStoreServer(vs, cfg, workers=2) as srv:
+            srv.attach_ingest(sched)
+            tickets = []
+            for stream in streams:
+                for seg in range(n_segs):
+                    frames, _ = generate_segment(stream, seg, SPEC)
+                    sched.ingest(stream, seg, frames)
+                # query everything golden-ingested so far, mid-ingest
+                tickets.append((stream, srv.submit(
+                    "A", stream, list(range(n_segs)), 0.8, block=True)))
+            results = [(s, t.result()) for s, t in tickets]
+            stats = srv.stats()
+    finally:
+        sched.stop(drain=True)
+    assert stats["ingest"] is not None
+    for stream, res in results:
+        assert res.items == truth[stream], stream
+    # and after the drain the store serves the same answers physically
+    for stream in streams:
+        assert run_query(vs, cfg, "A", stream, list(range(n_segs)),
+                         0.8).items == truth[stream]
+        for sid in cfg.storage_formats():
+            assert vs.available_segments(stream, sid) == list(range(n_segs))
+
+
+# -- erode: stratified spread + byte accounting -----------------------------
+
+def test_stratified_pick_spread_and_determinism():
+    items = list(range(20))
+    picks = stratified_pick(items, 5, seed=7)
+    assert picks == stratified_pick(items, 5, seed=7)
+    assert len(picks) == len(set(picks)) == 5
+    # one victim per stratum of 4: no two picks land in one stratum
+    assert all(b - a >= 2 for a, b in zip(picks, picks[1:]))
+    assert stratified_pick(items, 5, seed=1) != picks
+    assert stratified_pick(items, 25, seed=0) == items
+    assert stratified_pick([], 3, seed=0) == []
+
+
+def test_erode_returns_bytes(tmp_path, cfg):
+    vs, sched = _golden_only_store(tmp_path, cfg, n_segs=4)
+    sched.drain()
+    mid = cfg.subscription(CF_MID)
+    sizes = {s: vs.backend.size_of(_sf_key(mid, "jackson", s))
+             for s in range(4)}
+    res = vs.erode("jackson", mid, 0.5, seed=3)
+    assert res.segments == 2 and len(res.victims) == 2
+    assert res.bytes == sum(sizes[s] for s in res.victims)
+    assert res.chunks > 0 and 0 < res.chunk_bytes <= res.bytes
+    # deterministic: the same seed picks the same victims
+    vs2, sched2 = _golden_only_store(tmp_path / "b", cfg, n_segs=4)
+    sched2.drain()
+    assert vs2.erode("jackson", mid, 0.5, seed=3).victims == res.victims
+
+
+def test_erode_subset_and_count(tmp_path, cfg):
+    vs, sched = _golden_only_store(tmp_path, cfg, n_segs=4)
+    sched.drain()
+    low = cfg.subscription(CF_LOW)
+    res = vs.erode("jackson", low, segments=[0, 1], count=1)
+    assert res.segments == 1 and res.victims[0] in (0, 1)
+    assert res.chunks == 0 and res.chunk_bytes > 0  # RAW: chunkless payload
+    left = vs.available_segments("jackson", low)
+    assert len(left) == 3 and {2, 3} <= set(left)
+
+
+def test_ingest_stats_chunk_spans(tmp_path, cfg):
+    vs, sched = _golden_only_store(tmp_path, cfg, n_segs=1)
+    sched.drain()
+    st = vs.ingest_stats["jackson"]
+    assert st.segments == 1
+    assert st.chunks > 0           # golden + mid are entropy-coded
+    assert 0 < st.chunk_bytes <= st.stored_bytes
+
+
+# -- erosion executor -------------------------------------------------------
+
+def test_erosion_executor_age_schedule(tmp_path, cfg):
+    vs, sched = _golden_only_store(tmp_path, cfg, n_segs=4)
+    sched.drain()
+    low = cfg.subscription(CF_LOW)
+    mid = cfg.subscription(CF_MID)
+    low_idx = next(i for i in range(3) if cfg.node_id(i) == low)
+    plan = ErosionPlan(k=1.0, ages=[1, 2],
+                       fractions=[{low_idx: 0.5}, {low_idx: 1.0}],
+                       overall_speed=[0.9, 0.8], daily_bytes=[0, 0],
+                       total_bytes=0, feasible=True)
+    ex = ErosionExecutor(vs, plan, [cfg.node_id(i) for i in range(3)])
+    ex.register_existing(["jackson"])
+    b0 = vs.storage_bytes("jackson")
+
+    rep1 = ex.advance()
+    assert rep1.segments == 2 and rep1.bytes > 0
+    assert len(vs.available_segments("jackson", low)) == 2
+    rep2 = ex.advance()
+    assert rep2.segments == 2
+    assert vs.available_segments("jackson", low) == []
+    # plan saturates at its last age: nothing more to erode
+    assert ex.advance().segments == 0
+    # golden and unplanned formats intact; bytes actually reclaimed
+    assert len(vs.available_segments("jackson", "sf_g")) == 4
+    assert len(vs.available_segments("jackson", mid)) == 4
+    assert vs.storage_bytes("jackson") == b0 - rep1.bytes - rep2.bytes
+    assert vs.backend.dead_bytes == 0  # compaction reclaimed the shards
+    assert ex.stats()["eroded_segments"] == 4
+
+
+def test_erosion_executor_cohorts_by_day(tmp_path, cfg):
+    """Segments ingested on different days erode on their own schedules."""
+    vs = VideoStore(str(tmp_path / "vs"), SPEC)
+    vs.set_formats(cfg.storage_formats())
+    sched = IngestScheduler(vs, cfg)
+    low = cfg.subscription(CF_LOW)
+    low_idx = next(i for i in range(3) if cfg.node_id(i) == low)
+    plan = ErosionPlan(k=1.0, ages=[1, 2],
+                       fractions=[{low_idx: 0.0}, {low_idx: 1.0}],
+                       overall_speed=[1.0, 0.8], daily_bytes=[0, 0],
+                       total_bytes=0, feasible=True)
+    ex = ErosionExecutor(vs, plan, [cfg.node_id(i) for i in range(3)])
+    sched.on_ingest(ex.note_ingested)
+
+    def ingest(seg):
+        frames, _ = generate_segment("jackson", seg, SPEC)
+        sched.ingest("jackson", seg, frames)
+
+    ingest(0)                      # day 0 cohort
+    sched.drain()
+    rep = ex.advance()             # day 1: age 1 -> fraction 0
+    assert rep.segments == 0
+    ingest(1)                      # day 1 cohort
+    sched.drain()
+    rep = ex.advance()             # day 2: seg 0 is age 2 -> fully eroded
+    assert rep.segments == 1
+    assert vs.available_segments("jackson", low) == [1]
+    rep = ex.advance()             # day 3: seg 1 reaches age 2
+    assert rep.segments == 1
+    assert vs.available_segments("jackson", low) == []
+
+
+# -- SegmentStore auto-compaction ------------------------------------------
+
+def test_auto_compact_on_delete(tmp_path):
+    s = SegmentStore(str(tmp_path / "kv"), auto_compact_frac=0.4,
+                     auto_compact_min_bytes=0)
+    for i in range(10):
+        s.put(f"k{i}", bytes([i]) * 4000)
+    assert s.auto_compactions == 0
+    for i in range(5):
+        s.delete(f"k{i}")
+    assert s.auto_compactions >= 1
+    assert s.dead_bytes == 0
+    for i in range(5, 10):
+        assert s.get(f"k{i}") == bytes([i]) * 4000
+    # the compacted index is durable: a reload sees the new layout
+    s2 = SegmentStore(str(tmp_path / "kv"))
+    assert s2.get("k7") == bytes([7]) * 4000
+
+
+def test_auto_compact_on_overwrite(tmp_path):
+    s = SegmentStore(str(tmp_path / "kv"), auto_compact_frac=0.4,
+                     auto_compact_min_bytes=0)
+    s.put("a", b"x" * 4000)
+    s.put("b", b"y" * 4000)
+    s.put("a", b"z" * 4000)   # orphans the old value
+    s.put("a", b"w" * 4000)
+    assert s.auto_compactions >= 1 and s.dead_bytes == 0
+    assert s.get("a") == b"w" * 4000 and s.get("b") == b"y" * 4000
+
+
+def test_compact_is_crash_safe_layout(tmp_path):
+    """Compaction copies survivors into fresh shard ids and makes the
+    index durable before deleting old shards — a reload mid-sequence can
+    never resolve stale offsets into new files.  Orphan shards (what a
+    crash leaves on either side of the flush) are swept on load."""
+    import os
+    s = SegmentStore(str(tmp_path / "kv"), auto_compact_frac=None)
+    for i in range(6):
+        s.put(f"k{i}", bytes([i]) * 3000)
+    for i in range(3):
+        s.delete(f"k{i}")
+    s.compact()
+    # fresh ids: the pre-compaction shard file name is gone, not reused
+    assert not os.path.exists(os.path.join(s.root, "shard-0000.bin"))
+    # the durable index already points at the new layout
+    s2 = SegmentStore(str(tmp_path / "kv"))
+    for i in range(3, 6):
+        assert s2.get(f"k{i}") == bytes([i]) * 3000
+    # a crash-orphaned shard is cleaned up by load, data intact
+    orphan = os.path.join(s.root, "shard-0042.bin")
+    with open(orphan, "wb") as f:
+        f.write(b"garbage")
+    s3 = SegmentStore(str(tmp_path / "kv"))
+    assert not os.path.exists(orphan)
+    assert s3.get("k4") == bytes([4]) * 3000
+
+
+def test_auto_compact_disabled(tmp_path):
+    s = SegmentStore(str(tmp_path / "kv"), auto_compact_frac=None)
+    for i in range(4):
+        s.put(f"k{i}", bytes([i]) * 4000)
+    for i in range(4):
+        s.delete(f"k{i}")
+    assert s.auto_compactions == 0 and s.dead_bytes == 16000
+    s.compact()
+    assert s.dead_bytes == 0

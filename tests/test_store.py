@@ -130,8 +130,11 @@ def test_meta_persistence(store, tmp_path):
 def test_erosion_exec(store):
     before = store.available_segments("jackson", "sf1")
     assert len(before) == 2
-    deleted = store.erode("jackson", "sf1", 0.5)
-    assert deleted == 1
+    size_of = {s: store.backend.size_of(f"jackson:sf1:{s:06d}")
+               for s in before}
+    res = store.erode("jackson", "sf1", 0.5)
+    assert res.segments == 1 and len(res.victims) == 1
+    assert res.bytes == size_of[res.victims[0]] > 0
     assert len(store.available_segments("jackson", "sf1")) == 1
     # golden untouched
     assert len(store.available_segments("jackson", "sf_g")) == 2
