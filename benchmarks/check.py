@@ -26,7 +26,7 @@ from __future__ import annotations
 ID_KEYS = {
     "mode", "config", "query", "op", "acc", "kint", "n", "step", "q",
     "res", "segments", "arch", "shape", "budget_frac", "sampling",
-    "streams",
+    "streams", "shards",
 }
 # measured same-host ratio metrics guarded with a factor (absolute *_x
 # x-realtime speeds are deliberately excluded — host-speed dependent)
@@ -36,8 +36,21 @@ BOOL_VALUES = {"True", "False"}
 # boolean claims that encode an absolute-speed threshold (e.g. "golden
 # encode >= 1x realtime") — true on any reasonable host but a property of
 # the machine, not the code, so excluded from the exact gate for the same
-# reason the *_x speeds are
-HOST_SPEED_BOOL_KEYS = {"golden_realtime"}
+# reason the *_x speeds are.  "scales" (cluster_scaling's >= 1.5x process
+# speedup) is host-capacity-dependent the same way: overcommitted CI
+# sandboxes grant two busy processes well under 2 cores of real time.
+# "scales_to_host" normalizes by a measured spin-loop capacity, but that
+# calibration is systematically optimistic (no memory/IPC contention) and
+# sampled at a different moment than the timed windows, so it stays
+# informative rather than exactly gated; the factor-gated `speedup` ratio
+# is the enforceable scaling regression guard.
+HOST_SPEED_BOOL_KEYS = {"golden_realtime", "scales", "scales_to_host"}
+# absolute floors for specific (bench, metric) pairs, applied on top of
+# the relative factor: cluster_scaling's speedup is host-capacity-capped
+# (so its factor floor lands below 1.0), but a cluster that fails to beat
+# one process AT ALL is a code regression, not host noise — the most
+# overcommitted sandbox observed still measures >= 1.2
+ABS_MIN = {("cluster_scaling", "speedup"): 1.1}
 
 
 def parse_derived(derived: str) -> dict[str, str]:
@@ -100,13 +113,15 @@ def check_rows(baseline_rows: list[dict], rows: list[dict],
             continue
         for k, base in _guarded(kv).items():
             got = cur.get(k)
+            floor = max(base * factor, ABS_MIN.get((b["name"], k), 0.0))
             if got is None:
                 violations.append(f"{b['name']}{dict(key[1])}: metric "
                                   f"{k} missing")
-            elif got < base * factor:
+            elif got < floor:
                 violations.append(
                     f"{b['name']}{dict(key[1])}: {k}={got:g} fell below "
-                    f"{factor:g}x baseline ({base:g})")
+                    f"its floor ({floor:g}; baseline {base:g}, "
+                    f"factor {factor:g})")
         for k, v in kv.items():
             if v != "True" or k in HOST_SPEED_BOOL_KEYS:
                 continue

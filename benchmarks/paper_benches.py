@@ -474,6 +474,130 @@ def bench_ingest_live(tmp_root="/tmp/repro_bench_ingest"):
         f"post_erosion_identical={res.items == mid['A'].items}")
 
 
+_BURN_SRC = ("import time\n"
+             "t0 = time.perf_counter(); n = 0\n"
+             "while time.perf_counter() - t0 < 0.5: n += 1\n"
+             "print(n)\n")
+
+
+def _host_parallel_x() -> float:
+    """How much *parallel* CPU this host actually grants two busy
+    processes, as a multiple of one process's throughput (~2.0 on a real
+    2-core box; overcommitted CI sandboxes measurably sit near 1.2-1.5).
+    The cluster_scaling speedup is bounded above by this number, so the
+    bench reports it alongside.  Bare subprocess busy loops — no jax, no
+    fork of this (multithreaded) process."""
+    import subprocess
+    import sys
+
+    def burn(k: int) -> list[int]:
+        procs = [subprocess.Popen([sys.executable, "-c", _BURN_SRC],
+                                  stdout=subprocess.PIPE)
+                 for _ in range(k)]
+        return [int(p.communicate()[0]) for p in procs]
+
+    try:
+        serial = burn(1)[0]
+        return sum(burn(2)) / max(serial, 1)
+    except (OSError, ValueError):
+        return float("nan")
+
+
+def bench_cluster_scaling(tmp_root="/tmp/repro_bench_cluster"):
+    """Beyond-paper: stream-sharded multi-process serving (repro.cluster).
+
+    The thread-based server is GIL-capped (~1.7x aggregate on a 2-core
+    host); sharding streams across worker *processes* is the scale-out
+    path.  Builds the same 4-stream store as a 1-shard and a 2-shard
+    cluster (each worker a full per-shard stack with the process-per-core
+    isolated runtime), scatters an identical 16-query mix through the
+    router, and compares aggregate x-realtime.  Timed windows are
+    interleaved 1-shard/2-shard so host-capacity noise (shared CI boxes)
+    hits both configurations alike, and the best window per configuration
+    is reported (the repo's min-of-repeats idiom).  Items must be
+    bit-identical to the single-process ``run_query`` reference, and the
+    cluster's rolled-up stats must account every submission.
+
+    ``speedup`` is a same-host ratio of two simultaneous configurations —
+    but unlike single-process ratios it also depends on how much *parallel*
+    CPU the host actually grants (overcommitted CI sandboxes measurably cap
+    two busy processes below 1.5x of one), so the ``scales`` >= 1.5x claim
+    is exempted from the exact gate via ``HOST_SPEED_BOOL_KEYS``."""
+    import itertools
+    import shutil
+
+    from repro.cluster import ShardRouter
+    from repro.launch.vserve import demo_config
+
+    cfg = demo_config()
+    streams = ["jackson", "miami", "tucson", "dashcam"]  # 2/2 shard split
+    n_segs = 3
+    segs = list(range(n_segs))
+    subs = [(q, s, segs, a) for s, (q, a) in itertools.product(
+        streams, [("A", 0.8), ("B", 0.8), ("A", 0.9), ("B", 0.9)])]
+    vsec = len(subs) * n_segs * SPEC.segment_seconds
+
+    shutil.rmtree(tmp_root, ignore_errors=True)
+    ref = VideoStore(f"{tmp_root}/ref", SPEC)
+    cfg_formats = cfg.storage_formats()
+    ref.set_formats(cfg_formats)
+    frames_by_key = {}
+    for s in streams:
+        for g in segs:
+            frames_by_key[(s, g)] = generate_segment(s, g, SPEC)[0]
+            ref.ingest_segment(s, g, frames_by_key[(s, g)])
+    base = {(q, s, acc): run_query(ref, cfg, q, s, segs, acc)
+            for q, s, _sg, acc in subs}
+
+    routers, walls, results = {}, {1: [], 2: []}, {}
+    try:
+        for n in (1, 2):
+            # registered before start(): a setup failure must still shut
+            # the spawned workers down in the finally below
+            routers[n] = r = ShardRouter(f"{tmp_root}/c{n}", cfg, n,
+                                         spec=SPEC, opts={"workers": 1})
+            r.start()
+            for (s, g), frames in frames_by_key.items():
+                r.ingest(s, g, frames)
+            r.query_many(subs)  # warm per-worker jit + decoded caches
+        for _ in range(4):  # interleaved timing windows
+            for n, r in routers.items():
+                t0 = time.perf_counter()
+                results[n] = r.query_many(subs)
+                walls[n].append(time.perf_counter() - t0)
+        stats = {n: r.stats() for n, r in routers.items()}
+    finally:
+        for r in routers.values():
+            r.close()
+
+    agg = {n: vsec / min(w) for n, w in walls.items()}
+    speedup = agg[2] / agg[1]
+    host_x = _host_parallel_x()
+    # the machine-aware claim: the cluster realizes at least 75% of the
+    # parallel CPU this host actually grants two processes (>= 1.5x on a
+    # genuine 2-core box, where host_x ~= 2.0).  Informative alongside
+    # `scales`, not exactly gated — the spin-loop calibration has no
+    # memory/IPC contention and samples a different moment than the timed
+    # windows (both are in HOST_SPEED_BOOL_KEYS; the factor-gated
+    # `speedup` ratio is the enforceable regression guard).  Vacuously
+    # true when the calibration couldn't run (NaN).
+    scales_to_host = (host_x != host_x
+                      or speedup >= 0.75 * min(host_x, 2.0))
+    for n in (1, 2):
+        identical = all(res.items == base[(q, s, acc)].items
+                        for res, (q, s, _sg, acc) in zip(results[n], subs))
+        st = stats[n]
+        accounted = (st["completed"] >= 5 * len(subs)  # warm + 4 windows
+                     and st["failed"] == 0 and st["restarts"] == 0)
+        extra = "" if n == 1 else (
+            f"speedup={speedup:.2f};host_parallel_x={host_x:.2f};"
+            f"scales={speedup >= 1.5};scales_to_host={scales_to_host};")
+        row("cluster_scaling", min(walls[n]) * 1e6,
+            f"shards={n};n={len(subs)};segments={n_segs};"
+            f"agg_x={agg[n]:.0f};{extra}"
+            f"identical={identical};accounted={accounted}")
+
+
 def bench_decode_path(n_segs=8, kint=10):
     """Beyond-paper: the fused batched decode path (blob format v2 +
     one-dispatch residual IDCT) vs the seed decoder.

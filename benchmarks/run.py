@@ -67,6 +67,7 @@ def main(argv=None) -> None:
         B.bench_serve_concurrency,
         B.bench_batched_consumption,
         B.bench_ingest_live,
+        B.bench_cluster_scaling,
         B.bench_decode_path,
         B.bench_fig13_overhead,
         bench_roofline,

@@ -20,7 +20,7 @@ import time
 import numpy as np
 
 from ..core.knobs import FidelityOption, IngestSpec
-from .batch import BatchedConsumer
+from .batch import DEFAULT_BATCH_SHAPES, BatchedConsumer
 from .operators import OPERATORS, _bucket, _positions
 
 QUERY_A = ("diff", "snn", "nn")            # car detection
@@ -41,6 +41,29 @@ class StageStats:
     detect_calls: int = 0    # op.detect invocations (batching merges them)
     batched_frames: int = 0  # rows fed via the batched path, padding incl.
 
+    def to_wire(self) -> dict:
+        """Plain-scalar form (msgpack/json-safe) for cross-process serving."""
+        d = dataclasses.asdict(self)
+        d["cf"] = [self.cf.quality, self.cf.crop, self.cf.resolution,
+                   self.cf.sampling]
+        return d
+
+    @staticmethod
+    def from_wire(d: dict) -> "StageStats":
+        d = dict(d)
+        q, crop, res, samp = d["cf"]
+        d["cf"] = FidelityOption(q, crop, res, samp)
+        return StageStats(**d)
+
+
+def _wire_scalar(x):
+    """Numpy scalars -> plain Python so item tuples survive msgpack."""
+    if isinstance(x, np.integer):
+        return int(x)
+    if isinstance(x, np.floating):
+        return float(x)
+    return x
+
 
 @dataclasses.dataclass
 class QueryResult:
@@ -48,6 +71,23 @@ class QueryResult:
     stages: list[StageStats]
     video_seconds: float
     wall_s: float = 0.0  # measured end-to-end wall time of the execution
+
+    def to_wire(self) -> dict:
+        """Plain-scalar form of the result (item tuples become lists; a
+        shard worker ships this over the cluster wire protocol)."""
+        return {
+            "items": [[_wire_scalar(x) for x in it] for it in self.items],
+            "stages": [s.to_wire() for s in self.stages],
+            "video_seconds": float(self.video_seconds),
+            "wall_s": float(self.wall_s),
+        }
+
+    @staticmethod
+    def from_wire(d: dict) -> "QueryResult":
+        return QueryResult(
+            items={tuple(it) for it in d["items"]},
+            stages=[StageStats.from_wire(s) for s in d["stages"]],
+            video_seconds=d["video_seconds"], wall_s=d["wall_s"])
 
     @property
     def pipelined_speed(self) -> float:
@@ -89,7 +129,8 @@ def _active_frame_mask(frames_pos: np.ndarray, active_buckets: set | None,
 
 def run_query(store, config, query: str, stream: str, segments: list[int],
               accuracy: float, retriever=None,
-              batch_segments: int = 0) -> QueryResult:
+              batch_segments: int = 0,
+              batch_shapes: tuple[int, ...] | None = None) -> QueryResult:
     """Execute a cascade at one target accuracy for every stage.
 
     ``config`` is a DerivedConfig (repro.core.configure): maps consumer
@@ -104,13 +145,16 @@ def run_query(store, config, query: str, stream: str, segments: list[int],
     shape bucket, and retrieval goes through ``store.retrieve_many`` so
     ``want_indices``/``convert`` amortize across the group.  Item sets are
     bit-exact with the per-segment path; ``StageStats.detect_calls`` shows
-    the dispatch saving.
+    the dispatch saving.  ``batch_shapes`` overrides the consumer's static
+    shape ladder (see ``batch.derive_shapes`` for the profiler-derived one).
     """
     if batch_segments < 0:
         raise ValueError(f"batch_segments must be >= 0, got {batch_segments}")
     spec = store.spec
     fetch = retriever or store.retrieve
-    consumer = BatchedConsumer(spec) if batch_segments else None
+    consumer = (BatchedConsumer(spec, shapes=batch_shapes or
+                                DEFAULT_BATCH_SHAPES)
+                if batch_segments else None)
     stages: list[StageStats] = []
     active: dict[int, set] | None = None  # per segment active buckets
     items_all: set = set()

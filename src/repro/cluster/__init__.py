@@ -1,0 +1,36 @@
+"""Sharded multi-process VStore: the first process boundary in the system.
+
+The GIL caps thread-based serving at ~1.7x aggregate on small hosts, so
+horizontal scale comes from *stream-sharded worker processes* (one full
+SegmentStore -> VideoStore -> VStoreServer stack per shard, VSS-style
+store-per-feed) behind a scatter-gather router:
+
+* ``ShardWorker`` (``worker.shard_worker_main``) — a spawned process
+  hosting one shard's stack over its own store directory, speaking the
+  length-prefixed msgpack wire protocol (``wire``);
+* ``ShardRouter`` — stable-hash stream placement, scatter-gather query
+  fan-out with deterministic merge (bit-identical to single-process
+  execution), cluster-wide stats rollup, and generation-checked worker
+  restart on crash;
+* ``ClusterIngest`` — owns every shard scheduler's ``BudgetLease``, splits
+  the global transcode budget by observed backlog, and runs erosion passes
+  cluster-wide so per-format debt and reclaimed bytes roll up in one
+  place.
+
+``python -m repro.launch.vcluster`` drives the whole thing end to end.
+"""
+
+from .ingest import ClusterIngest
+from .router import (ShardError, ShardHost, ShardIdentityError, ShardRouter,
+                     merge_results, stable_shard)
+from .wire import (config_from_wire, config_to_wire, erosion_plan_from_wire,
+                   erosion_plan_to_wire, pack, recv_msg, send_msg,
+                   spec_from_wire, spec_to_wire, unpack)
+
+__all__ = [
+    "ClusterIngest", "ShardError", "ShardHost", "ShardIdentityError",
+    "ShardRouter", "config_from_wire", "config_to_wire",
+    "erosion_plan_from_wire", "erosion_plan_to_wire", "merge_results",
+    "pack", "recv_msg", "send_msg", "spec_from_wire", "spec_to_wire",
+    "stable_shard", "unpack",
+]

@@ -1,0 +1,170 @@
+"""ClusterIngest: cluster-wide coordination of transcode budget and
+erosion across shard workers.
+
+Each shard worker runs its own ``IngestScheduler`` whose rate is held by a
+``BudgetLease`` the *coordinator* owns (granted over the wire via the
+``set_budget`` op).  The global budget is expressed the same way a single
+scheduler's is — encode-seconds per arriving video-second — and the
+coordinator keeps the cluster-wide invariant
+
+    sum_i  rate_i * arrivals_i  ≈  global_rate * sum_i arrivals_i
+
+while *skewing* the per-shard rates toward backlog: ``rebalance()`` reads
+every shard's transcode debt and grants debt-weighted shares, so budget an
+idle shard cannot spend flows to shards whose queues are behind (clamped
+to ``max_skew`` x the global rate so one pathological shard can't starve
+the rest).  With no debt anywhere the split degenerates to the uniform
+grant, which is exactly the single-process semantics.
+
+Erosion runs cluster-wide the same way: ``erode_advance`` moves every
+shard's day clock in lockstep and merges the per-shard reports, so
+per-format reclaimed bytes — like per-format transcode debt in
+``stats()`` — roll up in one place.
+"""
+
+from __future__ import annotations
+
+from .router import ShardRouter
+
+
+# per-format keys that are rankings/rates shared by every shard (carried
+# through as-is), not additive quantities
+_NON_ADDITIVE = {"recovery_cost"}
+
+
+def _merge_per_format(slots: list[dict]) -> dict:
+    out: dict[str, dict] = {}
+    for per_format in slots:
+        for sf_id, vals in per_format.items():
+            slot = out.setdefault(sf_id, {})
+            for k, v in vals.items():
+                if k in _NON_ADDITIVE or not isinstance(v, (int, float)):
+                    slot[k] = v
+                else:
+                    slot[k] = slot.get(k, 0) + v
+    return out
+
+
+class ClusterIngest:
+    def __init__(self, router: ShardRouter, budget_x: float | None = None,
+                 *, max_skew: float = 8.0):
+        self.router = router
+        self.budget_x = budget_x
+        self.max_skew = max_skew
+        self.rebalances = 0
+        # start every shard at the uniform grant (single-process semantics
+        # until the first rebalance observes actual backlog)
+        self.grants: list[float | None] = [budget_x] * router.n_shards
+        self._apply_grants()
+        for host in router.hosts:
+            # a respawned worker reverts to its spawn-time budget; push
+            # the coordinator's current grant back as soon as it reattaches
+            host.on_reattach.append(
+                lambda h: h.call("set_budget",
+                                 budget_x=self.grants[h.idx]))
+
+    def _apply_grants(self):
+        for host, x in zip(self.router.hosts, self.grants):
+            host.call_retry("set_budget", budget_x=x)
+
+    # -- data path -------------------------------------------------------------
+    def ingest(self, stream: str, seg: int, frames) -> float:
+        return self.router.ingest(stream, seg, frames)
+
+    def pump(self, max_tasks: int | None = None) -> int:
+        """Deterministically run queued transcodes on every shard (budget
+        credit permitting); returns total tasks completed."""
+        return sum(self.router.broadcast("pump", max_tasks=max_tasks))
+
+    def drain(self, include_shed: bool = True) -> int:
+        """Run every shard's queue to empty, ignoring budget (the 'budget
+        raised' path)."""
+        return sum(self.router.broadcast("drain", include_shed=include_shed))
+
+    # -- budget splitting ------------------------------------------------------
+    def set_budget_x(self, budget_x: float | None) -> None:
+        """Change the global rate; re-splits immediately."""
+        self.budget_x = budget_x
+        self.rebalance()
+
+    def rebalance(self) -> list[float | None]:
+        """Re-split the global budget by observed per-shard backlog.
+
+        Shard i's grant is ``global_rate * total_arrivals * w_i /
+        arrivals_i`` with debt-share weights ``w_i``; shards that have seen
+        no arrivals yet get the uniform rate.  Conserves the cluster-wide
+        encode-second rate (up to the ``max_skew`` clamp) while directing
+        slack at the shards that are actually behind."""
+        if self.budget_x is None:  # unbounded: nothing to split
+            self.grants = [None] * self.router.n_shards
+            self._apply_grants()
+            return self.grants
+        stats = self.router.broadcast("stats")
+        ingests = [s.get("ingest") or {} for s in stats]
+        arrivals = [float(ing.get("video_seconds", 0.0)) for ing in ingests]
+        debts = [float(ing.get("debt_s", 0.0)) for ing in ingests]
+        total_r = sum(arrivals)
+        total_debt = sum(debts)
+        grants: list[float | None] = []
+        for r_i, d_i in zip(arrivals, debts):
+            if total_r <= 0 or r_i <= 0 or total_debt <= 0:
+                grants.append(self.budget_x)
+                continue
+            w_i = d_i / total_debt
+            x_i = self.budget_x * total_r * w_i / r_i
+            grants.append(min(x_i, self.max_skew * self.budget_x))
+        self.grants = grants
+        self.rebalances += 1
+        self._apply_grants()
+        return grants
+
+    def requeue_shed(self) -> int:
+        return sum(self.router.broadcast("requeue_shed"))
+
+    # -- erosion ---------------------------------------------------------------
+    def erode_advance(self, days: int = 1) -> dict:
+        """Advance every shard's erosion day clock in lockstep; returns the
+        merged report (segments/bytes/chunks summed, per-format rollup)."""
+        reps = self.router.broadcast("erode_advance", days=days)
+        merged = {
+            "day": max(r["day"] for r in reps),
+            "segments": sum(r["segments"] for r in reps),
+            "bytes": sum(r["bytes"] for r in reps),
+            "chunks": sum(r["chunks"] for r in reps),
+            "chunk_bytes": sum(r["chunk_bytes"] for r in reps),
+            "compactions": sum(r["compactions"] for r in reps),
+            "dead_bytes_after": sum(r["dead_bytes_after"] for r in reps),
+            "per_format": _merge_per_format([r["per_format"] for r in reps]),
+            "per_shard": reps,
+        }
+        return merged
+
+    # -- observability ---------------------------------------------------------
+    def stats(self) -> dict:
+        """One place for the whole cluster's ingest accounting: per-format
+        pending/debt/shed rolled up across shards, global debt, write-back
+        and erosion totals, plus the per-shard breakdown."""
+        shard_stats = self.router.broadcast("stats")
+        ingests = [s.get("ingest") or {} for s in shard_stats]
+        erosions = [s.get("erosion") or {} for s in shard_stats]
+        formats = _merge_per_format(
+            [ing.get("formats", {}) for ing in ingests])
+        sums = ("debt_s", "pending", "shed", "shed_total", "transcodes",
+                "transcode_s", "video_seconds", "task_errors",
+                "write_backs", "write_back_s", "write_backs_skipped")
+        out = {k: sum(ing.get(k) or 0 for ing in ingests) for k in sums}
+        out["formats"] = formats
+        out["grants"] = list(self.grants)
+        out["budget_x"] = self.budget_x
+        out["rebalances"] = self.rebalances
+        out["erosion"] = {
+            "eroded_segments": sum(e.get("eroded_segments", 0)
+                                   for e in erosions),
+            "eroded_bytes": sum(e.get("eroded_bytes", 0) for e in erosions),
+            "eroded_chunks": sum(e.get("eroded_chunks", 0)
+                                 for e in erosions),
+            "eroded_chunk_bytes": sum(e.get("eroded_chunk_bytes", 0)
+                                      for e in erosions),
+        }
+        out["per_shard"] = ingests
+        return out

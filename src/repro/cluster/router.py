@@ -1,0 +1,448 @@
+"""ShardRouter: the scatter-gather frontend of the sharded VStore.
+
+Streams are assigned to shard worker processes by stable hashing
+(``crc32(stream) % n_shards`` — the same process-stable idiom the scene
+generator uses for stream seeds), so a stream's segments always live in
+exactly one worker's store directory and ingest never crosses shards.
+
+Queries scatter: a multi-stream submission fans one sub-query per stream
+out to the owning workers over the wire protocol, and the per-stream
+``QueryResult``s are gathered and merged deterministically (streams in
+sorted order, items tagged with their stream) — bit-identical to running
+the same cascades in one process, because each shard runs the unmodified
+single-process executor over the unmodified per-stream store.
+
+Workers crash; the router reattaches.  Every RPC that fails at the
+connection level triggers a *generation-checked* restart: the router first
+re-reads the shard's persisted ``store_id`` through a read-only store
+attach (never mutating a directory another process might still own), spawns
+a replacement worker with a bumped generation, and verifies the new
+worker's ``hello`` reports the same ``store_id`` before retrying the call.
+Queries are pure reads over a durable store (golden is written
+synchronously), so the retry is safe; a half-finished background transcode
+is simply redone by the restarted scheduler's fallback-equivalent paths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import socket
+import tempfile
+import threading
+import time
+import zlib
+from concurrent.futures import ThreadPoolExecutor
+
+from ..analytics.query import QueryResult
+from ..serving.server import QueryRequest
+from . import wire
+from .worker import runtime_env_overrides, shard_worker_main
+
+_CONNECT_TIMEOUT_S = 180.0  # spawn + jax import + store load can be slow
+
+# spawn-time env changes are applied-then-restored around Process.start();
+# the lock keeps concurrent spawns from restoring each other's overrides
+# out from under an in-flight start
+_SPAWN_ENV_MU = threading.Lock()
+
+# the directory containing the repro package (".../src")
+_SRC_DIR = os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))))
+
+
+class ShardError(RuntimeError):
+    """An op failed *inside* a worker (the worker itself is healthy)."""
+
+
+class ShardIdentityError(RuntimeError):
+    """A (re)spawned worker is not serving the store we expected."""
+
+
+def stable_shard(stream: str, n_shards: int) -> int:
+    """crc32-based stream -> shard assignment (process-stable, like
+    ``scene._stream_seed``)."""
+    return zlib.crc32(stream.encode()) % n_shards
+
+
+def merge_results(per_stream: dict[str, QueryResult]) -> QueryResult:
+    """Deterministic gather: combine per-stream results of one logical
+    query in sorted-stream order.  Items are tagged with their stream
+    (``(stream, seg, ...)``); stage timings/counters sum positionally
+    (every sub-query ran the identical cascade); ``wall_s`` is the max —
+    the scatter ran them concurrently."""
+    items: set = set()
+    stages = None
+    vsec, wall = 0.0, 0.0
+    for stream in sorted(per_stream):
+        r = per_stream[stream]
+        items |= {(stream,) + tuple(it) for it in r.items}
+        vsec += r.video_seconds
+        wall = max(wall, r.wall_s)
+        if stages is None:
+            stages = [dataclasses.replace(s) for s in r.stages]
+        else:
+            for agg, s in zip(stages, r.stages):
+                agg.retrieve_s += s.retrieve_s
+                agg.consume_s += s.consume_s
+                agg.frames += s.frames
+                agg.items += s.items
+                agg.segments_scanned += s.segments_scanned
+                agg.detect_calls += s.detect_calls
+                agg.batched_frames += s.batched_frames
+    return QueryResult(items=items, stages=stages or [],
+                       video_seconds=vsec, wall_s=wall)
+
+
+class ShardHost:
+    """Parent-side handle of one worker process: spawn, connection pool,
+    RPC, and identity-checked restart."""
+
+    def __init__(self, idx: int, shard_dir: str, sock_dir: str,
+                 cfg_wire: dict, spec_wire: dict, opts: dict, ctx):
+        self.idx = idx
+        self.shard_dir = shard_dir
+        self.sock_dir = sock_dir
+        self.cfg_wire = cfg_wire
+        self.spec_wire = spec_wire
+        self.opts = opts
+        self.ctx = ctx
+        self.generation = 0
+        self.store_id: str | None = None
+        self.restarts = 0
+        # callbacks(host) run after a successful reattach — a respawned
+        # worker reverts to its spawn-time opts, so owners of dynamic
+        # state (the cluster ingest coordinator's budget grants) re-apply
+        # it here
+        self.on_reattach: list = []
+        self.process = None
+        self.sock_path = ""
+        self._idle: list[socket.socket] = []
+        self._mu = threading.Lock()
+        self._restart_mu = threading.Lock()
+
+    # -- lifecycle -----------------------------------------------------------
+    def spawn(self) -> None:
+        self.sock_path = os.path.join(
+            self.sock_dir, f"s{self.idx}-g{self.generation}.sock")
+        self.process = self.ctx.Process(
+            target=shard_worker_main,
+            args=(self.shard_dir, self.sock_path, self.generation,
+                  self.cfg_wire, self.spec_wire, self.opts),
+            name=f"vstore-shard-{self.idx}", daemon=True)
+        # the child's numpy/BLAS initializes during module resolution,
+        # before shard_worker_main runs — the isolation knobs must be in
+        # the env it inherits, but the *parent's* runtime must not keep
+        # them, so apply-then-restore around start()
+        overrides = runtime_env_overrides(self.opts)
+        # spawned workers re-import repro by name; make sure the package's
+        # parent dir reaches them even when this process got it onto
+        # sys.path without PYTHONPATH (scoped to the spawn, like the rest)
+        paths = os.environ.get("PYTHONPATH", "").split(os.pathsep)
+        if _SRC_DIR not in paths:
+            overrides["PYTHONPATH"] = os.pathsep.join(
+                [_SRC_DIR] + [p for p in paths if p])
+        with _SPAWN_ENV_MU:
+            saved = {k: os.environ.get(k) for k in overrides}
+            os.environ.update(overrides)
+            try:
+                self.process.start()
+            finally:
+                for k, v in saved.items():
+                    if v is None:
+                        os.environ.pop(k, None)
+                    else:
+                        os.environ[k] = v
+        hello = self.call("hello")
+        problem = None
+        if self.store_id is not None and hello["store_id"] != self.store_id:
+            problem = (f"worker serves store {hello['store_id']} but "
+                       f"router expected {self.store_id}")
+        elif hello["generation"] != self.generation:
+            problem = (f"worker generation {hello['generation']} != "
+                       f"expected {self.generation}")
+        if problem is not None:
+            # don't orphan the imposter: it would keep holding the socket
+            # and the store directory while the error propagates
+            self._drop_connections()
+            self.process.terminate()
+            self.process.join(timeout=10)
+            raise ShardIdentityError(f"shard {self.idx}: {problem}")
+        if self.store_id is None:
+            self.store_id = hello["store_id"]
+
+    def _dial(self) -> socket.socket:
+        deadline = time.monotonic() + _CONNECT_TIMEOUT_S
+        while True:
+            try:
+                s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+                s.connect(self.sock_path)
+                return s
+            except OSError:
+                s.close()
+                if self.process is None or not self.process.is_alive():
+                    raise ConnectionError(
+                        f"shard {self.idx} worker died before accepting "
+                        f"connections") from None
+                if time.monotonic() > deadline:
+                    raise ConnectionError(
+                        f"shard {self.idx} worker did not come up within "
+                        f"{_CONNECT_TIMEOUT_S:.0f}s") from None
+                time.sleep(0.05)
+
+    # -- RPC -----------------------------------------------------------------
+    def call(self, op: str, **kw):
+        """One request/response over a pooled connection.  Raises
+        ``ConnectionError`` when the worker is unreachable (caller decides
+        whether to reattach) and ``ShardError`` for in-worker failures."""
+        with self._mu:
+            sock = self._idle.pop() if self._idle else None
+        if sock is None:
+            sock = self._dial()
+        try:
+            wire.send_msg(sock, {"op": op, **kw})
+            resp = wire.recv_msg(sock)
+        except (wire.WireError, OSError) as e:
+            sock.close()
+            raise ConnectionError(f"shard {self.idx}: {e}") from e
+        with self._mu:
+            self._idle.append(sock)
+        if not resp.get("ok"):
+            raise ShardError(
+                f"shard {self.idx} op {op!r} failed: {resp.get('error')}\n"
+                f"{resp.get('trace', '')}")
+        return resp.get("value")
+
+    def _drop_connections(self):
+        with self._mu:
+            idle, self._idle = self._idle, []
+        for s in idle:
+            s.close()
+
+    # -- restart -------------------------------------------------------------
+    def reattach(self) -> None:
+        """Identity-checked worker restart after a connection failure.
+
+        Before spawning over the shard directory, the persisted store_id is
+        re-read through a *read-only* store attach and checked against the
+        identity recorded at first hello — the router must never hand a
+        replacement worker a directory that isn't the shard it lost.  The
+        replacement runs generation+1; its hello must echo both."""
+        with self._restart_mu:
+            # a concurrent caller may have already restarted it
+            if self.process is not None and self.process.is_alive():
+                try:
+                    self.call("hello")
+                    return
+                except ConnectionError:
+                    pass
+            self._drop_connections()
+            if self.process is not None:
+                self.process.terminate()
+                self.process.join(timeout=10)
+            if self.store_id is not None:
+                from ..videostore import VideoStore
+                disk_id = VideoStore(self.shard_dir, readonly=True).store_id
+                if disk_id != self.store_id:
+                    raise ShardIdentityError(
+                        f"shard {self.idx}: on-disk store_id {disk_id} != "
+                        f"recorded {self.store_id}; refusing to respawn")
+            self.generation += 1
+            self.restarts += 1
+            self.spawn()
+            for cb in self.on_reattach:
+                cb(self)
+
+    def call_retry(self, op: str, **kw):
+        """RPC with one identity-checked restart+retry on connection
+        failure.  Safe for the router's ops: queries/stats are pure reads
+        and ingest rewrites the same deterministic bytes."""
+        try:
+            return self.call(op, **kw)
+        except ConnectionError:
+            self.reattach()
+            return self.call(op, **kw)
+
+    def kill(self) -> None:
+        """Hard-kill the worker (crash injection for tests/benches)."""
+        if self.process is not None:
+            self.process.kill()
+            self.process.join(timeout=10)
+
+    def close(self) -> None:
+        try:
+            self.call("shutdown")
+        except (ConnectionError, ShardError):
+            pass
+        self._drop_connections()
+        if self.process is not None:
+            self.process.join(timeout=15)
+            if self.process.is_alive():
+                self.process.terminate()
+                self.process.join(timeout=5)
+
+
+class ShardRouter:
+    """Scatter-gather frontend over ``n_shards`` worker processes."""
+
+    def __init__(self, root: str, config, n_shards: int, *, spec=None,
+                 opts: dict | None = None, start_method: str | None = None):
+        """``opts`` is forwarded to every worker's stack (workers,
+        batch_segments, cache_policy, ingest/budget_x/erosion_plan, ...).
+        ``start_method`` defaults to ``$REPRO_CLUSTER_START_METHOD`` or
+        ``spawn`` — fork would duplicate jax/thread state into workers."""
+        import multiprocessing as mp
+
+        from ..core.knobs import IngestSpec
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        method = start_method or os.environ.get(
+            "REPRO_CLUSTER_START_METHOD", "spawn")
+        ctx = mp.get_context(method)
+        self.root = root
+        self.n_shards = n_shards
+        self.spec = spec or IngestSpec()
+        cfg_wire = wire.config_to_wire(config)
+        spec_wire = wire.spec_to_wire(self.spec)
+        self.opts = dict(opts or {})
+        os.makedirs(root, exist_ok=True)
+        # unix-socket paths must stay short (108-byte sun_path limit), so
+        # sockets live in their own tmpdir, not under arbitrary roots
+        self._sock_dir = tempfile.mkdtemp(prefix="vcluster-")
+        # pin_cores=True gives each worker its own core (shard i -> core
+        # i mod ncpu): the per-shard process is the unit of parallelism,
+        # and unpinned runtimes' spin threads oversubscribe small hosts
+        pin = self.opts.pop("pin_cores", False)
+        self.hosts = [
+            ShardHost(i, os.path.join(root, f"shard-{i:02d}"),
+                      self._sock_dir, cfg_wire, spec_wire,
+                      self.opts | {"pin_core": i} if pin else self.opts, ctx)
+            for i in range(n_shards)]
+        self._pool = ThreadPoolExecutor(
+            max_workers=max(2 * n_shards, 8),
+            thread_name_prefix="vstore-router")
+        self._started = False
+        self._t_up = time.perf_counter()
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "ShardRouter":
+        if self._started:
+            return self
+        # spawn all workers concurrently — startup cost is one worker's
+        # import time, not the sum
+        futs = [self._pool.submit(h.spawn) for h in self.hosts]
+        for f in futs:
+            f.result()
+        self._started = True
+        self._t_up = time.perf_counter()
+        return self
+
+    def close(self) -> None:
+        futs = [self._pool.submit(h.close) for h in self.hosts]
+        for f in futs:
+            f.result()
+        self._pool.shutdown(wait=True)
+        try:
+            for name in os.listdir(self._sock_dir):
+                os.remove(os.path.join(self._sock_dir, name))
+            os.rmdir(self._sock_dir)
+        except OSError:
+            pass
+
+    def __enter__(self) -> "ShardRouter":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- placement -----------------------------------------------------------
+    def shard_of(self, stream: str) -> int:
+        return stable_shard(stream, self.n_shards)
+
+    def host_of(self, stream: str) -> ShardHost:
+        return self.hosts[self.shard_of(stream)]
+
+    # -- data path ------------------------------------------------------------
+    def ingest(self, stream: str, seg: int, frames) -> float:
+        """Route one arriving segment to its stream's shard; returns the
+        golden durability latency measured in the worker."""
+        v = self.host_of(stream).call_retry(
+            "ingest", stream=stream, seg=int(seg), frames=frames)
+        return v["golden_s"]
+
+    def _sub_query(self, query: str, stream: str, segments, accuracy
+                   ) -> QueryResult:
+        req = QueryRequest(query, stream, list(segments), accuracy)
+        v = self.host_of(stream).call_retry("query", request=req.to_wire())
+        return QueryResult.from_wire(v)
+
+    def query(self, query: str, streams, segments: list[int],
+              accuracy: float) -> QueryResult:
+        """Execute one cascade.  ``streams`` may be a single stream name
+        (routed to its shard; result identical to single-process
+        ``run_query``) or a list (scatter one sub-query per stream to the
+        owning shards, gather, merge deterministically — see
+        ``merge_results`` for the tagging)."""
+        if isinstance(streams, str):
+            return self._sub_query(query, streams, segments, accuracy)
+        futs = {s: self._pool.submit(self._sub_query, query, s, segments,
+                                     accuracy) for s in streams}
+        return merge_results({s: f.result() for s, f in futs.items()})
+
+    def query_many(self, submissions: list[tuple]) -> list[QueryResult]:
+        """Scatter a batch of ``(query, stream(s), segments, accuracy)``
+        submissions across the cluster concurrently; gather results in
+        submission order.  Multi-stream submissions are flattened into
+        per-stream sub-queries *here* — pool tasks never submit into their
+        own (bounded) pool, which would deadlock once every worker thread
+        held an outer task blocked on queued inner ones."""
+        plans = []  # per submission: [(stream or None, future)]
+        for q, streams, segments, acc in submissions:
+            names = [streams] if isinstance(streams, str) else list(streams)
+            futs = [(s, self._pool.submit(self._sub_query, q, s, segments,
+                                          acc)) for s in names]
+            plans.append((isinstance(streams, str), futs))
+        out = []
+        for single, futs in plans:
+            if single:
+                out.append(futs[0][1].result())
+            else:
+                out.append(merge_results({s: f.result() for s, f in futs}))
+        return out
+
+    # -- control / observability ----------------------------------------------
+    def broadcast(self, op: str, **kw) -> list:
+        """Run one op on every shard concurrently (gathered in shard
+        order)."""
+        futs = [self._pool.submit(h.call_retry, op, **kw)
+                for h in self.hosts]
+        return [f.result() for f in futs]
+
+    def stats(self) -> dict:
+        """Cluster-wide stats: per-shard breakdown plus counters rolled up
+        across shards, with the aggregate x-realtime measured against the
+        router's own uptime (shards serve concurrently, so their
+        video-seconds add but their wall clocks don't)."""
+        per_shard = self.broadcast("stats")
+        rollup_keys = ("completed", "rejected", "failed", "collapsed",
+                       "inflight", "video_seconds", "query_wall_s",
+                       "decodes", "coalesced_cfs", "inflight_hits",
+                       "decode_bytes", "decode_chunks", "cache_bytes")
+        total = {k: sum(s[k] for s in per_shard) for k in rollup_keys}
+        cache = {k: sum(s["cache"][k] for s in per_shard)
+                 for k in ("hits", "richer_hits", "misses", "evictions",
+                           "oversize", "inserted_bytes", "lookups")}
+        cache["hit_rate"] = ((cache["hits"] + cache["richer_hits"])
+                             / max(1, cache["lookups"]))
+        uptime = time.perf_counter() - self._t_up
+        return {
+            "shards": per_shard,
+            "n_shards": self.n_shards,
+            "generations": [h.generation for h in self.hosts],
+            "restarts": sum(h.restarts for h in self.hosts),
+            "uptime_s": uptime,
+            "aggregate_x_realtime": total["video_seconds"]
+            / max(uptime, 1e-9),
+            "cache": cache,
+            **total,
+        }

@@ -1,0 +1,294 @@
+"""ShardWorker: one OS process hosting a full per-shard VStore stack.
+
+Each worker owns a *stream shard* — a disjoint subset of camera streams
+assigned by the router's stable hash — behind its own store directory:
+
+    SegmentStore -> VideoStore -> VStoreServer (+ optional IngestScheduler
+    + ErosionExecutor), all private to the process.
+
+The process listens on a unix-domain socket and answers length-prefixed
+msgpack frames (``repro.cluster.wire``); one thread per accepted
+connection, so a router holding several connections gets concurrent
+queries into the server's worker pool.  Workers are started with the
+``spawn`` method by default (``REPRO_CLUSTER_START_METHOD`` overrides):
+jax state, thread pools and open sockets must never be inherited over
+``fork``, and spawn keeps the worker honest about what actually crosses
+the process boundary — everything arrives through the wire forms.
+
+Protocol ops (request ``{"op": ..., **args}`` -> ``{"ok": True, "value":
+...}`` or ``{"ok": False, "error": ..., "trace": ...}``):
+
+``hello``          identity: store_id, generation, pid, formats
+``query``          a ``QueryRequest`` wire form -> ``QueryResult`` wire form
+``ingest``         one segment's frames -> golden durability latency
+``pump``/``drain``/``requeue_shed``  background-transcode control
+``set_budget``     grant a new budget share to the worker's lease
+``erode_advance``  move the erosion day clock; returns the report
+``stats``          the server's aggregate stats (+ shard identity)
+``flush``/``shutdown``
+"""
+
+from __future__ import annotations
+
+import os
+import socket
+import threading
+import traceback
+
+from . import wire
+
+
+def _existing_streams(store) -> list[str]:
+    """Stream names with any stored segment (used to re-adopt footage into
+    erosion cohorts after a worker restart)."""
+    return sorted({k.split(":", 1)[0] for k in store.backend.keys()})
+
+
+def runtime_env_overrides(opts: dict, environ=None) -> dict[str, str]:
+    """The env a worker's numeric runtime needs, as a pure key -> value
+    map relative to ``environ`` (default ``os.environ``).
+
+    One worker per core is the cluster's parallelism model, so each
+    worker's runtime must stay single-threaded — letting one shard's
+    XLA/BLAS pools fan across cores other shards own turns N processes
+    into mutual oversubscription instead of scale-out (Redis/Seastar-style
+    process-per-core discipline).  Explicit ``opts["env"]`` entries
+    override the isolation defaults.
+
+    Consumed on BOTH sides of the spawn: the router applies (and then
+    restores — the parent's own runtime must not be silently
+    single-threaded) these around ``Process.start()``, because BLAS sizes
+    its pools while numpy is imported during the child's module
+    resolution, before any worker code runs; the worker re-asserts them
+    for jax — not imported until the stack builds — covering direct
+    callers that spawn without the router."""
+    env = os.environ if environ is None else environ
+    out: dict[str, str] = {}
+    if opts.get("isolate_runtime", True):
+        if "OMP_NUM_THREADS" not in env:
+            out["OMP_NUM_THREADS"] = "1"
+        if "OPENBLAS_NUM_THREADS" not in env:
+            out["OPENBLAS_NUM_THREADS"] = "1"
+        flags = env.get("XLA_FLAGS", "")
+        if "--xla_cpu_multi_thread_eigen" not in flags:
+            out["XLA_FLAGS"] = (
+                flags + " --xla_cpu_multi_thread_eigen=false").strip()
+    for k, v in opts.get("env", {}).items():
+        out[k] = str(v)
+    return out
+
+
+def apply_runtime_isolation(opts: dict) -> None:
+    """Worker-side: export the runtime knobs into this process's env."""
+    os.environ.update(runtime_env_overrides(opts))
+
+
+class _ShardStack:
+    """The per-shard object graph, built once per worker process."""
+
+    def __init__(self, shard_dir: str, generation: int, cfg_wire: dict,
+                 spec_wire: dict, opts: dict):
+        from ..ingest import ErosionExecutor, IngestScheduler
+        from ..serving import QueryRequest, VStoreServer
+        from ..videostore import VideoStore
+
+        self.generation = generation
+        self.QueryRequest = QueryRequest
+        self.config = wire.config_from_wire(cfg_wire)
+        spec = wire.spec_from_wire(spec_wire)
+        self.store = VideoStore(shard_dir, spec)
+        self.store.set_formats(self.config.storage_formats())
+        self.server = VStoreServer(
+            self.store, self.config,
+            workers=opts.get("workers", 1),
+            max_inflight=opts.get("max_inflight", 16),
+            cache_bytes=opts.get("cache_bytes", 256 << 20),
+            prefetch_depth=opts.get("prefetch_depth", 1),
+            batch_segments=opts.get("batch_segments", 4),
+            cache_policy=opts.get("cache_policy", "lru"))
+        self.scheduler = None
+        self.erosion = None
+        if opts.get("ingest"):
+            self.scheduler = IngestScheduler(
+                self.store, self.config,
+                budget_x=opts.get("budget_x"),
+                shed_debt_s=opts.get("shed_debt_s"),
+                materialize_on_read=opts.get("materialize_on_read", False))
+            # a restart lost the in-memory transcode queue; re-adopt the
+            # backlog for acked-but-unmaterialized formats so debt stays
+            # visible and drainable (no-op on a fresh store)
+            self.scheduler.adopt_missing(_existing_streams(self.store))
+            plan_wire = opts.get("erosion_plan")
+            if plan_wire is not None:
+                self.erosion = ErosionExecutor(
+                    self.store, wire.erosion_plan_from_wire(plan_wire),
+                    list(opts.get("node_ids", [])),
+                    golden_id=self.scheduler.golden_id,
+                    seed=opts.get("erosion_seed", 0))
+                self.scheduler.on_ingest(self.erosion.note_ingested)
+                # a restarted worker re-adopts already-stored footage so
+                # cohort targets keep covering it (day granularity is the
+                # ledger's resolution; the store itself is durable)
+                self.erosion.register_existing(_existing_streams(self.store))
+            self.server.attach_ingest(self.scheduler, self.erosion)
+            if opts.get("start_worker", False):
+                self.scheduler.start()
+
+    # -- op handlers ---------------------------------------------------------
+    def op_hello(self, req: dict) -> dict:
+        return {"store_id": self.store.store_id,
+                "generation": self.generation,
+                "pid": os.getpid(),
+                "formats": sorted(self.store.formats)}
+
+    def op_query(self, req: dict) -> dict:
+        r = self.QueryRequest.from_wire(req["request"])
+        r.block = True  # the connection thread is the natural queue
+        return self.server.submit_request(r).result().to_wire()
+
+    def op_ingest(self, req: dict) -> dict:
+        stream, seg, frames = req["stream"], int(req["seg"]), req["frames"]
+        # at-least-once delivery: the router retries an ingest whose ack a
+        # crash swallowed, and the respawned stack's adopt_missing already
+        # accounted the durable segment — re-running scheduler.ingest
+        # would double-count arrivals, mint duplicate bucket credit and
+        # enqueue duplicate tasks.  Cluster streams are append-only camera
+        # feeds, so a present segment IS the duplicate case.
+        if self.scheduler is not None:
+            if self.store.has_segment(stream, seg, self.scheduler.golden_id):
+                return {"golden_s": 0.0, "duplicate": True}
+            golden_s = self.scheduler.ingest(stream, seg, frames)
+        else:
+            if all(self.store.has_segment(stream, seg, sid)
+                   for sid in self.store.formats):
+                return {"golden_s": 0.0, "duplicate": True}
+            import time
+            t0 = time.perf_counter()
+            self.store.ingest_segment(stream, seg, frames)
+            golden_s = time.perf_counter() - t0
+        # the ack below is the router's durability receipt: the store index
+        # must hit disk before it, or a SIGKILL'd worker would restart
+        # without the segment (the shard bytes would be orphan-swept)
+        self.store.flush()
+        return {"golden_s": golden_s}
+
+    def _sched(self):
+        if self.scheduler is None:
+            raise RuntimeError("worker built without ingest scheduler")
+        return self.scheduler
+
+    def op_pump(self, req: dict) -> int:
+        done = self._sched().pump(req.get("max_tasks"))
+        if done:
+            self.store.flush()  # background materializations now durable
+        return done
+
+    def op_drain(self, req: dict) -> int:
+        done = self._sched().drain(req.get("include_shed", True))
+        if done:
+            self.store.flush()
+        return done
+
+    def op_requeue_shed(self, req: dict) -> int:
+        return self._sched().requeue_shed()
+
+    def op_set_budget(self, req: dict) -> None:
+        self._sched().lease.grant(req.get("budget_x"))
+
+    def op_erode_advance(self, req: dict) -> dict:
+        if self.erosion is None:
+            raise RuntimeError("worker built without erosion executor")
+        import dataclasses
+        return dataclasses.asdict(self.erosion.advance(req.get("days", 1)))
+
+    def op_stats(self, req: dict) -> dict:
+        st = self.server.stats()
+        st["store_id"] = self.store.store_id
+        st["generation"] = self.generation
+        return st
+
+    def op_flush(self, req: dict) -> None:
+        self.store.flush()
+
+    def close(self):
+        if self.scheduler is not None:
+            self.scheduler.stop()
+        self.server.close()
+        self.store.flush()
+
+
+def shard_worker_main(shard_dir: str, sock_path: str, generation: int,
+                      cfg_wire: dict, spec_wire: dict, opts: dict) -> None:
+    """Process entry point (importable top-level, as ``spawn`` requires)."""
+    apply_runtime_isolation(opts)
+    pin = opts.get("pin_core")
+    if pin is not None and hasattr(os, "sched_setaffinity"):
+        # one core per shard: the shard process is the unit of parallelism,
+        # so its runtime's spin/intra-op threads must not bleed onto cores
+        # other shards own (two unpinned workers on a 2-core host slow each
+        # other ~1.5x through oversubscription)
+        try:
+            os.sched_setaffinity(0, {pin % (os.cpu_count() or 1)})
+        except OSError:
+            pass  # restricted environment; run unpinned
+    stack = _ShardStack(shard_dir, generation, cfg_wire, spec_wire, opts)
+    stop = threading.Event()
+
+    listener = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    if os.path.exists(sock_path):
+        os.remove(sock_path)  # stale socket from a previous generation
+    listener.bind(sock_path)
+    listener.listen(16)
+
+    def serve(conn: socket.socket):
+        try:
+            while not stop.is_set():
+                try:
+                    req = wire.recv_msg(conn)
+                except (wire.WireError, OSError):
+                    return  # peer went away; not our problem
+                op = req.get("op")
+                if op == "shutdown":
+                    wire.send_msg(conn, {"ok": True, "value": None})
+                    stop.set()
+                    # connecting to ourselves unblocks accept() below
+                    try:
+                        poke = socket.socket(socket.AF_UNIX,
+                                             socket.SOCK_STREAM)
+                        poke.connect(sock_path)
+                        poke.close()
+                    except OSError:
+                        pass
+                    return
+                handler = getattr(stack, f"op_{op}", None)
+                if handler is None:
+                    resp = {"ok": False, "error": f"unknown op {op!r}",
+                            "trace": ""}
+                else:
+                    try:
+                        resp = {"ok": True, "value": handler(req)}
+                    except BaseException as e:  # noqa: BLE001
+                        resp = {"ok": False,
+                                "error": f"{type(e).__name__}: {e}",
+                                "trace": traceback.format_exc()}
+                wire.send_msg(conn, resp)
+        finally:
+            conn.close()
+
+    threads = []
+    try:
+        while not stop.is_set():
+            try:
+                conn, _ = listener.accept()
+            except OSError:
+                break
+            t = threading.Thread(target=serve, args=(conn,), daemon=True)
+            t.start()
+            threads.append(t)
+    finally:
+        listener.close()
+        try:
+            os.remove(sock_path)
+        except OSError:
+            pass
+        stack.close()

@@ -157,6 +157,47 @@ class Profiler:
         self.stats.wall_seconds += time.perf_counter() - t_start
         return res
 
+    def dispatch_overhead(self, op_name: str = "diff",
+                          f: FidelityOption | None = None,
+                          n_big: int = 64) -> tuple[float, float]:
+        """Measured ``(dispatch_overhead_s, per_frame_s)`` of one operator
+        call: the fixed cost of an ``op.detect`` invocation (jit dispatch,
+        host<->device staging, Python glue) versus the marginal per-frame
+        compute.  Fit from two batch sizes — a single frame (all fixed
+        cost) and ``n_big`` frames — with the best of ``repeats`` runs
+        after a warm-up, so compile time is excluded.  Feeds
+        ``repro.analytics.batch.derive_shapes``: the batched consumer's
+        static shape ladder is coarse when dispatch dominates and fine
+        when per-frame compute does.  Memoized like the other profiles."""
+        if n_big < 2:
+            raise ValueError(f"n_big must be >= 2, got {n_big}")
+        f = f or GOLDEN_F
+        key = ("dispatch", op_name, f, n_big)
+        if key in self._consume:
+            self.stats.memo_hits += 1
+            return self._consume[key]
+        t_start = time.perf_counter()
+        _, OPERATORS, _ = _analytics()
+        op = OPERATORS[op_name]
+        stream = self.streams.get(op_name, "jackson")
+        seg = self._segments(stream)[0]
+        frames = np.asarray(T.materialize(seg, f, self.spec))
+        big = frames[np.arange(n_big) % len(frames)]
+        times = {1: [], n_big: []}
+        for n, batch in ((1, big[:1]), (n_big, big)):
+            op.detect(batch, f, self.spec)  # warm the jit cache
+            for _ in range(max(2, self.repeats)):
+                t0 = time.perf_counter()
+                op.detect(batch, f, self.spec)
+                times[n].append(time.perf_counter() - t0)
+        t1, tn = min(times[1]), min(times[n_big])
+        per_frame = max((tn - t1) / (n_big - 1), 1e-9)
+        overhead = max(t1 - per_frame, 0.0)
+        self._consume[key] = (overhead, per_frame)
+        self.stats.consumption_runs += 1
+        self.stats.wall_seconds += time.perf_counter() - t_start
+        return overhead, per_frame
+
     def retrieval_speed(self, sf: StorageFormat, cf: FidelityOption) -> float:
         """x-realtime speed of decoding SF (with chunk-skip for the CF's
         sampling) and converting to CF."""

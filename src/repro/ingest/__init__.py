@@ -15,11 +15,13 @@ ingest -> store -> retrieve -> consume path.
 from .erosion_exec import ErosionExecutor, ErosionReport
 from .fallback import (ByteRatioProfiler, FallbackChain, build_parents,
                        chain_of)
-from .scheduler import IngestScheduler, TranscodeTask
+from .scheduler import (BudgetLease, IngestScheduler, TranscodeTask,
+                        recovery_rank_for)
 from .source import Arrival, StreamSource, interleave
 
 __all__ = [
-    "Arrival", "ByteRatioProfiler", "ErosionExecutor", "ErosionReport",
-    "FallbackChain", "IngestScheduler", "StreamSource", "TranscodeTask",
-    "build_parents", "chain_of", "interleave",
+    "Arrival", "BudgetLease", "ByteRatioProfiler", "ErosionExecutor",
+    "ErosionReport", "FallbackChain", "IngestScheduler", "StreamSource",
+    "TranscodeTask", "build_parents", "chain_of", "interleave",
+    "recovery_rank_for",
 ]

@@ -28,6 +28,7 @@ the serving planner's ``decode_for``) through ``reconstruct`` on a miss.
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
 
 from ..core.knobs import IngestSpec, StorageFormat
@@ -101,9 +102,20 @@ class FallbackChain:
         self._memo: OrderedDict[tuple, bytes] = OrderedDict()
         self._lock = threading.Lock()
         self._inflight: dict[tuple, threading.Event] = {}
+        self._write_back = None        # materialize-on-read hook
         self.reconstructions = 0       # transcodes actually executed
         self.fallback_reads = 0        # _blob misses served via the chain
         self.per_format: dict[str, int] = {}
+
+    def enable_write_back(self, charge) -> None:
+        """Materialize-on-read: after a reconstruction, call
+        ``charge(store, stream, seg, sf_id, blob, transcode_seconds)`` —
+        the ingest scheduler's budget-charging writer — so hot
+        unmaterialized segments are persisted (when the budget allows)
+        instead of paying the chain walk on every read.  The written
+        bytes are the reconstruction itself, i.e. exactly what deferred
+        materialization would store.  Pass ``None`` to disable."""
+        self._write_back = charge
 
     def depth(self, sf_id: str) -> int:
         return len(chain_of(sf_id, self.golden_id, self.parents)) - 1
@@ -162,12 +174,15 @@ class FallbackChain:
                     raise KeyError(
                         f"segment {stream}:{seg} missing everywhere "
                         f"(golden {sf_id} not ingested)")
-                blob = self.transcode_from_parent(store, stream, seg, sf_id)
+                blob, dt = self.transcode_from_parent_timed(
+                    store, stream, seg, sf_id)
                 with self._lock:
                     self.reconstructions += 1
                     self._memo[key] = blob
                     while len(self._memo) > self.memo_blobs:
                         self._memo.popitem(last=False)
+                if self._write_back is not None:
+                    self._write_back(store, stream, seg, sf_id, blob, dt)
                 return blob
             finally:
                 with self._lock:
@@ -180,13 +195,23 @@ class FallbackChain:
         encode with the format's own coding.  The single transcode function
         the background scheduler also runs — so read-time reconstruction
         and deferred materialization are byte-identical by construction."""
+        return self.transcode_from_parent_timed(store, stream, seg, sf_id)[0]
+
+    def transcode_from_parent_timed(self, store, stream: str, seg: int,
+                         sf_id: str) -> tuple[bytes, float]:
+        """``(blob, seconds)`` where the timer covers only *this level's*
+        decode+encode — the recursive parent fetch is excluded, because a
+        reconstructed parent charges its own write-back; including it here
+        would bill the bucket twice for the same ancestor transcode."""
         from ..codec import segment as codec
         parent = self.parents[sf_id]
         parent_blob = self._blob_of(store, stream, seg, parent)
+        t0 = time.perf_counter()
         parent_frames = codec.decode_segment(parent_blob)
-        return store.encode_format(parent_frames,
+        blob = store.encode_format(parent_frames,
                                    self.formats[parent].fidelity,
                                    self.formats[sf_id])
+        return blob, time.perf_counter() - t0
 
     def stats(self) -> dict:
         with self._lock:

@@ -42,6 +42,22 @@ from ..core.knobs import FidelityOption
 from .fallback import ByteRatioProfiler, FallbackChain
 
 
+def recovery_rank_for(config, spec, profiler=None) -> dict[str, float]:
+    """sf_id -> recovery cost for a derived configuration: how much the
+    consumer fleet slows down when that format is absent and reads fall
+    back to its ancestor (``core.erosion.recovery_cost`` chain math).
+    The single ranking shared by the scheduler's transcode priorities and
+    the serving cache's erosion-aware eviction.  ``profiler`` defaults to
+    the deterministic byte-ratio model."""
+    prof = profiler or ByteRatioProfiler(spec)
+    subs = {}
+    for i, node in enumerate(config.nodes):
+        for p in node.plans:
+            subs[p] = i
+    by_idx = recovery_cost(prof, config.nodes, subs)
+    return {config.node_id(i): c for i, c in by_idx.items()}
+
+
 @dataclasses.dataclass(order=True)
 class TranscodeTask:
     """One deferred materialization, ordered most-expensive-to-recover
@@ -51,6 +67,34 @@ class TranscodeTask:
     seg: int = dataclasses.field(compare=False)
     sf_id: str = dataclasses.field(compare=False)
     est_s: float = dataclasses.field(compare=False, default=0.0)
+
+
+class BudgetLease:
+    """Externally-owned slice of a transcode budget.
+
+    The scheduler reads its rate (encode-seconds per arriving video-second)
+    from the lease instead of owning it; the lease's owner — a cluster
+    coordinator splitting one global budget across shard schedulers, or
+    the scheduler itself when constructed standalone — adjusts the share
+    with ``grant``.  A raise re-credits the attached scheduler's token
+    bucket retroactively (same semantics ``set_budget_x`` always had), so
+    reassigned budget starts draining debt immediately."""
+
+    def __init__(self, budget_x: float | None = None):
+        self.budget_x = budget_x
+        self._sched: "IngestScheduler | None" = None
+
+    def attach(self, scheduler: "IngestScheduler") -> None:
+        if self._sched is not None and self._sched is not scheduler:
+            raise ValueError("lease already attached to another scheduler")
+        self._sched = scheduler
+
+    def grant(self, budget_x: float | None) -> None:
+        """Set the leased rate (None = unbounded)."""
+        if self._sched is None:
+            self.budget_x = budget_x
+            return
+        self._sched._regrant(budget_x)
 
 
 @dataclasses.dataclass
@@ -65,25 +109,37 @@ class IngestScheduler:
     """Live ingestion front end for one ``VideoStore``."""
 
     def __init__(self, store, config=None, *, budget_x: float | None = None,
+                 lease: BudgetLease | None = None,
                  profiler=None, golden_id: str | None = None,
-                 shed_debt_s: float | None = None, ema: float = 0.3):
+                 shed_debt_s: float | None = None, ema: float = 0.3,
+                 materialize_on_read: bool = False):
         """``config`` (a DerivedConfig) supplies consumer subscriptions for
         the recovery-cost ranking; ``profiler`` supplies measured retrieval
         speeds for it (falling back to the deterministic byte-ratio model).
         ``budget_x`` is the transcode-cycle budget in encode-seconds per
-        arriving video-second (None = unbounded).  ``shed_debt_s`` caps the
-        queue's estimated debt: beyond it the cheapest-to-recover tasks are
-        shed (kept aside, re-enqueueable via ``requeue_shed``)."""
+        arriving video-second (None = unbounded); passing ``lease`` instead
+        hands rate ownership to an external coordinator (see
+        ``BudgetLease``).  ``shed_debt_s`` caps the queue's estimated debt:
+        beyond it the cheapest-to-recover tasks are shed (kept aside,
+        re-enqueueable via ``requeue_shed``).  ``materialize_on_read=True``
+        writes fallback-chain reconstructions back to the store (charged
+        to this budget) so hot unmaterialized segments stop paying the
+        chain walk."""
         if not store.formats:
             raise ValueError("store has no formats installed")
+        if lease is not None and budget_x is not None:
+            raise ValueError("pass budget_x or lease, not both")
         self.store = store
         self.spec = store.spec
-        self.budget_x = budget_x
+        self.lease = lease if lease is not None else BudgetLease(budget_x)
+        self.lease.attach(self)
         self.shed_debt_s = shed_debt_s
         self._ema = ema
         self.fallback = FallbackChain(store.formats, store.spec,
                                       golden_id=golden_id)
         store.set_fallback(self.fallback)
+        if materialize_on_read:
+            self.fallback.enable_write_back(self._charge_write_back)
         self.golden_id = self.fallback.golden_id
         self._rank = self._build_rank(config, profiler)
         self._mu = threading.Lock()
@@ -102,19 +158,22 @@ class IngestScheduler:
         self.shed_total = 0
         self.task_errors = 0
         self.last_task_error: str | None = None
+        self.write_backs = 0         # materialize-on-read blobs persisted
+        self.write_back_s = 0.0      # ... and their budget charge
+        self.write_backs_skipped = 0  # skipped: bucket had no credit
         self._on_ingest: list = []   # callbacks(stream, seg) after golden
+
+    @property
+    def budget_x(self) -> float | None:
+        """Current transcode rate — read through the (possibly externally
+        owned) lease."""
+        return self.lease.budget_x
 
     # -- ranking --------------------------------------------------------------
     def _build_rank(self, config, profiler) -> dict[str, float]:
         """sf_id -> recovery cost (higher = materialize sooner)."""
         if config is not None:
-            prof = profiler or ByteRatioProfiler(self.spec)
-            subs = {}
-            for i, node in enumerate(config.nodes):
-                for p in node.plans:
-                    subs[p] = i
-            by_idx = recovery_cost(prof, config.nodes, subs)
-            return {config.node_id(i): c for i, c in by_idx.items()}
+            return recovery_rank_for(config, self.spec, profiler)
         # no config: deeper formats are cheaper to recover (their parent is
         # closer in fidelity), golden never queued anyway
         return {sid: float("inf") if sid == self.golden_id
@@ -206,20 +265,124 @@ class IngestScheduler:
             return len(self._queue)
 
     def set_budget_x(self, budget_x: float | None):
-        """Raise/lower the transcode budget (None = unbounded).  A raise
-        re-credits the bucket retroactively — credit becomes at least
-        ``new_rate × video-seconds-arrived − encode-seconds-spent`` — and
-        wakes the worker, so accumulated debt the new budget can afford
-        starts draining immediately rather than waiting for new arrivals."""
+        """Raise/lower the transcode budget through the lease (None =
+        unbounded)."""
+        self.lease.grant(budget_x)
+
+    def _regrant(self, budget_x: float | None):
+        """Lease-owner rate change.  A raise re-credits the bucket
+        retroactively — credit becomes at least ``new_rate ×
+        video-seconds-arrived − encode-seconds-spent`` — and wakes the
+        worker, so accumulated debt the new budget can afford starts
+        draining immediately rather than waiting for new arrivals."""
         with self._mu:
-            raised = budget_x is None or (self.budget_x is not None
-                                          and budget_x > self.budget_x)
-            self.budget_x = budget_x
+            cur = self.lease.budget_x
+            raised = budget_x is None or (cur is not None
+                                          and budget_x > cur)
+            self.lease.budget_x = budget_x
             if raised and budget_x is not None:
                 self._credit = max(
                     self._credit,
                     budget_x * self._video_s_arrived - self._spent_s)
             self._work.notify_all()
+
+    # -- materialize-on-read --------------------------------------------------
+    def _charge_write_back(self, store, stream: str, seg: int, sf_id: str,
+                           blob: bytes, dt: float) -> bool:
+        """Persist a fallback-chain reconstruction, charged to this budget.
+
+        The transcode cost ``dt`` was already paid serving the read; the
+        charge debits the token bucket so the materialization is accounted
+        exactly as if the background worker had run the queued task (which
+        now becomes a no-op via its ``has_segment`` check).  Skipped —
+        returning False — when the bucket is out of credit: under budget
+        pressure hot segments keep paying the chain walk rather than
+        sneaking materialization past the budget.  Never raises: the
+        write-back is an optional optimization riding on a read that is
+        already served (the blob is in hand and memoized), so a persist
+        failure is recorded, not propagated — and the bucket is only
+        debited after the persist actually succeeded."""
+        with self._mu:
+            if self.budget_x is not None and self._credit <= 0:
+                self.write_backs_skipped += 1
+                return False
+        try:
+            store.put_segment(stream, seg, sf_id, blob, encode_s=dt)
+        except Exception as e:  # noqa: BLE001
+            with self._mu:
+                self.task_errors += 1
+                self.last_task_error = f"write-back: {type(e).__name__}: {e}"
+            return False
+        with self._mu:
+            if self.budget_x is not None:
+                self._credit -= dt
+            self._spent_s += dt
+            self.write_backs += 1
+            self.write_back_s += dt
+        return True
+
+    def adopt_missing(self, streams: list[str] | None = None) -> int:
+        """Re-enqueue transcode tasks for stored golden segments whose
+        non-golden formats are not materialized.
+
+        The queue is in-memory: a process crash after golden was acked
+        (durable) but before background materialization loses the pending
+        tasks, which would otherwise leave those formats on the fallback
+        chain forever *and* invisible to debt accounting.  A restarted
+        owner (the cluster's ShardWorker) calls this on startup so the
+        backlog is visible and drainable again.  Estimates seed from the
+        EMA when available, else the raw-byte-ratio model against a
+        nominal golden cost; they converge after the first real task.
+
+        The arrived-footage ledger is restored from the durable store
+        alongside: the token bucket accrues credit per *arrived*
+        video-second, so a restart that zeroed ``_video_s_arrived`` would
+        make every future finite grant compute a retroactive credit of
+        zero and the adopted backlog could never drain under budget.  The
+        re-adopted footage genuinely needs its transcodes redone, so
+        granting budget for it again is the honest accounting.
+
+        Returns the number of tasks enqueued."""
+        if streams is None:
+            streams = sorted({k.split(":", 1)[0]
+                              for k in self.store.backend.keys()})
+        with self._mu:
+            have = {(t.stream, t.seg, t.sf_id)
+                    for t in self._queue + self._shed}
+            golden_dt = self._est_s.get(self.golden_id,
+                                        0.05 * self.spec.segment_seconds)
+            n = 0
+            adopted_video_s = 0.0
+            for stream in streams:
+                golden_segs = self.store.available_segments(stream,
+                                                            self.golden_id)
+                st = self._streams.setdefault(stream, _StreamState())
+                known = st.segments
+                st.segments = max(known, len(golden_segs))
+                st.video_seconds = st.segments * self.spec.segment_seconds
+                adopted_video_s += (st.segments - known) \
+                    * self.spec.segment_seconds
+                for seg in golden_segs:
+                    for sf_id in self.store.formats:
+                        if sf_id == self.golden_id:
+                            continue
+                        if (stream, seg, sf_id) in have:
+                            continue
+                        if self.store.has_segment(stream, seg, sf_id):
+                            continue
+                        task = TranscodeTask(
+                            self._sort_key(sf_id, seg, stream), stream,
+                            seg, sf_id,
+                            est_s=self._estimate(sf_id, golden_dt))
+                        bisect.insort(self._queue, task)
+                        n += 1
+            self._video_s_arrived += adopted_video_s
+            if self.budget_x is not None:
+                self._credit += self.budget_x * adopted_video_s
+            self._shed_over_cap_locked()
+            if n:
+                self._work.notify_all()
+            return n
 
     def requeue_shed(self) -> int:
         """Put shed tasks back on the queue (after a budget raise)."""
@@ -241,10 +404,17 @@ class IngestScheduler:
     def _run_task(self, task: TranscodeTask):
         if self.store.has_segment(task.stream, task.seg, task.sf_id):
             return  # raced with another materializer
-        t0 = time.perf_counter()
-        blob = self.fallback.transcode_from_parent(
+        # bill only this level's decode+encode: an unmaterialized parent
+        # fetched inside the call charges itself (its own queued task, or
+        # a materialize-on-read write-back) — an inclusive timer would
+        # debit the bucket twice for the same ancestor transcode
+        blob, dt = self.fallback.transcode_from_parent_timed(
             self.store, task.stream, task.seg, task.sf_id)
-        dt = time.perf_counter() - t0
+        # a concurrent materialize-on-read may have landed (and charged)
+        # this exact blob during our slow transcode; overwriting would
+        # double-bill the bucket and orphan the bytes it just wrote
+        if self.store.has_segment(task.stream, task.seg, task.sf_id):
+            return
         self.store.put_segment(task.stream, task.seg, task.sf_id, blob,
                                encode_s=dt)
         with self._mu:
@@ -370,6 +540,9 @@ class IngestScheduler:
                 "transcode_s": self.transcode_s,
                 "task_errors": self.task_errors,
                 "last_task_error": self.last_task_error,
+                "write_backs": self.write_backs,
+                "write_back_s": self.write_back_s,
+                "write_backs_skipped": self.write_backs_skipped,
                 "video_seconds": total_video,
                 "fallback": self.fallback.stats(),
             }

@@ -1,0 +1,145 @@
+"""Sharded multi-process launcher: ``python -m repro.launch.vcluster``.
+
+Spawns ``--shards`` worker processes (each a full per-shard VStore stack
+over its own store directory), ingests N simulated camera streams through
+the scatter-gather router — each stream hashes to exactly one shard — and
+drives a mixed concurrent query workload through the cluster, verifying
+the merged answers bit-identical against a single-process reference store.
+With ``--budget-x`` the workers run live-ingest schedulers whose budget
+leases the ``ClusterIngest`` coordinator owns and rebalances; with
+``--erode-days`` erosion passes run cluster-wide and the reclaimed bytes
+roll up in the coordinator's report.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import time
+
+from ..analytics.query import run_query
+from ..analytics.scene import generate_segment
+from ..cluster import ClusterIngest, ShardRouter, merge_results
+from ..core.knobs import IngestSpec
+from ..videostore import VideoStore
+from .vserve import demo_config, demo_erosion_plan
+
+DEFAULT_STREAMS = ("jackson", "miami", "tucson", "dashcam",
+                   "airport", "plaza", "harbor", "depot")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default="/tmp/repro_vcluster")
+    ap.add_argument("--shards", type=int, default=2)
+    ap.add_argument("--streams", type=int, default=4)
+    ap.add_argument("--segments", type=int, default=3)
+    ap.add_argument("--queries", type=int, default=8)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="query worker threads inside each shard process")
+    ap.add_argument("--budget-x", type=float, default=None,
+                    help="run live-ingest schedulers in the workers under "
+                         "this global transcode budget (default: blocking "
+                         "full materialization)")
+    ap.add_argument("--erode-days", type=int, default=0)
+    ap.add_argument("--verify", action="store_true",
+                    help="rebuild the same content single-process and check "
+                         "the cluster's answers are bit-identical")
+    args = ap.parse_args(argv)
+
+    cfg = demo_config()
+    spec = IngestSpec()
+    shutil.rmtree(args.root, ignore_errors=True)
+    names = [DEFAULT_STREAMS[i % len(DEFAULT_STREAMS)] +
+             ("" if i < len(DEFAULT_STREAMS) else f"-{i}")
+             for i in range(args.streams)]
+    segs = list(range(args.segments))
+
+    opts = {"workers": args.workers}
+    if args.budget_x is not None:
+        opts.update(ingest=True, budget_x=args.budget_x,
+                    materialize_on_read=True)
+        if args.erode_days:
+            from ..cluster import erosion_plan_to_wire
+            plan = demo_erosion_plan(cfg, spec, args.erode_days)
+            opts.update(
+                erosion_plan=erosion_plan_to_wire(plan),
+                node_ids=[cfg.node_id(i) for i in range(len(cfg.nodes))])
+
+    with ShardRouter(os.path.join(args.root, "cluster"), cfg, args.shards,
+                     spec=spec, opts=opts) as router:
+        coord = (ClusterIngest(router, budget_x=args.budget_x)
+                 if args.budget_x is not None else None)
+        by_shard: dict[int, list[str]] = {}
+        for n in names:
+            by_shard.setdefault(router.shard_of(n), []).append(n)
+        print(f"{args.shards} shards; stream placement: "
+              + "; ".join(f"shard {i}: {', '.join(ss)}"
+                          for i, ss in sorted(by_shard.items())))
+
+        t0 = time.perf_counter()
+        for seg in segs:
+            for n in names:
+                frames, _ = generate_segment(n, seg, spec)
+                (coord or router).ingest(n, seg, frames)
+        ingest_wall = time.perf_counter() - t0
+        vsec = args.streams * args.segments * spec.segment_seconds
+        print(f"ingested {args.streams * args.segments} segments "
+              f"({vsec:.0f} video-seconds) in {ingest_wall:.2f}s "
+              f"-> {vsec / ingest_wall:.1f}x realtime across the cluster")
+        if coord is not None:
+            st = coord.stats()
+            print(f"transcode debt {st['debt_s']:.2f}s est across shards "
+                  f"({st['pending']} pending); grants "
+                  f"{[f'{g:.2f}' if g else g for g in coord.grants]}")
+
+        mix = [("A", 0.8), ("B", 0.8), ("A", 0.9), ("B", 0.9)]
+        subs = [(mix[i % 4][0], names[i % len(names)], segs, mix[i % 4][1])
+                for i in range(args.queries)]
+        router.query_many(subs)  # warm each worker's jit caches
+        t0 = time.perf_counter()
+        results = router.query_many(subs)
+        wall = time.perf_counter() - t0
+        qsec = sum(r.video_seconds for r in results)
+        print(f"served {len(subs)} queries ({qsec:.0f} video-seconds) in "
+              f"{wall:.2f}s -> aggregate {qsec / wall:.0f}x realtime")
+        st = router.stats()
+        print(f"cluster: {st['completed']} completed over "
+              f"{st['n_shards']} shards, {st['restarts']} restarts, "
+              f"cache hit rate {st['cache']['hit_rate']:.2f}, "
+              f"{st['decodes']} decodes")
+
+        if coord is not None:
+            coord.set_budget_x(None)
+            n = coord.drain()
+            cst = coord.stats()  # one cluster-wide sweep, read twice
+            print(f"budget raised -> drained {n} transcodes "
+                  f"(debt now {cst['debt_s']:.2f}s, "
+                  f"write-backs {cst['write_backs']})")
+
+        if args.verify:
+            ref = VideoStore(os.path.join(args.root, "ref"), spec)
+            ref.set_formats(cfg.storage_formats())
+            for seg in segs:
+                for n in names:
+                    frames, _ = generate_segment(n, seg, spec)
+                    ref.ingest_segment(n, seg, frames)
+            ok = all(
+                res.items == run_query(ref, cfg, q, s, list(sg), acc).items
+                for (q, s, sg, acc), res in zip(subs, results))
+            multi = router.query("A", names, segs, 0.8)
+            ref_multi = merge_results(
+                {n: run_query(ref, cfg, "A", n, segs, 0.8) for n in names})
+            ok &= multi.items == ref_multi.items
+            print(f"cluster answers bit-identical to single-process: {ok}")
+
+        if args.erode_days and coord is not None:
+            rep = coord.erode_advance(args.erode_days)
+            print(f"cluster erosion day {rep['day']}: -{rep['segments']} "
+                  f"segments, {rep['bytes']} bytes reclaimed "
+                  f"({', '.join(rep['per_format']) or 'nothing'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,13 +18,12 @@ import shutil
 import time
 
 from ..analytics.query import run_query
-from ..core.erosion import plan_erosion
-from ..ingest import (ByteRatioProfiler, ErosionExecutor, IngestScheduler,
-                      StreamSource, interleave)
+from ..ingest import (ErosionExecutor, IngestScheduler, StreamSource,
+                      interleave)
 from ..core.knobs import IngestSpec
 from ..serving import VStoreServer
 from ..videostore import VideoStore
-from .vserve import demo_config
+from .vserve import demo_config, demo_erosion_plan
 
 DEFAULT_STREAMS = ("jackson", "miami", "tucson", "dashcam")
 
@@ -80,12 +79,7 @@ def main(argv=None):
     sched = IngestScheduler(vs, cfg, budget_x=budget_x)
     executor = None
     if args.erode_days:
-        prof = ByteRatioProfiler(spec)
-        subs = {p: i for i, n in enumerate(cfg.nodes) for p in n.plans}
-        daily = [spec.raw_bytes_per_segment(n.fidelity) * 86400
-                 / spec.segment_seconds for n in cfg.nodes]
-        plan = plan_erosion(prof, cfg.nodes, subs, daily, args.erode_days,
-                            0.5 * sum(daily) * args.erode_days)
+        plan = demo_erosion_plan(cfg, spec, args.erode_days)
         executor = ErosionExecutor(
             vs, plan, [cfg.node_id(i) for i in range(len(cfg.nodes))])
         sched.on_ingest(executor.note_ingested)

@@ -56,6 +56,20 @@ def demo_config(accuracies=(0.8, 0.9)) -> DerivedConfig:
                          coalesce_log=_Log())
 
 
+def demo_erosion_plan(cfg: DerivedConfig, spec: IngestSpec, days: int):
+    """The demo launchers' shared erosion plan: byte-ratio profiler, daily
+    volume from the raw segment bytes of each node, storage budget at 50%
+    of the unretired volume over ``days``."""
+    from ..core.erosion import plan_erosion
+    from ..ingest import ByteRatioProfiler
+    prof = ByteRatioProfiler(spec)
+    subs = {p: i for i, n in enumerate(cfg.nodes) for p in n.plans}
+    daily = [spec.raw_bytes_per_segment(n.fidelity) * 86400
+             / spec.segment_seconds for n in cfg.nodes]
+    return plan_erosion(prof, cfg.nodes, subs, daily, days,
+                        0.5 * sum(daily) * days)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--root", default="/tmp/repro_vserve")

@@ -14,10 +14,11 @@ cache -> planner -> executor -> server (see README.md):
 from .cache import CacheStats, DecodedSegmentCache
 from .executor import run_pipelined
 from .planner import DecodeTask, Request, RetrievalPlanner
-from .server import AdmissionError, QueryTicket, VStoreServer
+from .server import (AdmissionError, QueryRequest, QueryTicket, VStoreServer,
+                     recovery_rank_for)
 
 __all__ = [
     "AdmissionError", "CacheStats", "DecodedSegmentCache", "DecodeTask",
-    "QueryTicket", "Request", "RetrievalPlanner", "VStoreServer",
-    "run_pipelined",
+    "QueryRequest", "QueryTicket", "Request", "RetrievalPlanner",
+    "VStoreServer", "recovery_rank_for", "run_pipelined",
 ]

@@ -70,6 +70,7 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     oversize: int = 0        # decodes too large to cache under the budget
+    admission_rejects: int = 0  # ranked cheaper than everything resident
     inserted_bytes: int = 0
 
     @property
@@ -86,10 +87,21 @@ class CacheStats:
 
 
 class DecodedSegmentCache:
-    """Thread-safe LRU over decoded segments with a hard byte budget."""
+    """Thread-safe LRU over decoded segments with a hard byte budget.
 
-    def __init__(self, max_bytes: int = 256 << 20):
+    ``recovery_rank`` switches eviction from pure LRU to the erosion value
+    model: a map ``sf_id -> recovery cost`` (``core.erosion.recovery_cost``
+    chain math — how much the consumer fleet slows down when that format
+    must be re-fetched/reconstructed).  Under byte pressure the entry whose
+    format is *cheapest to recover* is evicted first (LRU order breaks
+    ties within a cost tier), so the cache spends its budget on the
+    decodes that are genuinely expensive to regenerate instead of merely
+    the most recently touched ones."""
+
+    def __init__(self, max_bytes: int = 256 << 20,
+                 recovery_rank: dict[str, float] | None = None):
         self.max_bytes = int(max_bytes)
+        self.recovery_rank = dict(recovery_rank) if recovery_rank else None
         self._lock = threading.Lock()
         self._entries: OrderedDict[Key, CacheEntry] = OrderedDict()
         self._by_segment: dict[tuple, list[Key]] = {}
@@ -134,8 +146,12 @@ class DecodedSegmentCache:
     def insert(self, stream: str, seg: int, sf_id: str, cf: FidelityOption,
                want: np.ndarray, frames: np.ndarray) -> bool:
         """Cache a decode.  ``want`` must be sorted unique and match
-        ``frames`` row-for-row.  Returns False when the decode alone
-        overflows the byte budget (not cached)."""
+        ``frames`` row-for-row.  Returns False when the decode was not
+        admitted: it alone overflows the byte budget, or (erosion-aware
+        eviction) it ranks cheaper to recover than everything resident —
+        admitting it only to evict it in the same breath would make every
+        cheap-format decode an insert/evict churn that callers would
+        mistake for a successful cache fill."""
         frames = np.ascontiguousarray(frames)
         entry = CacheEntry(stream, seg, sf_id, cf, np.asarray(want).copy(),
                            frames, frames.nbytes)
@@ -151,13 +167,27 @@ class DecodedSegmentCache:
             self._entries[key] = entry
             self._by_segment.setdefault((stream, seg, sf_id), []).append(key)
             self._bytes += entry.nbytes
-            self.stats.inserted_bytes += entry.nbytes
             while self._bytes > self.max_bytes:
-                _, victim = self._entries.popitem(last=False)
+                victim = self._evict_one_locked()
                 self._drop_index(victim)
                 self._bytes -= victim.nbytes
+                if victim is entry:  # the newcomer lost to the residents
+                    self.stats.admission_rejects += 1
+                    return False
                 self.stats.evictions += 1
+            self.stats.inserted_bytes += entry.nbytes
             return True
+
+    def _evict_one_locked(self) -> CacheEntry:
+        if self.recovery_rank is None:
+            return self._entries.popitem(last=False)[1]
+        # erosion-aware: cheapest-to-recover format first; within a cost
+        # tier the least recently used entry goes (min is stable and dict
+        # order is recency, oldest first).  Unranked formats score +inf,
+        # matching golden's never-shed rank.
+        vkey = min(self._entries,
+                   key=lambda k: self.recovery_rank.get(k[2], float("inf")))
+        return self._entries.pop(vkey)
 
     def _drop_index(self, entry: CacheEntry):
         skey = (entry.stream, entry.seg, entry.sf_id)

@@ -20,7 +20,7 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
-from ..analytics.batch import BatchedConsumer
+from ..analytics.batch import DEFAULT_BATCH_SHAPES, BatchedConsumer
 from ..analytics.operators import _positions
 from ..analytics.query import (QueryResult, StageStats, _active_frame_mask,
                                stage_specs)
@@ -29,7 +29,8 @@ from ..analytics.query import (QueryResult, StageStats, _active_frame_mask,
 def run_pipelined(store, config, query: str, stream: str, segments: list[int],
                   accuracy: float, retriever=None,
                   prefetch_depth: int = 1,
-                  batch_segments: int = 4) -> QueryResult:
+                  batch_segments: int = 4,
+                  batch_shapes: tuple[int, ...] | None = None) -> QueryResult:
     """Execute a cascade with retrieval/consumption overlap.
 
     ``retriever`` has ``store.retrieve``'s signature (the serving layer
@@ -44,7 +45,9 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
         raise ValueError(f"batch_segments must be >= 0, got {batch_segments}")
     spec = store.spec
     fetch = retriever or store.retrieve
-    consumer = BatchedConsumer(spec) if batch_segments else None
+    consumer = (BatchedConsumer(spec, shapes=batch_shapes or
+                                DEFAULT_BATCH_SHAPES)
+                if batch_segments else None)
     group = batch_segments
     stages: list[StageStats] = []
     active: dict[int, set] | None = None

@@ -36,6 +36,39 @@ class AdmissionError(RuntimeError):
 
 
 @dataclasses.dataclass
+class QueryRequest:
+    """Serialize-friendly form of one cascade submission — plain scalars
+    only, so a request can cross a process boundary (the cluster router
+    ships these to shard workers) or be logged/replayed verbatim."""
+    query: str
+    stream: str
+    segments: list[int]
+    accuracy: float
+    block: bool = False
+
+    def to_wire(self) -> dict:
+        return {"query": self.query, "stream": self.stream,
+                "segments": [int(s) for s in self.segments],
+                "accuracy": float(self.accuracy), "block": self.block}
+
+    @staticmethod
+    def from_wire(d: dict) -> "QueryRequest":
+        return QueryRequest(d["query"], d["stream"],
+                            [int(s) for s in d["segments"]],
+                            float(d["accuracy"]), bool(d.get("block", False)))
+
+
+def recovery_rank_for(config, spec, profiler=None) -> dict[str, float]:
+    """sf_id -> recovery cost for a derived configuration — the identical
+    ranking the ingest scheduler prioritizes transcode work with
+    (``repro.ingest.scheduler.recovery_rank_for``), reused here to rank
+    cache entries.  Deferred import: serving must stay importable without
+    dragging the ingest layer in at module load."""
+    from ..ingest.scheduler import recovery_rank_for as rank
+    return rank(config, spec, profiler)
+
+
+@dataclasses.dataclass
 class QueryTicket:
     qid: int
     query: str
@@ -53,18 +86,32 @@ class VStoreServer:
     def __init__(self, store, config, *, workers: int = 4,
                  max_inflight: int = 16, cache_bytes: int = 256 << 20,
                  prefetch_depth: int = 1, batch_segments: int = 4,
-                 attach: bool = False, collapse: bool = True):
+                 batch_shapes: tuple[int, ...] | None = None,
+                 attach: bool = False, collapse: bool = True,
+                 cache_policy: str = "lru"):
+        """``cache_policy`` selects the decoded-segment cache's eviction
+        order: ``"lru"`` (default) or ``"erosion"`` — evict the entry whose
+        storage format is cheapest to recover (``recovery_rank_for``), so
+        byte pressure spares the decodes that are expensive to redo.
+        ``batch_shapes`` overrides the batched consumer's static shape
+        ladder (e.g. one derived from the profiler's measured dispatch
+        overhead, ``repro.analytics.batch.derive_shapes``)."""
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
+        if cache_policy not in ("lru", "erosion"):
+            raise ValueError(f"unknown cache_policy {cache_policy!r}")
         self.store = store
         self.config = config
-        self.cache = DecodedSegmentCache(cache_bytes)
+        rank = (recovery_rank_for(config, store.spec)
+                if cache_policy == "erosion" else None)
+        self.cache = DecodedSegmentCache(cache_bytes, recovery_rank=rank)
         self.planner = RetrievalPlanner(store, self.cache)
         self.max_inflight = max_inflight
         self.prefetch_depth = prefetch_depth
         self.batch_segments = batch_segments
+        self.batch_shapes = batch_shapes
         self._pool = ThreadPoolExecutor(workers,
                                         thread_name_prefix="vstore-query")
         self._mu = threading.Lock()
@@ -162,7 +209,8 @@ class VStoreServer:
                                 segments, accuracy,
                                 retriever=self.planner.fetch,
                                 prefetch_depth=self.prefetch_depth,
-                                batch_segments=self.batch_segments)
+                                batch_segments=self.batch_segments,
+                                batch_shapes=self.batch_shapes)
             with self._mu:
                 self.completed += 1
                 self.video_seconds += res.video_seconds
@@ -178,6 +226,12 @@ class VStoreServer:
                 self._live.pop(live_key, None)
                 self._inflight -= 1
                 self._slot_freed.notify()
+
+    def submit_request(self, req: QueryRequest) -> QueryTicket:
+        """``submit`` over the serialize-friendly request form (what a
+        shard worker calls after unpacking a router frame)."""
+        return self.submit(req.query, req.stream, req.segments, req.accuracy,
+                           block=req.block)
 
     def run_batch(self, submissions: list[tuple], block: bool = True
                   ) -> list[QueryResult]:

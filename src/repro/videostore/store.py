@@ -22,13 +22,20 @@ _SHARD_LIMIT = 64 * 1024 * 1024
 
 class SegmentStore:
     def __init__(self, root: str, auto_compact_frac: float | None = 0.5,
-                 auto_compact_min_bytes: int = 1 << 16):
+                 auto_compact_min_bytes: int = 1 << 16,
+                 readonly: bool = False):
+        """``readonly=True`` attaches without any mutation: writes raise,
+        auto-compaction is off, and the load-time orphan-shard sweep is
+        skipped — safe for inspecting a store another process owns (the
+        cluster router's shard identity checks)."""
         if auto_compact_frac is not None and not 0 < auto_compact_frac <= 1:
             raise ValueError(f"auto_compact_frac must be in (0, 1], "
                              f"got {auto_compact_frac}")
         self.root = root
-        os.makedirs(root, exist_ok=True)
-        self.auto_compact_frac = auto_compact_frac
+        self.readonly = readonly
+        if not readonly:
+            os.makedirs(root, exist_ok=True)
+        self.auto_compact_frac = None if readonly else auto_compact_frac
         self.auto_compact_min_bytes = auto_compact_min_bytes
         self._lock = threading.Lock()
         self._index: dict[str, tuple[int, int, int]] = {}
@@ -58,6 +65,8 @@ class SegmentStore:
         self._shard_size = raw["shard_size"]
         self._live_bytes = sum(v[2] for v in self._index.values())
         self._dead_bytes = raw.get("dead_bytes", 0)
+        if self.readonly:
+            return  # the orphan sweep below mutates; owner's job
         # drop shard files the durable index no longer references — the
         # garbage a crash may leave on either side of a compaction (old
         # shards not yet removed, or new shards written before the index
@@ -71,6 +80,8 @@ class SegmentStore:
                     os.remove(os.path.join(self.root, name))
 
     def flush(self):
+        if self.readonly:
+            return  # nothing of ours to persist
         with self._lock:
             self._flush_locked()
 
@@ -85,8 +96,13 @@ class SegmentStore:
             f.write(blob)
         os.replace(tmp, self._index_path())  # atomic
 
+    def _check_writable(self):
+        if self.readonly:
+            raise RuntimeError(f"read-only SegmentStore at {self.root}")
+
     # -- KV API --------------------------------------------------------------
     def put(self, key: str, value: bytes):
+        self._check_writable()
         with self._lock:
             if self._shard_size + len(value) > _SHARD_LIMIT and self._shard_size:
                 self._shard_id += 1
@@ -130,6 +146,7 @@ class SegmentStore:
                     return blob
 
     def delete(self, key: str) -> bool:
+        self._check_writable()
         with self._lock:
             entry = self._index.pop(key, None)
             if entry is None:
@@ -176,6 +193,7 @@ class SegmentStore:
 
     def compact(self):
         """Rewrite shards dropping deleted blobs (reclaims space)."""
+        self._check_writable()
         with self._lock:
             self._compact_locked()
 

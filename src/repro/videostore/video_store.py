@@ -117,13 +117,26 @@ def blob_chunk_profile(blob: bytes) -> tuple[int, int]:
 
 
 class VideoStore:
-    """Owns the on-disk segments for all streams × storage formats."""
+    """Owns the on-disk segments for all streams × storage formats.
 
-    def __init__(self, root: str, spec: IngestSpec | None = None):
+    ``readonly=True`` attaches to an existing store without mutating it —
+    no meta/identity writes, no compaction, writes raise — so another
+    process (the cluster router) can inspect formats and the persisted
+    ``store_id`` of a shard a worker process owns.  ``store_id`` is a
+    random token minted when a writable store first touches its meta file
+    and stable for the store's lifetime; the router's generation-checked
+    reattach uses it to prove a restarted worker reopened the same data.
+    """
+
+    def __init__(self, root: str, spec: IngestSpec | None = None,
+                 readonly: bool = False):
         self.root = root
         self.spec = spec or IngestSpec()
-        self.backend = SegmentStore(os.path.join(root, "segments"))
+        self.readonly = readonly
+        self.backend = SegmentStore(os.path.join(root, "segments"),
+                                    readonly=readonly)
         self.formats: dict[str, StorageFormat] = {}
+        self.store_id: str | None = None
         self.ingest_stats: dict[str, IngestStats] = {}
         self._meta_path = os.path.join(root, "meta.json")
         self._retriever = None  # serving-layer hook (see attach_retriever)
@@ -132,11 +145,16 @@ class VideoStore:
         # transcodes (worker thread) concurrently; stats stay consistent
         self._stats_mu = threading.Lock()
         self._load_meta()
+        if self.store_id is None and not readonly:
+            self.store_id = os.urandom(8).hex()
+            self._save_meta()
 
     # -- configuration -------------------------------------------------------
     def set_formats(self, formats: dict[str, StorageFormat]):
         """Install the storage-format set derived by the config engine.
         Keys are stable sf ids ('sf_g', 'sf1', ...)."""
+        if self.readonly:
+            raise RuntimeError(f"read-only VideoStore at {self.root}")
         self.formats = dict(formats)
         self._save_meta()
 
@@ -150,6 +168,7 @@ class VideoStore:
                 "bypass": sf.coding.bypass,
             } for sid, sf in self.formats.items()
         }
+        blob["__store__"] = {"store_id": self.store_id}
         tmp = self._meta_path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(blob, f, indent=1)
@@ -160,6 +179,7 @@ class VideoStore:
             return
         with open(self._meta_path) as f:
             blob = json.load(f)
+        self.store_id = blob.pop("__store__", {}).get("store_id")
         self.formats = {
             sid: StorageFormat(
                 FidelityOption(v["quality"], v["crop"], v["resolution"],

@@ -281,3 +281,65 @@ def test_config_lookup_error_lists_available(store_and_config):
     with pytest.raises(KeyError) as ei:
         cfg.consumer_speed("nosuchop", 0.8)
     assert "nosuchop" in str(ei.value) and "0.8" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# adaptive batch-shape ladder (profiler-derived)
+# ---------------------------------------------------------------------------
+
+def test_derive_shapes_monotone_in_overhead():
+    from repro.analytics.batch import derive_shapes
+    cheap = derive_shapes(0.0, 1e-4)          # dispatch ~free: fine ladder
+    dear = derive_shapes(5e-2, 1e-4)          # dispatch-dominated: coarse
+    for shapes in (cheap, dear):
+        assert shapes == tuple(sorted(set(shapes)))
+        assert shapes[0] == 8 and shapes[-1] == 256
+        assert all(s % 8 == 0 for s in shapes)
+    assert len(dear) <= len(cheap)
+    # step ratios grow with the breakeven batch
+    assert max(b / a for a, b in zip(dear, dear[1:])) >= \
+        max(b / a for a, b in zip(cheap, cheap[1:]))
+    with pytest.raises(ValueError):
+        derive_shapes(1e-3, 0.0)
+    with pytest.raises(ValueError):
+        derive_shapes(1e-3, 1e-4, min_shape=0)
+
+
+def test_derive_shapes_static_set_keeps_jit_cache_stable():
+    """The derived ladder is a *static* set: any batch size maps to one of
+    its rungs (or the exact oversize), so per-(op, cf) jit entries stay
+    bounded by the rung count — same stability contract as the fixed
+    power-of-two ladder."""
+    from repro.analytics.batch import BatchedConsumer, derive_shapes
+    spec = IngestSpec()
+    shapes = derive_shapes(1e-3, 1e-4, max_shape=64)
+    consumer = BatchedConsumer(spec, shapes=shapes)
+    padded = {consumer._pad_to(n) for n in range(1, 65)}
+    assert padded <= set(shapes)
+    assert len(padded) <= len(shapes)
+
+
+def test_run_query_with_derived_shapes_bit_exact(store_and_config):
+    from repro.analytics.batch import derive_shapes
+    vs, cfg = store_and_config
+    segs = list(range(N_SEGS))
+    base = run_query(vs, cfg, "A", "jackson", segs, 0.8)
+    for shapes in (derive_shapes(0.0, 1e-4),
+                   derive_shapes(5e-2, 1e-4)):
+        got = run_query(vs, cfg, "A", "jackson", segs, 0.8,
+                        batch_segments=4, batch_shapes=shapes)
+        assert got.items == base.items
+
+
+def test_profiler_dispatch_overhead_feeds_ladder():
+    from repro.analytics.batch import derive_shapes
+    from repro.core.profiler import Profiler
+    prof = Profiler(n_segments=1, repeats=2)
+    overhead, per_frame = prof.dispatch_overhead("diff", n_big=32)
+    assert overhead >= 0 and per_frame > 0
+    runs0 = prof.stats.consumption_runs
+    again = prof.dispatch_overhead("diff", n_big=32)
+    assert again == (overhead, per_frame)          # memoized
+    assert prof.stats.consumption_runs == runs0    # no re-measure
+    shapes = derive_shapes(overhead, per_frame)
+    assert shapes[0] >= 8 and shapes[-1] == 256

@@ -1,0 +1,302 @@
+"""Sharded multi-process VStore: wire-form round trips, scatter-gather
+bit-identity vs the single-process path (incl. a hypothesis property over
+query mixes), cluster-wide stats accounting, budget-lease coordination,
+and generation-checked worker restart mid-query."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from _hyp_compat import given, settings, st
+from repro.analytics.query import QueryResult, run_query
+from repro.analytics.scene import generate_segment
+from repro.cluster import (ClusterIngest, ShardRouter, config_from_wire,
+                           config_to_wire, erosion_plan_from_wire,
+                           erosion_plan_to_wire, merge_results, pack,
+                           stable_shard, unpack)
+from repro.core.knobs import IngestSpec
+from repro.launch.vserve import demo_config
+from repro.serving import QueryRequest
+from repro.videostore import VideoStore
+
+SPEC = IngestSpec()
+STREAMS = ["jackson", "tucson"]  # crc32-hash to shards 1 and 0
+SEGS = [0, 1, 2]
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return demo_config(accuracies=(0.8, 0.9))
+
+
+@pytest.fixture(scope="module")
+def ref(cfg, tmp_path_factory):
+    """Single-process reference store with the identical content."""
+    vs = VideoStore(str(tmp_path_factory.mktemp("ref")), SPEC)
+    vs.set_formats(cfg.storage_formats())
+    for s in STREAMS:
+        for g in SEGS:
+            vs.ingest_segment(s, g, generate_segment(s, g, SPEC)[0])
+    return vs
+
+
+@pytest.fixture(scope="module")
+def cluster(cfg, tmp_path_factory):
+    """A 2-shard cluster over the same content (per-shard worker
+    processes, spawn start-method)."""
+    root = str(tmp_path_factory.mktemp("cluster"))
+    router = ShardRouter(root, cfg, 2, spec=SPEC,
+                         opts={"workers": 1}).start()
+    for s in STREAMS:
+        for g in SEGS:
+            router.ingest(s, g, generate_segment(s, g, SPEC)[0])
+    yield router
+    router.close()
+
+
+# ---------------------------------------------------------------------------
+# wire forms (no processes involved)
+# ---------------------------------------------------------------------------
+
+def test_wire_ndarray_roundtrip():
+    arr = np.arange(24, dtype=np.uint8).reshape(2, 3, 4)
+    out = unpack(pack({"x": arr, "n": 3}))
+    assert np.array_equal(out["x"], arr) and out["x"].dtype == np.uint8
+    assert out["n"] == 3
+    out["x"][0, 0, 0] = 99  # decoded arrays must be writable copies
+
+
+def test_wire_config_roundtrip(cfg):
+    back = config_from_wire(config_to_wire(cfg))
+    assert back.storage_formats() == cfg.storage_formats()
+    for p in cfg.plans:
+        op, acc = p.consumer.op, p.consumer.target
+        assert back.consumption_format(op, acc) == p.cf
+        assert back.subscription(back.consumption_format(op, acc)) == \
+            cfg.subscription(cfg.consumption_format(op, acc))
+
+
+def test_wire_query_result_roundtrip(ref, cfg):
+    res = run_query(ref, cfg, "A", "jackson", SEGS, 0.8)
+    back = QueryResult.from_wire(unpack(pack(res.to_wire())))
+    assert back.items == res.items
+    assert back.video_seconds == res.video_seconds
+    assert [s.op for s in back.stages] == [s.op for s in res.stages]
+    assert all(a.cf == b.cf and a.sf_id == b.sf_id and a.frames == b.frames
+               for a, b in zip(back.stages, res.stages))
+
+
+def test_wire_query_request_roundtrip():
+    req = QueryRequest("A", "jackson", [0, 2], 0.9)
+    back = QueryRequest.from_wire(unpack(pack(req.to_wire())))
+    assert back == req
+
+
+def test_wire_erosion_plan_roundtrip():
+    from repro.core.erosion import ErosionPlan
+    plan = ErosionPlan(k=2.0, ages=[1, 3], fractions=[{0: 0.25}, {1: 0.5}],
+                       overall_speed=[1.0, 0.8], daily_bytes=[10.0, 5.0],
+                       total_bytes=30.0, feasible=True)
+    back = erosion_plan_from_wire(unpack(pack(erosion_plan_to_wire(plan))))
+    assert back == plan
+
+
+def test_stable_shard_is_stable():
+    assert stable_shard("jackson", 2) == 1
+    assert stable_shard("tucson", 2) == 0
+    assert all(stable_shard(s, 4) == stable_shard(s, 4) for s in STREAMS)
+
+
+# ---------------------------------------------------------------------------
+# cross-process identity
+# ---------------------------------------------------------------------------
+
+def test_single_stream_bit_identical(cluster, ref, cfg):
+    for q, s, acc in (("A", "jackson", 0.8), ("B", "tucson", 0.9)):
+        got = cluster.query(q, s, SEGS, acc)
+        want = run_query(ref, cfg, q, s, SEGS, acc)
+        assert got.items == want.items
+        assert got.video_seconds == want.video_seconds
+
+
+def test_multi_stream_scatter_gather(cluster, ref, cfg):
+    got = cluster.query("A", STREAMS, SEGS, 0.8)
+    want = merge_results(
+        {s: run_query(ref, cfg, "A", s, SEGS, 0.8) for s in STREAMS})
+    assert got.items == want.items
+    assert got.video_seconds == want.video_seconds
+    # every item carries its stream tag
+    assert {it[0] for it in got.items} <= set(STREAMS)
+
+
+@settings(max_examples=8, deadline=None)
+@given(q=st.sampled_from(["A", "B"]),
+       streams=st.lists(st.sampled_from(STREAMS), min_size=1, max_size=2,
+                        unique=True),
+       segs=st.lists(st.sampled_from(SEGS), min_size=1, max_size=3,
+                     unique=True),
+       acc=st.sampled_from([0.8, 0.9]))
+def test_sharded_identical_property(cluster, ref, cfg, q, streams, segs,
+                                    acc):
+    segs = sorted(segs)
+    got = cluster.query(q, streams if len(streams) > 1 else streams[0],
+                        segs, acc)
+    if len(streams) > 1:
+        want = merge_results(
+            {s: run_query(ref, cfg, q, s, segs, acc) for s in streams})
+    else:
+        want = run_query(ref, cfg, q, streams[0], segs, acc)
+    assert got.items == want.items
+
+
+def test_query_many_multi_stream_no_pool_deadlock(cluster, ref, cfg):
+    """More multi-stream submissions than router pool threads: sub-queries
+    must be flattened into the pool, never nested (an outer task blocking
+    on inner tasks queued behind other outer tasks would hang forever)."""
+    n = cluster._pool._max_workers + 2
+    subs = [("A", STREAMS, [0, 1], 0.8)] * n
+    results = cluster.query_many(subs)
+    want = merge_results(
+        {s: run_query(ref, cfg, "A", s, [0, 1], 0.8) for s in STREAMS})
+    assert all(r.items == want.items for r in results)
+
+
+def test_query_many_order_and_stats_accounting(cluster, ref, cfg):
+    subs = [("A", "jackson", SEGS, 0.8), ("B", "tucson", SEGS, 0.8),
+            ("A", "tucson", SEGS, 0.9), ("B", "jackson", SEGS, 0.9)]
+    before = cluster.stats()
+    results = cluster.query_many(subs)
+    after = cluster.stats()
+    for res, (q, s, sg, acc) in zip(results, subs):
+        assert res.items == run_query(ref, cfg, q, s, sg, acc).items
+    # stable accounting: every submission lands in exactly one shard's
+    # completed counter, and the rollup sums them
+    assert after["completed"] - before["completed"] == len(subs)
+    assert after["completed"] == sum(s["completed"]
+                                     for s in after["shards"])
+    vsec = sum(r.video_seconds for r in results)
+    assert after["video_seconds"] - before["video_seconds"] == \
+        pytest.approx(vsec)
+    assert after["failed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# crash / restart
+# ---------------------------------------------------------------------------
+
+def test_worker_restart_mid_query(cluster, ref, cfg):
+    want = run_query(ref, cfg, "A", "jackson", SEGS, 0.8)
+    host = cluster.host_of("jackson")
+    gen0, sid0, restarts0 = host.generation, host.store_id, host.restarts
+    out = {}
+    t = threading.Thread(target=lambda: out.setdefault(
+        "res", cluster.query("A", "jackson", SEGS, 0.8)))
+    t.start()
+    time.sleep(0.02)
+    host.kill()  # SIGKILL mid-flight; router must reattach and retry
+    t.join(timeout=240)
+    assert not t.is_alive()
+    assert out["res"].items == want.items
+    assert host.restarts == restarts0 + 1
+    assert host.generation == gen0 + 1
+    assert host.store_id == sid0
+    # the restarted worker serves the same durable store
+    st = cluster.stats()
+    assert st["shards"][host.idx]["store_id"] == sid0
+    assert st["shards"][host.idx]["generation"] == gen0 + 1
+    again = cluster.query("B", "jackson", SEGS, 0.9)
+    assert again.items == run_query(ref, cfg, "B", "jackson", SEGS,
+                                    0.9).items
+
+
+def test_readonly_attach_identity(cluster, cfg):
+    host = cluster.hosts[0]
+    ro = VideoStore(host.shard_dir, readonly=True)
+    # the identity the router's reattach path checks, via the same API
+    assert ro.store_id == host.store_id
+    assert sorted(ro.formats) == sorted(cfg.storage_formats())
+    with pytest.raises(RuntimeError):
+        ro.set_formats(ro.formats)
+    with pytest.raises(RuntimeError):
+        ro.backend.put("k", b"v")
+    with pytest.raises(RuntimeError):
+        ro.backend.delete("k")
+    # reads work (another process owns the store; we only observe)
+    keys = ro.backend.keys()
+    assert keys and isinstance(ro.backend.get(keys[0]), bytes)
+
+
+# ---------------------------------------------------------------------------
+# cluster ingest coordination (budget leases over the wire)
+# ---------------------------------------------------------------------------
+
+def test_cluster_ingest_budget_and_erosion(cfg, tmp_path_factory):
+    from repro.launch.vserve import demo_erosion_plan
+    plan = demo_erosion_plan(cfg, SPEC, 2)
+    opts = {"workers": 1, "ingest": True, "budget_x": 0.05,
+            "erosion_plan": erosion_plan_to_wire(plan),
+            "node_ids": [cfg.node_id(i) for i in range(len(cfg.nodes))]}
+    root = str(tmp_path_factory.mktemp("cingest"))
+    with ShardRouter(root, cfg, 2, spec=SPEC, opts=opts) as router:
+        coord = ClusterIngest(router, budget_x=0.05)
+        for s in STREAMS:
+            for g in (0, 1):
+                coord.ingest(s, g, generate_segment(s, g, SPEC)[0])
+        st = coord.stats()
+        # a budget below full materialization leaves debt, rolled up
+        # per-format across both shards
+        assert st["pending"] > 0 and st["debt_s"] > 0
+        assert set(st["formats"]) and all(
+            v["pending"] >= 0 for v in st["formats"].values())
+        # mid-ingest query still answers over the fallback chain
+        mid = router.query("A", "jackson", [0, 1], 0.8)
+        # raise globally through the coordinator's leases -> debt drains
+        coord.set_budget_x(None)
+        assert all(g is None for g in coord.grants)
+        coord.drain()
+        assert coord.stats()["debt_s"] == 0
+        post = router.query("A", "jackson", [0, 1], 0.8)
+        assert post.items == mid.items  # fallback reads were bit-exact
+        # cluster-wide erosion: day clock moves in lockstep, bytes roll up
+        rep = coord.erode_advance(2)
+        assert rep["day"] == 2
+        assert rep["segments"] > 0 and rep["bytes"] > 0
+        assert rep["per_format"]
+        eroded = router.query("A", "jackson", [0, 1], 0.8)
+        assert eroded.items == mid.items  # reconstruction serves reads
+
+
+def test_rebalance_directs_budget_at_backlog(cfg, tmp_path_factory):
+    opts = {"workers": 1, "ingest": True, "budget_x": 0.05}
+    root = str(tmp_path_factory.mktemp("rebalance"))
+    with ShardRouter(root, cfg, 2, spec=SPEC, opts=opts) as router:
+        coord = ClusterIngest(router, budget_x=0.05)
+        for s in STREAMS:  # both shards see equal arrivals
+            for g in (0, 1):
+                coord.ingest(s, g, generate_segment(s, g, SPEC)[0])
+        # clear one shard's backlog out-of-band; the other keeps its debt
+        drained = router.shard_of("tucson")
+        backlogged = 1 - drained
+        router.hosts[drained].call_retry("drain")
+        grants = coord.rebalance()
+        # the whole observed debt sits on one shard: it is granted ~the
+        # cluster's full rate (2x uniform here), the drained shard ~0 —
+        # conserving sum(rate_i * arrivals_i) ~= global * total_arrivals
+        assert grants[backlogged] == pytest.approx(0.10, rel=1e-6)
+        assert grants[drained] == pytest.approx(0.0, abs=1e-9)
+        total = sum(g * 8.0 for g in grants)  # 8 video-seconds per shard
+        assert total == pytest.approx(0.05 * 16.0, rel=1e-6)
+        # crash the backlogged worker: reattach must re-apply the
+        # coordinator's CURRENT grant (a respawn reverts to the spawn-time
+        # budget) and re-adopt the lost transcode queue from the store
+        router.hosts[backlogged].kill()
+        st = coord.stats()  # call_retry reattaches; on_reattach re-grants
+        assert router.hosts[backlogged].generation == 1
+        shard_ing = st["per_shard"][backlogged]
+        assert shard_ing["budget_x"] == pytest.approx(grants[backlogged])
+        assert shard_ing["debt_s"] > 0  # adopt_missing restored backlog
+        coord.set_budget_x(None)
+        coord.drain()
+        assert coord.stats()["debt_s"] == 0

@@ -442,3 +442,129 @@ def test_auto_compact_disabled(tmp_path):
     assert s.auto_compactions == 0 and s.dead_bytes == 16000
     s.compact()
     assert s.dead_bytes == 0
+
+
+# -- materialize-on-read + budget lease -------------------------------------
+
+def test_materialize_on_read_charges_budget(tmp_path, cfg):
+    """A fallback reconstruction is written back (so the next read is a
+    physical hit) and its transcode seconds are debited from the token
+    bucket exactly like a background task's."""
+    vs = VideoStore(str(tmp_path / "vs"), SPEC)
+    vs.set_formats(cfg.storage_formats())
+    sched = IngestScheduler(vs, cfg, budget_x=100.0,
+                            materialize_on_read=True)
+    frames, _ = generate_segment("jackson", 0, SPEC)
+    sched.ingest("jackson", 0, frames)  # golden only; others queued
+    low = cfg.subscription(CF_LOW)
+    mid = cfg.subscription(CF_MID)
+    assert not vs.has_segment("jackson", 0, low)
+    credit0 = sched.stats()["credit_s"]
+    out, cost = vs.retrieve("jackson", 0, low, CF_LOW)
+    assert cost.get("fallback") == 1
+    # the chain walk low -> mid -> golden materialized both ancestors'
+    # reconstructions, each charged to the bucket
+    assert vs.has_segment("jackson", 0, low)
+    assert vs.has_segment("jackson", 0, mid)
+    st = sched.stats()
+    assert st["write_backs"] == 2
+    assert st["write_back_s"] > 0
+    assert st["credit_s"] < credit0
+    # the write-back is the exact blob deferred materialization stores:
+    # a drain later finds the segments present and skips them bit-safely
+    before = vs.backend.get(_sf_key(low, "jackson", 0))
+    sched.drain()
+    assert vs.backend.get(_sf_key(low, "jackson", 0)) == before
+    # next read is a physical hit, no further fallback
+    _, cost2 = vs.retrieve_direct("jackson", 0, low, CF_LOW)
+    assert "fallback" not in cost2
+
+
+def test_materialize_on_read_skipped_without_credit(tmp_path, cfg):
+    """Under budget pressure (no credit) the reconstruction still serves
+    the read but is NOT persisted — materialization can't sneak past the
+    budget."""
+    vs = VideoStore(str(tmp_path / "vs"), SPEC)
+    vs.set_formats(cfg.storage_formats())
+    sched = IngestScheduler(vs, cfg, budget_x=0.0,
+                            materialize_on_read=True)
+    frames, _ = generate_segment("jackson", 0, SPEC)
+    sched.ingest("jackson", 0, frames)
+    assert sched.stats()["credit_s"] <= 0
+    low = cfg.subscription(CF_LOW)
+    out, cost = vs.retrieve("jackson", 0, low, CF_LOW)
+    assert cost.get("fallback") == 1
+    assert not vs.has_segment("jackson", 0, low)
+    st = sched.stats()
+    assert st["write_backs"] == 0
+    assert st["write_backs_skipped"] >= 1
+
+
+def test_budget_lease_external_owner(tmp_path, cfg):
+    """A lease owned outside the scheduler (the cluster coordinator's
+    model) adjusts the rate with grant(); raises re-credit retroactively
+    exactly like set_budget_x always did."""
+    from repro.ingest import BudgetLease
+    lease = BudgetLease(0.0)
+    vs = VideoStore(str(tmp_path / "vs"), SPEC)
+    vs.set_formats(cfg.storage_formats())
+    sched = IngestScheduler(vs, cfg, lease=lease)
+    assert sched.budget_x == 0.0
+    frames, _ = generate_segment("jackson", 0, SPEC)
+    sched.ingest("jackson", 0, frames)
+    assert sched.pump() == 0               # zero rate: nothing runnable
+    lease.grant(100.0)                     # owner raises the share
+    assert sched.budget_x == 100.0
+    assert sched.stats()["credit_s"] > 0   # retroactive re-credit
+    assert sched.pump() == 2
+    assert sched.debt_seconds() == 0
+    with pytest.raises(ValueError):
+        IngestScheduler(vs, cfg, budget_x=1.0, lease=BudgetLease(2.0))
+    with pytest.raises(ValueError):
+        lease.attach(IngestScheduler(vs, cfg))  # already owned
+
+
+def test_adopt_missing_restores_lost_queue(tmp_path, cfg):
+    """A process crash loses the in-memory transcode queue; a new
+    scheduler over the same (durable) store re-adopts the backlog so the
+    debt is visible and drainable again."""
+    vs, sched = _golden_only_store(tmp_path, cfg, n_segs=2, budget_x=0.0)
+    assert sched.pending() == 4  # 2 segs x 2 non-golden formats
+    vs.flush()  # the durability receipt the cluster worker issues per ack
+    # "restart": fresh store handle + scheduler, no ingest() calls
+    vs2 = VideoStore(str(tmp_path / "vs"), SPEC)
+    sched2 = IngestScheduler(vs2, cfg, budget_x=0.0)
+    assert sched2.pending() == 0          # the queue died with the process
+    assert sched2.adopt_missing() == 4    # backlog re-adopted from disk
+    assert sched2.debt_seconds() > 0
+    assert sched2.adopt_missing() == 0    # idempotent
+    sched2.set_budget_x(None)
+    assert sched2.drain() == 4
+    for sid in cfg.storage_formats():
+        assert vs2.has_segment("jackson", 0, sid)
+
+
+def test_background_task_charges_only_own_level(tmp_path, cfg):
+    """Running a deep format's task before its parent's must not bill the
+    parent's transcode twice: each level is charged by its own task (or
+    write-back), so total spent stays ~= sum of per-level encode costs."""
+    vs, sched = _golden_only_store(tmp_path, cfg, n_segs=1, budget_x=0.0)
+    low = cfg.subscription(CF_LOW)
+    mid = cfg.subscription(CF_MID)
+    # force the deep format first (its parent mid is unmaterialized)
+    with sched._mu:
+        sched._queue.sort(key=lambda t: 0 if t.sf_id == low else 1)
+        low_first = [t.sf_id for t in sched._queue]
+    assert low_first[0] == low
+    sched.set_budget_x(1000.0)
+    assert sched.pump() == 2
+    st = sched.stats()
+    # both formats materialized; the recursive parent reconstruction was
+    # not billed inside low's task, so transcode_s is the sum of the two
+    # own-level costs (each also recorded in the per-format EMA)
+    assert vs.has_segment("jackson", 0, low)
+    assert vs.has_segment("jackson", 0, mid)
+    assert st["transcodes"] == 2
+    est = sched._est_s
+    assert st["transcode_s"] == pytest.approx(est[low] + est[mid],
+                                              rel=0.75)

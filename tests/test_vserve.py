@@ -326,3 +326,86 @@ def test_request_collapsing(served, monkeypatch):
         st = srv.stats()
     assert len(calls) == 1 and r1 is r2
     assert st["collapsed"] == 1 and st["completed"] == 2
+
+
+# ---------------------------------------------------------------------------
+# erosion-aware cache eviction
+# ---------------------------------------------------------------------------
+
+def test_erosion_aware_eviction_ab():
+    """A/B: same insert sequence, budget for two entries.  LRU evicts the
+    oldest; the erosion-ranked cache evicts the cheapest-to-recover format
+    regardless of recency, keeping the decode that is expensive to redo."""
+    rng = np.random.default_rng(0)
+    frames = rng.integers(0, 255, (4, 16, 16), dtype=np.uint8)
+    want = np.arange(4)
+    budget = 2 * frames.nbytes
+    rank = {"sf_dear": 0.9, "sf_cheap": 0.1}
+
+    lru = DecodedSegmentCache(budget)
+    ero = DecodedSegmentCache(budget, recovery_rank=rank)
+    for cache in (lru, ero):
+        cache.insert("s", 0, "sf_dear", CF_NN, want, frames)   # oldest
+        cache.insert("s", 1, "sf_cheap", CF_NN, want, frames)
+        cache.insert("s", 2, "sf_dear", CF_NN, want, frames)   # overflow
+
+    def held(cache, seg, sf_id):
+        return cache.lookup("s", seg, sf_id, CF_NN, want) is not None
+
+    # LRU: the oldest (seg 0, dear) died even though it's costly to redo
+    assert not held(lru, 0, "sf_dear")
+    assert held(lru, 1, "sf_cheap") and held(lru, 2, "sf_dear")
+    # erosion-aware: the cheap-to-recover entry died, both dear survive
+    assert not held(ero, 1, "sf_cheap")
+    assert held(ero, 0, "sf_dear") and held(ero, 2, "sf_dear")
+    assert lru.stats.evictions == ero.stats.evictions == 1
+
+
+def test_erosion_rank_ties_break_lru():
+    rng = np.random.default_rng(1)
+    frames = rng.integers(0, 255, (4, 16, 16), dtype=np.uint8)
+    want = np.arange(4)
+    ero = DecodedSegmentCache(2 * frames.nbytes,
+                              recovery_rank={"sf": 0.5})
+    ero.insert("s", 0, "sf", CF_NN, want, frames)
+    ero.insert("s", 1, "sf", CF_NN, want, frames)
+    assert ero.lookup("s", 0, "sf", CF_NN, want) is not None  # refresh 0
+    ero.insert("s", 2, "sf", CF_NN, want, frames)  # evicts LRU of the tier
+    assert ero.lookup("s", 1, "sf", CF_NN, want) is None
+    assert ero.lookup("s", 0, "sf", CF_NN, want) is not None
+
+
+def test_server_cache_policy_erosion(served):
+    vs, cfg = served
+    from repro.serving import recovery_rank_for
+    with VStoreServer(vs, cfg, workers=1, cache_policy="erosion") as srv:
+        rank = srv.cache.recovery_rank
+        assert rank == recovery_rank_for(cfg, vs.spec)
+        assert rank["sf_g"] == float("inf")  # golden never evicted first
+        assert any(v < float("inf") for v in rank.values())
+        # the flag changes eviction policy, not results
+        res = srv.submit("A", "jackson", [0, 1], 0.8).result()
+        assert res.items == run_query(vs, cfg, "A", "jackson", [0, 1],
+                                      0.8).items
+    with pytest.raises(ValueError):
+        VStoreServer(vs, cfg, cache_policy="mru")
+
+
+def test_erosion_admission_reject_no_churn():
+    """A decode ranked cheaper than everything resident is refused (False),
+    not admitted-then-immediately-evicted — otherwise every cheap-format
+    decode would churn insert/evict while callers believe it cached."""
+    rng = np.random.default_rng(2)
+    frames = rng.integers(0, 255, (4, 16, 16), dtype=np.uint8)
+    want = np.arange(4)
+    ero = DecodedSegmentCache(2 * frames.nbytes,
+                              recovery_rank={"sf_dear": 0.9,
+                                             "sf_cheap": 0.1})
+    assert ero.insert("s", 0, "sf_dear", CF_NN, want, frames)
+    assert ero.insert("s", 1, "sf_dear", CF_NN, want, frames)
+    assert not ero.insert("s", 2, "sf_cheap", CF_NN, want, frames)
+    assert ero.lookup("s", 0, "sf_dear", CF_NN, want) is not None
+    assert ero.lookup("s", 1, "sf_dear", CF_NN, want) is not None
+    assert ero.lookup("s", 2, "sf_cheap", CF_NN, want) is None
+    assert ero.stats.evictions == 0
+    assert ero.stats.admission_rejects == 1
