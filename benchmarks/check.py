@@ -44,7 +44,8 @@ BOOL_VALUES = {"True", "False"}
 # sampled at a different moment than the timed windows, so it stays
 # informative rather than exactly gated; the factor-gated `speedup` ratio
 # is the enforceable scaling regression guard.
-HOST_SPEED_BOOL_KEYS = {"golden_realtime", "scales", "scales_to_host"}
+HOST_SPEED_BOOL_KEYS = {"golden_realtime", "scales", "scales_to_host",
+                        "low_overhead"}
 # absolute floors for specific (bench, metric) pairs, applied on top of
 # the relative factor: cluster_scaling's speedup is host-capacity-capped
 # (so its factor floor lands below 1.0), but a cluster that fails to beat
@@ -79,6 +80,31 @@ def _guarded(kv: dict) -> dict[str, float]:
     return out
 
 
+def _superset_match(current: dict, name: str, base_ident: dict):
+    """Additive-key tolerance: a bench that grew new identity knobs since
+    the baseline was committed still matches — any current row of the same
+    name whose ident *extends* the baseline's (agrees on every baseline
+    key) counts.  Multiple extending rows merge with the duplicate-row
+    semantics (best value for guarded ratios, AND for boolean claims), so
+    a claim that regressed in any split of the old row still fails."""
+    merged = None
+    for (n, ident), slot in current.items():
+        if n != name:
+            continue
+        d = dict(ident)
+        if any(d.get(k) != v for k, v in base_ident.items()):
+            continue
+        if merged is None:
+            merged = dict(slot)
+            continue
+        for k, v in slot.items():
+            if isinstance(v, bool):
+                merged[k] = merged.get(k, True) and v
+            else:
+                merged[k] = max(merged.get(k, float("-inf")), v)
+    return merged
+
+
 def check_rows(baseline_rows: list[dict], rows: list[dict],
                factor: float = 0.5) -> list[str]:
     """Compare a run against a baseline; returns human-readable violations
@@ -107,6 +133,8 @@ def check_rows(baseline_rows: list[dict], rows: list[dict],
         key = _row_key(b)
         kv = parse_derived(b.get("derived", ""))
         cur = current.get(key)
+        if cur is None:  # exact ident miss: try the additive-key fallback
+            cur = _superset_match(current, b["name"], dict(key[1]))
         if cur is None:
             violations.append(f"{b['name']}{dict(key[1])}: row missing "
                               f"from current run")

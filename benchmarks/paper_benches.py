@@ -658,3 +658,88 @@ def bench_fig13_overhead():
         f"exhaustive_runs={exhaustive_runs};"
         f"run_reduction_x={exhaustive_runs / max(stats.consumption_runs, 1):.1f};"
         f"est_exhaustive_s={exhaustive_runs * mean_run_s:.0f}")
+
+
+def bench_obs_overhead(tmp_root="/tmp/repro_bench_obs"):
+    """Beyond-paper: tracing instrumentation cost (repro.obs).
+
+    The disabled ``span()`` fast path is one attribute read plus a shared
+    no-op context manager; this bench measures that cost directly (ns per
+    call), then bounds the whole-query impact as spans-per-query (counted
+    from one traced run) x the disabled call cost over the untraced query
+    wall time — gated ``low_overhead`` below 3%.  A traced run must also
+    produce a loadable Chrome trace whose parent links all resolve
+    (``trace_valid``) with items bit-identical to the untraced run
+    (``identical``): tracing observes the data path, never perturbs it."""
+    import json
+    import os
+    import shutil
+
+    from repro import obs
+    from repro.launch.vserve import demo_config
+
+    # -- micro: cost of one instrumented call site while tracing is off
+    obs.enable(False)
+    n = 200_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with obs.span("bench.noop", k=1):
+            pass
+    ns_disabled = (time.perf_counter() - t0) / n * 1e9
+
+    # -- macro: the full cascade data path, untraced vs traced windows
+    cfg = demo_config()
+    n_segs = 2
+    shutil.rmtree(tmp_root, ignore_errors=True)
+    vs = VideoStore(f"{tmp_root}/store", SPEC)
+    vs.set_formats(cfg.storage_formats())
+    for seg in range(n_segs):
+        frames, _ = generate_segment("jackson", seg, SPEC)
+        vs.ingest_segment("jackson", seg, frames)
+    segs = list(range(n_segs))
+
+    def run():
+        return run_query(vs, cfg, "A", "jackson", segs, 0.8,
+                         batch_segments=4)
+
+    run()  # warm jit caches before any timed window
+    reps = 3
+    wall_off = wall_on = 0.0
+    items_off = items_on = None
+    obs.TRACER.clear()
+    for _ in range(reps):  # interleaved so host drift hits both sides
+        obs.enable(False)
+        t0 = time.perf_counter()
+        items_off = run().items
+        wall_off += time.perf_counter() - t0
+        obs.enable(True)
+        t0 = time.perf_counter()
+        items_on = run().items
+        wall_on += time.perf_counter() - t0
+    obs.enable(False)
+
+    spans_per_query = len(obs.TRACER.spans()) / reps
+    overhead_disabled_pct = (spans_per_query * ns_disabled * 1e-9
+                             / (wall_off / reps)) * 100
+    overhead_enabled_pct = (wall_on / wall_off - 1) * 100
+
+    out = os.environ.get("OBS_TRACE_OUT") or f"{tmp_root}/trace.json"
+    n_spans = obs.export_trace(out, process_names={obs.TRACER.pid: "bench"})
+    with open(out) as f:
+        doc = json.load(f)
+    evs = [e for e in doc.get("traceEvents", []) if e.get("ph") == "X"]
+    ids = {e["args"]["span"] for e in evs}
+    trace_valid = bool(evs) and all(
+        e["args"]["parent"] == "0" or e["args"]["parent"] in ids
+        for e in evs)
+    obs.TRACER.clear()
+
+    row("obs_overhead", ns_disabled * 1e-3,
+        f"mode=query;ns_disabled_span={ns_disabled:.0f};"
+        f"spans_per_query={spans_per_query:.0f};"
+        f"overhead_disabled_pct={overhead_disabled_pct:.3f};"
+        f"overhead_enabled_pct={overhead_enabled_pct:.1f};"
+        f"spans_exported={n_spans};"
+        f"low_overhead={overhead_disabled_pct < 3.0};"
+        f"trace_valid={trace_valid};"
+        f"identical={items_on == items_off}")

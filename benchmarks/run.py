@@ -70,6 +70,7 @@ def main(argv=None) -> None:
         B.bench_cluster_scaling,
         B.bench_decode_path,
         B.bench_fig13_overhead,
+        B.bench_obs_overhead,
         bench_roofline,
     ]
     if args.only:

@@ -42,6 +42,7 @@ import dataclasses
 import numpy as np
 
 from ..core.knobs import IngestSpec
+from ..obs.trace import span as _span
 from .operators import Diff, Operator
 
 # Minimum positional gap between consecutive slots' frames.  Diff's score
@@ -177,7 +178,9 @@ class BatchedConsumer:
                     [x, np.zeros((target - n,) + x.shape[1:], x.dtype)])
                 p = np.concatenate(
                     [p, sentinel + np.arange(target - n, dtype=np.int64)])
-            items = op.detect(x, cf, self.spec, positions=p)
+            with _span("detect", op=type(op).__name__.lower(), cf=cf.name(),
+                       frames=n, shape=target, segments=len(chunk)):
+                items = op.detect(x, cf, self.spec, positions=p)
             stats.detect_calls += 1
             stats.frames += n
             stats.batched_frames += target

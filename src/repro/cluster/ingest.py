@@ -24,6 +24,7 @@ per-format reclaimed bytes — like per-format transcode debt in
 
 from __future__ import annotations
 
+from ..obs.metrics import Histogram
 from .router import ShardRouter
 
 
@@ -154,6 +155,13 @@ class ClusterIngest:
                 "write_backs", "write_back_s", "write_backs_skipped")
         out = {k: sum(ing.get(k) or 0 for ing in ingests) for k in sums}
         out["formats"] = formats
+        # latency distributions merge by histogram buckets, never by
+        # averaging the per-shard percentiles (a skewed shard's tail would
+        # vanish into the mean)
+        for key in ("golden_hist", "transcode_hist"):
+            snaps = [ing[key] for ing in ingests if ing.get(key)]
+            if snaps:
+                out[key] = Histogram.merge(snaps)
         out["grants"] = list(self.grants)
         out["budget_x"] = self.budget_x
         out["rebalances"] = self.rebalances

@@ -35,6 +35,9 @@ import zlib
 from concurrent.futures import ThreadPoolExecutor
 
 from ..analytics.query import QueryResult
+from ..obs import drift as obs_drift
+from ..obs import trace as obs
+from ..obs.metrics import Histogram
 from ..serving.server import QueryRequest
 from . import wire
 from .worker import runtime_env_overrides, shard_worker_main
@@ -110,6 +113,9 @@ class ShardHost:
         self.generation = 0
         self.store_id: str | None = None
         self.restarts = 0
+        # worker perf_counter -> router perf_counter (measured at hello);
+        # absorbed spans are re-based by this so one timeline lines up
+        self.clock_offset = 0.0
         # callbacks(host) run after a successful reattach — a respawned
         # worker reverts to its spawn-time opts, so owners of dynamic
         # state (the cluster ingest coordinator's budget grants) re-apply
@@ -154,6 +160,21 @@ class ShardHost:
                     else:
                         os.environ[k] = v
         hello = self.call("hello")
+        if "mono" in hello:
+            # clock alignment must not use the first hello: its round-trip
+            # includes worker boot (connect retries), which skews the
+            # midpoint by up to half the boot time.  Resample on clean
+            # RPCs and keep the lowest-RTT sample — the worker reads its
+            # clock roughly mid-flight, so half that round-trip is the
+            # best alignment available
+            best_rtt = best_off = None
+            for _ in range(3):
+                s0 = time.perf_counter()
+                mono = self.call("hello")["mono"]
+                s1 = time.perf_counter()
+                if best_rtt is None or s1 - s0 < best_rtt:
+                    best_rtt, best_off = s1 - s0, (s0 + s1) / 2 - mono
+            self.clock_offset = best_off
         problem = None
         if self.store_id is not None and hello["store_id"] != self.store_id:
             problem = (f"worker serves store {hello['store_id']} but "
@@ -194,7 +215,18 @@ class ShardHost:
     def call(self, op: str, **kw):
         """One request/response over a pooled connection.  Raises
         ``ConnectionError`` when the worker is unreachable (caller decides
-        whether to reattach) and ``ShardError`` for in-worker failures."""
+        whether to reattach) and ``ShardError`` for in-worker failures.
+
+        With tracing enabled the exchange runs inside an ``rpc:<op>`` span
+        whose context rides the frame as ``"_trace"`` — the worker
+        activates it, so both sides of the wire share one timeline."""
+        if not obs.TRACER.enabled:
+            return self._call(op, kw)
+        with obs.span(f"rpc:{op}", shard=self.idx):
+            kw["_trace"] = list(obs.TRACER.current())
+            return self._call(op, kw)
+
+    def _call(self, op: str, kw: dict):
         with self._mu:
             sock = self._idle.pop() if self._idle else None
         if sock is None:
@@ -370,10 +402,21 @@ class ShardRouter:
             "ingest", stream=stream, seg=int(seg), frames=frames)
         return v["golden_s"]
 
-    def _sub_query(self, query: str, stream: str, segments, accuracy
-                   ) -> QueryResult:
+    def _sub_query(self, query: str, stream: str, segments, accuracy,
+                   ctx: tuple[int, int] | None = None) -> QueryResult:
+        """One per-stream sub-query.  ``ctx`` is the scatter root's trace
+        context — runs on pool threads, so it is passed explicitly and
+        activated here; the worker ships the sub-query's spans back and
+        they are absorbed into the router's ring re-based onto its clock
+        (pid = shard idx + 1; pid 0 is the router itself)."""
         req = QueryRequest(query, stream, list(segments), accuracy)
-        v = self.host_of(stream).call_retry("query", request=req.to_wire())
+        host = self.host_of(stream)
+        with obs.TRACER.activate(*(ctx or (0, 0))):
+            v = host.call_retry("query", request=req.to_wire())
+        spans = v.pop("spans", None)
+        if spans and obs.TRACER.enabled:
+            obs.TRACER.absorb(spans, pid=host.idx + 1,
+                              offset=host.clock_offset)
         return QueryResult.from_wire(v)
 
     def query(self, query: str, streams, segments: list[int],
@@ -383,11 +426,14 @@ class ShardRouter:
         ``run_query``) or a list (scatter one sub-query per stream to the
         owning shards, gather, merge deterministically — see
         ``merge_results`` for the tagging)."""
-        if isinstance(streams, str):
-            return self._sub_query(query, streams, segments, accuracy)
-        futs = {s: self._pool.submit(self._sub_query, query, s, segments,
-                                     accuracy) for s in streams}
-        return merge_results({s: f.result() for s, f in futs.items()})
+        with obs.span("query", query=query, accuracy=accuracy):
+            ctx = obs.TRACER.current() if obs.TRACER.enabled else None
+            if isinstance(streams, str):
+                return self._sub_query(query, streams, segments, accuracy,
+                                       ctx)
+            futs = {s: self._pool.submit(self._sub_query, query, s, segments,
+                                         accuracy, ctx) for s in streams}
+            return merge_results({s: f.result() for s, f in futs.items()})
 
     def query_many(self, submissions: list[tuple]) -> list[QueryResult]:
         """Scatter a batch of ``(query, stream(s), segments, accuracy)``
@@ -396,18 +442,24 @@ class ShardRouter:
         per-stream sub-queries *here* — pool tasks never submit into their
         own (bounded) pool, which would deadlock once every worker thread
         held an outer task blocked on queued inner ones."""
-        plans = []  # per submission: [(stream or None, future)]
+        tracing = obs.TRACER.enabled
+        plans = []  # per submission: (single, [(stream, future)], root span)
         for q, streams, segments, acc in submissions:
+            root = obs.TRACER.start_span("query", query=q,
+                                         accuracy=acc) if tracing else None
+            ctx = (root.trace_id, root.span_id) if root else None
             names = [streams] if isinstance(streams, str) else list(streams)
             futs = [(s, self._pool.submit(self._sub_query, q, s, segments,
-                                          acc)) for s in names]
-            plans.append((isinstance(streams, str), futs))
+                                          acc, ctx)) for s in names]
+            plans.append((isinstance(streams, str), futs, root))
         out = []
-        for single, futs in plans:
+        for single, futs, root in plans:
             if single:
                 out.append(futs[0][1].result())
             else:
                 out.append(merge_results({s: f.result() for s, f in futs}))
+            if root is not None:
+                obs.TRACER.finish(root)
         return out
 
     # -- control / observability ----------------------------------------------
@@ -422,7 +474,12 @@ class ShardRouter:
         """Cluster-wide stats: per-shard breakdown plus counters rolled up
         across shards, with the aggregate x-realtime measured against the
         router's own uptime (shards serve concurrently, so their
-        video-seconds add but their wall clocks don't)."""
+        video-seconds add but their wall clocks don't).
+
+        Distribution-valued stats roll up distribution-correctly: the
+        per-shard latency histograms are bucket-merged (never averaged —
+        two skewed shards yield the true cluster p95) and drift reports
+        keep each knob's worst observation across shards."""
         per_shard = self.broadcast("stats")
         rollup_keys = ("completed", "rejected", "failed", "collapsed",
                        "inflight", "video_seconds", "query_wall_s",
@@ -434,6 +491,10 @@ class ShardRouter:
                            "oversize", "inserted_bytes", "lookups")}
         cache["hit_rate"] = ((cache["hits"] + cache["richer_hits"])
                              / max(1, cache["lookups"]))
+        latency = Histogram.merge([s["latency"] for s in per_shard
+                                   if s.get("latency")])
+        drift = obs_drift.merge_reports([s.get("drift") or {}
+                                         for s in per_shard])
         uptime = time.perf_counter() - self._t_up
         return {
             "shards": per_shard,
@@ -444,5 +505,21 @@ class ShardRouter:
             "aggregate_x_realtime": total["video_seconds"]
             / max(uptime, 1e-9),
             "cache": cache,
+            "latency": latency,
+            "drift": drift,
             **total,
         }
+
+    def harvest_spans(self) -> int:
+        """Pull every worker's remaining ringed spans (background
+        transcode/erosion work no query response carried) into the
+        router's tracer, clock-aligned; returns the number absorbed."""
+        n = 0
+        for h in self.hosts:
+            try:
+                spans = h.call_retry("spans")
+            except (ShardError, ConnectionError):
+                continue  # worker without tracing support/reachability
+            n += obs.TRACER.absorb(spans, pid=h.idx + 1,
+                                   offset=h.clock_offset)
+        return n

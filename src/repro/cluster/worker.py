@@ -18,21 +18,29 @@ the process boundary — everything arrives through the wire forms.
 Protocol ops (request ``{"op": ..., **args}`` -> ``{"ok": True, "value":
 ...}`` or ``{"ok": False, "error": ..., "trace": ...}``):
 
-``hello``          identity: store_id, generation, pid, formats
+``hello``          identity: store_id, generation, pid, formats, mono clock
 ``query``          a ``QueryRequest`` wire form -> ``QueryResult`` wire form
 ``ingest``         one segment's frames -> golden durability latency
 ``pump``/``drain``/``requeue_shed``  background-transcode control
 ``set_budget``     grant a new budget share to the worker's lease
 ``erode_advance``  move the erosion day clock; returns the report
 ``stats``          the server's aggregate stats (+ shard identity)
+``spans``          drain the worker's trace ring (wire-form span dicts)
 ``flush``/``shutdown``
-"""
+
+Tracing: ``opts["trace"]`` enables the worker's ``repro.obs`` tracer.  Any
+request frame may carry ``"_trace": [trace_id, span_id]`` (the router's
+rpc span); the serve loop activates it around the handler so worker-side
+spans parent under the caller's timeline.  Query responses ship the
+query's spans back inline; everything else (background transcodes,
+erosion) stays in the ring until a ``spans`` drain."""
 
 from __future__ import annotations
 
 import os
 import socket
 import threading
+import time
 import traceback
 
 from . import wire
@@ -89,9 +97,14 @@ class _ShardStack:
     def __init__(self, shard_dir: str, generation: int, cfg_wire: dict,
                  spec_wire: dict, opts: dict):
         from ..ingest import ErosionExecutor, IngestScheduler
+        from ..obs import trace as obst
         from ..serving import QueryRequest, VStoreServer
         from ..videostore import VideoStore
 
+        self.tracing = bool(opts.get("trace"))
+        if self.tracing:
+            obst.TRACER.enabled = True
+        self._tracer = obst.TRACER
         self.generation = generation
         self.QueryRequest = QueryRequest
         self.config = wire.config_from_wire(cfg_wire)
@@ -136,15 +149,34 @@ class _ShardStack:
 
     # -- op handlers ---------------------------------------------------------
     def op_hello(self, req: dict) -> dict:
+        # "mono" lets the router align this process's span timestamps
+        # with its own perf_counter clock (offset measured around hello)
         return {"store_id": self.store.store_id,
                 "generation": self.generation,
                 "pid": os.getpid(),
-                "formats": sorted(self.store.formats)}
+                "formats": sorted(self.store.formats),
+                "mono": time.perf_counter()}
 
     def op_query(self, req: dict) -> dict:
         r = self.QueryRequest.from_wire(req["request"])
         r.block = True  # the connection thread is the natural queue
-        return self.server.submit_request(r).result().to_wire()
+        if self.tracing:
+            # the serve loop activated the frame's _trace context on this
+            # thread; hand it to the server pool thread via the request
+            tid, sid = self._tracer.current()
+            if tid:
+                r.trace_id, r.parent_span = tid, sid
+        out = self.server.submit_request(r).result().to_wire()
+        if self.tracing and r.trace_id:
+            # the query span closed before the future resolved, so the
+            # trace's spans are all ringed; ship them with the result
+            out["spans"] = self._tracer.take(r.trace_id)
+        return out
+
+    def op_spans(self, req: dict) -> list:
+        """Drain every ringed span (background ingest/erosion work that no
+        query response carried home)."""
+        return [sp.to_wire() for sp in self._tracer.drain()]
 
     def op_ingest(self, req: dict) -> dict:
         stream, seg, frames = req["stream"], int(req["seg"]), req["frames"]
@@ -162,7 +194,6 @@ class _ShardStack:
             if all(self.store.has_segment(stream, seg, sid)
                    for sid in self.store.formats):
                 return {"golden_s": 0.0, "duplicate": True}
-            import time
             t0 = time.perf_counter()
             self.store.ingest_segment(stream, seg, frames)
             golden_s = time.perf_counter() - t0
@@ -266,7 +297,15 @@ def shard_worker_main(shard_dir: str, sock_path: str, generation: int,
                             "trace": ""}
                 else:
                     try:
-                        resp = {"ok": True, "value": handler(req)}
+                        ctx = req.pop("_trace", None)
+                        if stack.tracing and ctx:
+                            # parent this connection thread's spans under
+                            # the router's rpc span for the op's duration
+                            with stack._tracer.activate(int(ctx[0]),
+                                                        int(ctx[1])):
+                                resp = {"ok": True, "value": handler(req)}
+                        else:
+                            resp = {"ok": True, "value": handler(req)}
                     except BaseException as e:  # noqa: BLE001
                         resp = {"ok": False,
                                 "error": f"{type(e).__name__}: {e}",

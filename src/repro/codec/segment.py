@@ -55,6 +55,7 @@ except ImportError:  # pragma: no cover - exercised on bare interpreters
 
 from . import transform as T
 from ..kernels.dct8.dct8 import dct8_dequantize, dct8_quantize
+from ..obs.trace import span as _span
 
 _MAGIC = "tpucodec-v1"
 
@@ -325,7 +326,8 @@ def decode_segment_ex(blob: bytes,
     in a single batched jit dispatch.  ``info`` is the blob header plus
     ``bytes``/``chunks``/``frames`` actually touched, so callers need no
     second ``segment_info`` parse."""
-    header, payload = _parse(blob)
+    with _span("codec.parse", bytes=len(blob)):
+        header, payload = _parse(blob)
     hlen = len(blob) - len(payload)
     n, h, w = header["n"], header["h"], header["w"]
     if header["raw"]:
@@ -338,9 +340,12 @@ def decode_segment_ex(blob: bytes,
                 _decode_cost(header, hlen, 0, 0, 0))
     chunk_of = want // k
     chunks = np.unique(chunk_of)
-    sym, touched = _chunk_symbols(header, payload, chunks,
-                                  _pad_chunk_count(len(chunks)))
-    decoded = _run_decode(sym, header)  # (k_eff, C_padded, h, w)
+    with _span("codec.entropy", chunks=len(chunks)) as esp:
+        sym, touched = _chunk_symbols(header, payload, chunks,
+                                      _pad_chunk_count(len(chunks)))
+        esp.set(bytes=touched)
+    with _span("codec.residuals", chunks=len(chunks), frames=len(want)):
+        decoded = _run_decode(sym, header)  # (k_eff, C_padded, h, w)
     out = _scatter_rows(decoded, want, k, chunks)
     return out, _decode_cost(header, hlen, touched, len(chunks), len(want))
 
@@ -426,16 +431,21 @@ def decode_many(blobs: list[bytes],
         sym = np.zeros((pad, k_eff, hb, wb, T.BLOCK, T.BLOCK), np.int16)
         row = 0
         rowspans = []
-        for i, header, payload, hlen, w_i, chunks in per_member:
-            part, touched = _chunk_symbols(header, payload, chunks,
-                                           len(chunks))
-            sym[row:row + len(chunks)] = part
-            rowspans.append(row)
-            row += len(chunks)
-            cost["bytes"] += hlen + touched
-            cost["chunks"] += len(chunks)
-            cost["frames"] += len(w_i)
-        decoded = _run_decode(sym, header0)
+        with _span("codec.entropy", chunks=total_chunks,
+                   segments=len(per_member)) as esp:
+            for i, header, payload, hlen, w_i, chunks in per_member:
+                part, touched = _chunk_symbols(header, payload, chunks,
+                                               len(chunks))
+                sym[row:row + len(chunks)] = part
+                rowspans.append(row)
+                row += len(chunks)
+                cost["bytes"] += hlen + touched
+                cost["chunks"] += len(chunks)
+                cost["frames"] += len(w_i)
+            esp.set(bytes=cost["bytes"])
+        with _span("codec.residuals", chunks=total_chunks,
+                   frames=cost["frames"]):
+            decoded = _run_decode(sym, header0)
         cost["dispatches"] += 1
         for (i, header, payload, hlen, w_i, chunks), r0 in zip(per_member,
                                                               rowspans):

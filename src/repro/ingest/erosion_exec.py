@@ -21,6 +21,7 @@ import bisect
 import dataclasses
 
 from ..core.erosion import ErosionPlan
+from ..obs.trace import span as _span
 
 
 @dataclasses.dataclass
@@ -76,7 +77,10 @@ class ErosionExecutor:
     def advance(self, days: int = 1) -> ErosionReport:
         """Move the day clock and erode every cohort to its age target."""
         self.day += days
-        return self.apply()
+        with _span("erosion.advance", day=self.day) as sp:
+            rep = self.apply()
+            sp.set(segments=rep.segments, bytes=rep.bytes)
+            return rep
 
     def apply(self) -> ErosionReport:
         rep = ErosionReport(day=self.day)

@@ -32,6 +32,7 @@ import time
 from collections import OrderedDict
 
 from ..core.knobs import IngestSpec, StorageFormat
+from ..obs.trace import span as _span
 
 
 def build_parents(formats: dict[str, StorageFormat],
@@ -145,7 +146,11 @@ class FallbackChain:
         with self._lock:
             self.fallback_reads += 1
             self.per_format[sf_id] = self.per_format.get(sf_id, 0) + 1
-        return self._blob_of(store, stream, seg, sf_id)
+        with _span("fallback.reconstruct", sf=sf_id, seg=seg,
+                   depth=self.depth(sf_id)) as sp:
+            blob = self._blob_of(store, stream, seg, sf_id)
+            sp.set(bytes=len(blob))
+            return blob
 
     def _blob_of(self, store, stream: str, seg: int, sf_id: str) -> bytes:
         from ..videostore.video_store import _sf_key

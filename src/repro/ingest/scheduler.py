@@ -39,6 +39,8 @@ import time
 
 from ..core.erosion import recovery_cost
 from ..core.knobs import FidelityOption
+from ..obs.metrics import Histogram
+from ..obs.trace import span as _span
 from .fallback import ByteRatioProfiler, FallbackChain
 
 
@@ -161,6 +163,8 @@ class IngestScheduler:
         self.write_backs = 0         # materialize-on-read blobs persisted
         self.write_back_s = 0.0      # ... and their budget charge
         self.write_backs_skipped = 0  # skipped: bucket had no credit
+        self._h_golden = Histogram()     # per-segment golden encode seconds
+        self._h_transcode = Histogram()  # per-task background encode seconds
         self._on_ingest: list = []   # callbacks(stream, seg) after golden
 
     @property
@@ -196,12 +200,15 @@ class IngestScheduler:
         Returns the golden (durability) latency in seconds."""
         src_f = ingest_fidelity or FidelityOption()
         self.fallback.invalidate(stream, seg)  # re-ingest: stale memos die
-        t0 = time.perf_counter()
-        blob = self.store.encode_format(
-            frames_u8, src_f, self.store.formats[self.golden_id])
-        golden_dt = time.perf_counter() - t0
-        self.store.put_segment(stream, seg, self.golden_id, blob,
-                               encode_s=golden_dt, count_segment=True)
+        with _span("ingest.golden", stream=stream, seg=seg) as sp:
+            t0 = time.perf_counter()
+            blob = self.store.encode_format(
+                frames_u8, src_f, self.store.formats[self.golden_id])
+            golden_dt = time.perf_counter() - t0
+            self.store.put_segment(stream, seg, self.golden_id, blob,
+                                   encode_s=golden_dt, count_segment=True)
+            sp.set(bytes=len(blob))
+        self._h_golden.observe(golden_dt)
         with self._mu:
             st = self._streams.setdefault(stream, _StreamState())
             st.segments += 1
@@ -408,8 +415,11 @@ class IngestScheduler:
         # fetched inside the call charges itself (its own queued task, or
         # a materialize-on-read write-back) — an inclusive timer would
         # debit the bucket twice for the same ancestor transcode
-        blob, dt = self.fallback.transcode_from_parent_timed(
-            self.store, task.stream, task.seg, task.sf_id)
+        with _span("ingest.transcode", stream=task.stream, seg=task.seg,
+                   sf=task.sf_id):
+            blob, dt = self.fallback.transcode_from_parent_timed(
+                self.store, task.stream, task.seg, task.sf_id)
+        self._h_transcode.observe(dt)
         # a concurrent materialize-on-read may have landed (and charged)
         # this exact blob during our slow transcode; overwriting would
         # double-bill the bucket and orphan the bytes it just wrote
@@ -544,5 +554,7 @@ class IngestScheduler:
                 "write_back_s": self.write_back_s,
                 "write_backs_skipped": self.write_backs_skipped,
                 "video_seconds": total_video,
+                "golden_hist": self._h_golden.snapshot(),
+                "transcode_hist": self._h_transcode.snapshot(),
                 "fallback": self.fallback.stats(),
             }

@@ -46,7 +46,14 @@ def main(argv=None):
     ap.add_argument("--verify", action="store_true",
                     help="rebuild the same content single-process and check "
                          "the cluster's answers are bit-identical")
+    ap.add_argument("--trace", metavar="FILE", default=None,
+                    help="trace every shard plus the router and write one "
+                         "merged Chrome trace-event JSON (Perfetto-loadable)")
     args = ap.parse_args(argv)
+    if args.trace:
+        from ..obs import trace as obs
+        obs.enable(True)
+        obs.TRACER.pid = 0  # display convention: router=0, shard i -> i+1
 
     cfg = demo_config()
     spec = IngestSpec()
@@ -57,6 +64,8 @@ def main(argv=None):
     segs = list(range(args.segments))
 
     opts = {"workers": args.workers}
+    if args.trace:
+        opts["trace"] = True
     if args.budget_x is not None:
         opts.update(ingest=True, budget_x=args.budget_x,
                     materialize_on_read=True)
@@ -139,6 +148,18 @@ def main(argv=None):
             print(f"cluster erosion day {rep['day']}: -{rep['segments']} "
                   f"segments, {rep['bytes']} bytes reclaimed "
                   f"({', '.join(rep['per_format']) or 'nothing'})")
+
+        if args.trace:
+            # pull spans that didn't ride back with query responses
+            # (ingest/transcode/erosion work) while workers are still up
+            from ..obs import export_trace
+            router.harvest_spans()
+            names_by_pid = {0: "router"}
+            names_by_pid.update({i + 1: f"shard-{i}"
+                                 for i in range(args.shards)})
+            n = export_trace(args.trace, process_names=names_by_pid)
+            print(f"wrote {n} spans across {args.shards + 1} processes "
+                  f"to {args.trace}")
 
 
 if __name__ == "__main__":

@@ -48,7 +48,13 @@ def main(argv=None):
     ap.add_argument("--erode-days", type=int, default=0,
                     help="after ingest, age the footage this many days "
                          "through the erosion executor")
+    ap.add_argument("--trace", metavar="FILE", default=None,
+                    help="enable span tracing and write a Chrome trace-event "
+                         "JSON (load in Perfetto / chrome://tracing)")
     args = ap.parse_args(argv)
+    if args.trace:
+        from ..obs import enable
+        enable(True)
 
     cfg = demo_config()
     shutil.rmtree(args.root, ignore_errors=True)
@@ -154,6 +160,11 @@ def main(argv=None):
         res = run_query(vs, cfg, "A", names[0], list(range(args.segments)),
                         0.8)
         print(f"post-erosion query A still answers: {len(res.items)} items")
+
+    if args.trace:
+        from ..obs import export_trace
+        n = export_trace(args.trace, process_names={os.getpid(): "vingest"})
+        print(f"wrote {n} spans to {args.trace}")
 
 
 if __name__ == "__main__":

@@ -88,7 +88,13 @@ def main(argv=None):
     ap.add_argument("--baseline", action="store_true",
                     help="also time the same workload as sequential "
                          "run_query calls")
+    ap.add_argument("--trace", metavar="FILE", default=None,
+                    help="enable span tracing and write a Chrome trace-event "
+                         "JSON (load in Perfetto / chrome://tracing)")
     args = ap.parse_args(argv)
+    if args.trace:
+        from ..obs import enable
+        enable(True)
 
     cfg = demo_config()
     shutil.rmtree(args.root, ignore_errors=True)
@@ -156,6 +162,10 @@ def main(argv=None):
     print(f"planner: {stats['decodes']} decodes, "
           f"{stats['coalesced_cfs']} CFs coalesced, "
           f"{stats['collapsed']} queries collapsed")
+    if args.trace:
+        from ..obs import export_trace
+        n = export_trace(args.trace, process_names={os.getpid(): "vserve"})
+        print(f"wrote {n} spans to {args.trace}")
     return results
 
 

@@ -1,0 +1,20 @@
+"""repro.obs: tracing, metrics, and profile-drift detection.
+
+One observability layer for the whole data path — see ``trace`` (span
+facility + Chrome trace-event export), ``metrics`` (counters, gauges,
+mergeable latency histograms), and ``drift`` (observed-vs-profiled speed
+ratios).  Import cost is stdlib-only; the rest of the tree imports this
+package freely, including from inside codec hot paths.
+"""
+
+from .drift import DriftDetector, merge_reports, retrieval_expectations
+from .metrics import DEFAULT_BOUNDS, Histogram, MetricsRegistry
+from .trace import (TRACER, Span, Tracer, chrome_trace_events, enable,
+                    export_trace, span)
+
+__all__ = [
+    "TRACER", "Span", "Tracer", "chrome_trace_events", "enable",
+    "export_trace", "span",
+    "DEFAULT_BOUNDS", "Histogram", "MetricsRegistry",
+    "DriftDetector", "merge_reports", "retrieval_expectations",
+]

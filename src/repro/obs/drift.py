@@ -1,0 +1,135 @@
+"""Profile-drift detection: observed stage speeds vs the derived config.
+
+Backward derivation (``core.configure``) chooses every knob from profiled
+costs — consumption x-realtime per (op, accuracy), retrieval x-realtime
+per (sf, cf).  Those profiles go stale: a detector library update, a
+different host, thermal throttling, a storage tier change.  Nothing in
+the data path fails when that happens; the accuracy/speed tradeoff the
+user asked for just silently stops being the one they get.
+
+``DriftDetector`` closes the loop: every completed ``QueryResult``
+carries per-stage timings and scanned-segment counts, from which the
+*observed* x-realtime of each knob falls out.  Observations are folded
+into an EMA per knob and compared against the expected value; a knob
+whose ratio leaves ``[1/tolerance, tolerance]`` is flagged in
+``report()`` (surfaced through ``VStoreServer.stats()["drift"]``), so a
+stale profile is visible long before anyone re-runs the profiler.
+
+Retrieval is judged slow-only: the pipelined executor's ``retrieve_s`` is
+time *blocked waiting* on retrieval, so over-performing (cache hits,
+good overlap) is expected and only under-performing signals drift.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+
+
+def _fold(table: dict, key, observed: float, alpha: float) -> None:
+    prev, n = table.get(key, (observed, 0))
+    table[key] = (prev + alpha * (observed - prev), n + 1)
+
+
+class DriftDetector:
+    """EMA-based per-knob speed tracker.
+
+    ``retrieval_speeds`` optionally maps ``(sf_id, cf_name) -> expected
+    retrieval x-realtime`` (e.g. from ``Profiler.retrieval_speed``); when
+    absent only consumption knobs are tracked — consumption expectations
+    travel with the wire-rebuilt config, retrieval profiles do not.
+    """
+
+    def __init__(self, config, spec, retrieval_speeds: dict | None = None,
+                 tolerance: float = 3.0, ema_alpha: float = 0.3):
+        if tolerance <= 1.0:
+            raise ValueError(f"tolerance must be > 1, got {tolerance}")
+        self.segment_seconds = float(spec.segment_seconds)
+        self.tolerance = float(tolerance)
+        self.alpha = float(ema_alpha)
+        self._expect_consume = {
+            (p.consumer.op, round(p.consumer.target, 4)): float(p.speed)
+            for p in config.plans}
+        self._expect_retrieve = {
+            (sf_id, cf_name): float(x)
+            for (sf_id, cf_name), x in (retrieval_speeds or {}).items()}
+        self._mu = threading.Lock()
+        self._consume: dict[tuple, tuple[float, int]] = {}   # key -> (ema, n)
+        self._retrieve: dict[tuple, tuple[float, int]] = {}
+
+    def observe(self, accuracy: float, result) -> None:
+        """Fold one completed query's per-stage speeds in."""
+        for st in result.stages:
+            video_s = st.segments_scanned * self.segment_seconds
+            if video_s <= 0:
+                continue
+            ckey = (st.op, round(accuracy, 4))
+            if st.consume_s > 1e-9 and ckey in self._expect_consume:
+                with self._mu:
+                    _fold(self._consume, ckey, video_s / st.consume_s,
+                          self.alpha)
+            rkey = (st.sf_id, st.cf.name())
+            if st.retrieve_s > 1e-9 and rkey in self._expect_retrieve:
+                with self._mu:
+                    _fold(self._retrieve, rkey, video_s / st.retrieve_s,
+                          self.alpha)
+
+    def report(self) -> dict:
+        """Wire-safe per-knob drift table.  ``ratio = observed/expected``;
+        consumption drifts in either direction, retrieval only when slow
+        (see module docstring)."""
+        tol = self.tolerance
+        with self._mu:
+            consume = dict(self._consume)
+            retrieve = dict(self._retrieve)
+        out: dict = {"consumption": {}, "retrieval": {}, "drifted": False}
+        for (op, acc), (obs, n) in sorted(consume.items()):
+            exp = self._expect_consume[(op, acc)]
+            ratio = obs / exp if exp > 0 else math.inf
+            drifted = not (1.0 / tol <= ratio <= tol)
+            out["consumption"][f"{op}@{acc:g}"] = {
+                "expected_x": exp, "observed_x": obs, "ratio": ratio,
+                "samples": n, "drifted": drifted}
+            out["drifted"] |= drifted
+        for (sf_id, cf_name), (obs, n) in sorted(retrieve.items()):
+            exp = self._expect_retrieve[(sf_id, cf_name)]
+            ratio = obs / exp if exp > 0 else math.inf
+            drifted = ratio < 1.0 / tol
+            out["retrieval"][f"{sf_id}:{cf_name}"] = {
+                "expected_x": exp, "observed_x": obs, "ratio": ratio,
+                "samples": n, "drifted": drifted}
+            out["drifted"] |= drifted
+        return out
+
+
+def merge_reports(reports: list[dict]) -> dict:
+    """Cluster rollup of per-shard drift reports: per knob, keep the
+    observation farthest from its expectation (max ``|log ratio|``) —
+    drift on any shard is drift, and averaging shards would let a healthy
+    shard mask a throttled one."""
+    merged: dict = {"consumption": {}, "retrieval": {}, "drifted": False}
+    for rep in reports:
+        if not rep:
+            continue
+        for section in ("consumption", "retrieval"):
+            for knob, row in rep.get(section, {}).items():
+                cur = merged[section].get(knob)
+                if cur is None or (abs(math.log(max(row["ratio"], 1e-12)))
+                                   > abs(math.log(max(cur["ratio"],
+                                                      1e-12)))):
+                    merged[section][knob] = dict(row)
+        merged["drifted"] |= bool(rep.get("drifted"))
+    return merged
+
+
+def retrieval_expectations(profiler, config) -> dict:
+    """``(sf_id, cf_name) -> expected retrieval x-realtime`` for every
+    subscription in a derived config — the optional retrieval side of a
+    ``DriftDetector``, for callers that still hold the profiler."""
+    out = {}
+    for i, node in enumerate(config.nodes):
+        sf_id = config.node_id(i)
+        for p in node.plans:
+            out[(sf_id, p.cf.name())] = float(
+                profiler.retrieval_speed(node.sf, p.cf))
+    return out

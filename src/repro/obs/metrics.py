@@ -1,0 +1,183 @@
+"""Counters, gauges, and mergeable latency histograms.
+
+The cluster's observability problem is distribution-shaped: per-shard
+``stats()`` dicts used to carry scalar means, and the router's rollup
+could only sum or average them — averaging per-shard p95s (or worse,
+means) erases exactly the skew a tail-latency question asks about.  So
+the primitive here is a fixed-bound bucketed ``Histogram`` whose
+``snapshot()`` is a plain dict that crosses the wire, and whose ``merge``
+adds bucket counts — percentiles of the merged distribution are then
+recomputed from the combined buckets, which is correct to bucket
+resolution no matter how skewed the shards are.
+
+Bucket bounds are shared by construction (every histogram defaults to
+``DEFAULT_BOUNDS``); ``merge`` refuses mismatched bounds rather than
+guessing a re-bucketing.
+"""
+
+from __future__ import annotations
+
+import bisect
+import math
+import threading
+
+#: log-spaced latency bounds in seconds, ~2-2.5x apart: sub-ms decode
+#: dispatches through multi-second cluster drains land mid-range
+DEFAULT_BOUNDS = (0.0005, 0.001, 0.002, 0.005, 0.01, 0.02, 0.05,
+                  0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0, 30.0)
+
+
+def _percentiles(bounds, counts, count, mn, mx, qs):
+    """Percentile estimates from bucket counts (linear interpolation
+    inside the winning bucket; min/max clamp the open-ended buckets)."""
+    if count <= 0:
+        return {q: 0.0 for q in qs}
+    out = {}
+    for q in qs:
+        rank = q * (count - 1)
+        c = 0
+        val = mx
+        for i, n in enumerate(counts):
+            if n == 0:
+                continue
+            if c + n > rank:
+                lo = bounds[i - 1] if i > 0 else min(mn, bounds[0])
+                hi = bounds[i] if i < len(bounds) else max(mx, bounds[-1])
+                lo = max(lo, mn)
+                hi = min(hi, mx)
+                if hi < lo:
+                    lo = hi
+                val = lo + (hi - lo) * ((rank - c + 0.5) / n)
+                break
+            c += n
+        out[q] = val
+    return out
+
+
+def _snapshot_dict(bounds, counts, count, total, mn, mx):
+    ps = _percentiles(bounds, counts, count, mn, mx, (0.5, 0.95, 0.99))
+    return {"count": count, "sum": total,
+            "mean": total / count if count else 0.0,
+            "min": mn if count else 0.0, "max": mx if count else 0.0,
+            "p50": ps[0.5], "p95": ps[0.95], "p99": ps[0.99],
+            "bounds": list(bounds), "counts": list(counts)}
+
+
+class Histogram:
+    """Thread-safe bucketed histogram of nonnegative floats (latencies in
+    seconds by convention).  ``snapshot()`` is wire-safe; ``merge`` is the
+    cluster rollup."""
+
+    __slots__ = ("bounds", "_counts", "_count", "_sum", "_min", "_max",
+                 "_mu")
+
+    def __init__(self, bounds=None):
+        self.bounds = tuple(bounds if bounds is not None else DEFAULT_BOUNDS)
+        self._counts = [0] * (len(self.bounds) + 1)
+        self._count = 0
+        self._sum = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+        self._mu = threading.Lock()
+
+    def observe(self, value: float) -> None:
+        v = float(value)
+        i = bisect.bisect_left(self.bounds, v)
+        with self._mu:
+            self._counts[i] += 1
+            self._count += 1
+            self._sum += v
+            if v < self._min:
+                self._min = v
+            if v > self._max:
+                self._max = v
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    def percentile(self, q: float) -> float:
+        return self.snapshot()[f"p{int(q * 100)}"] if q in (0.5, 0.95, 0.99) \
+            else _percentiles(self.bounds, self._counts, self._count,
+                              self._min, self._max, (q,))[q]
+
+    def snapshot(self) -> dict:
+        with self._mu:
+            return _snapshot_dict(self.bounds, self._counts, self._count,
+                                  self._sum, self._min, self._max)
+
+    @staticmethod
+    def merge(snapshots: list[dict]) -> dict:
+        """Combine ``snapshot()`` dicts from many histograms (e.g. one per
+        shard) into one snapshot of the union distribution.  Bucket counts
+        add; percentiles are recomputed from the merged buckets — never
+        averaged across sources."""
+        snaps = [s for s in snapshots if s and s.get("count", 0) >= 0]
+        if not snaps:
+            return _snapshot_dict(DEFAULT_BOUNDS,
+                                  [0] * (len(DEFAULT_BOUNDS) + 1),
+                                  0, 0.0, math.inf, -math.inf)
+        bounds = tuple(snaps[0]["bounds"])
+        counts = [0] * (len(bounds) + 1)
+        count, total = 0, 0.0
+        mn, mx = math.inf, -math.inf
+        for s in snaps:
+            if tuple(s["bounds"]) != bounds:
+                raise ValueError("cannot merge histograms with different "
+                                 f"bounds: {s['bounds']} vs {list(bounds)}")
+            for i, n in enumerate(s["counts"]):
+                counts[i] += n
+            count += s["count"]
+            total += s["sum"]
+            if s["count"]:
+                mn = min(mn, s["min"])
+                mx = max(mx, s["max"])
+        return _snapshot_dict(bounds, counts, count, total, mn, mx)
+
+
+class MetricsRegistry:
+    """Named counters / gauges / histograms behind one lock, with a
+    wire-safe ``snapshot()``.  Counters are monotone (float-capable:
+    video-seconds and wall-clock accumulators live here too); gauges are
+    last-write-wins."""
+
+    def __init__(self):
+        self._mu = threading.Lock()
+        self._counters: dict[str, float] = {}
+        self._gauges: dict[str, float] = {}
+        self._hists: dict[str, Histogram] = {}
+
+    # -- counters / gauges ---------------------------------------------------
+    def inc(self, name: str, n: float = 1) -> None:
+        with self._mu:
+            self._counters[name] = self._counters.get(name, 0) + n
+
+    def value(self, name: str, default: float = 0):
+        with self._mu:
+            if name in self._counters:
+                return self._counters[name]
+            return self._gauges.get(name, default)
+
+    def set_gauge(self, name: str, v: float) -> None:
+        with self._mu:
+            self._gauges[name] = v
+
+    # -- histograms ----------------------------------------------------------
+    def histogram(self, name: str, bounds=None) -> Histogram:
+        with self._mu:
+            h = self._hists.get(name)
+            if h is None:
+                h = self._hists[name] = Histogram(bounds)
+            return h
+
+    def observe(self, name: str, v: float) -> None:
+        self.histogram(name).observe(v)
+
+    # -- export --------------------------------------------------------------
+    def snapshot(self) -> dict:
+        with self._mu:
+            counters = dict(self._counters)
+            gauges = dict(self._gauges)
+            hists = dict(self._hists)
+        return {"counters": counters, "gauges": gauges,
+                "histograms": {k: h.snapshot() for k, h in hists.items()}}

@@ -115,6 +115,14 @@ class DecodedSegmentCache:
     def __len__(self) -> int:
         return len(self._entries)
 
+    def stats_snapshot(self) -> dict:
+        """``CacheStats.snapshot()`` plus resident bytes/entries, taken
+        under the cache lock — external readers (``VStoreServer.stats``)
+        must use this instead of reading ``self.stats`` racily."""
+        with self._lock:
+            return self.stats.snapshot() | {"bytes": self._bytes,
+                                            "entries": len(self._entries)}
+
     # -- lookup --------------------------------------------------------------
     def lookup(self, stream: str, seg: int, sf_id: str, cf: FidelityOption,
                want: np.ndarray) -> tuple[np.ndarray, str] | None:

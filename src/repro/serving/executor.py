@@ -24,6 +24,7 @@ from ..analytics.batch import DEFAULT_BATCH_SHAPES, BatchedConsumer
 from ..analytics.operators import _positions
 from ..analytics.query import (QueryResult, StageStats, _active_frame_mask,
                                stage_specs)
+from ..obs import trace as obs
 
 
 def run_pipelined(store, config, query: str, stream: str, segments: list[int],
@@ -54,9 +55,26 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
     items_all: set = set()
     t_start = time.perf_counter()
 
+    tracing = obs.TRACER.enabled
+    if tracing:
+        # prefetch-pool threads have no span stack of their own; have them
+        # adopt the current stage span's context (the cell is updated as
+        # stages advance) so their retrieve spans parent under it
+        _ctx = [obs.TRACER.current()]
+        _raw_fetch = fetch
+
+        def fetch(stream, seg, sf_id, cf):
+            with obs.TRACER.activate(*_ctx[0]):
+                return _raw_fetch(stream, seg, sf_id, cf)
+
     with ThreadPoolExecutor(max_workers=max(1, prefetch_depth),
                             thread_name_prefix="vstore-prefetch") as pool:
         for op_name, op, cf, sf_id in stage_specs(config, query, accuracy):
+            stage_span = obs.span(f"stage:{op_name}", op=op_name,
+                                  cf=cf.name(), sf=sf_id)
+            stage_span.__enter__()
+            if tracing:
+                _ctx[0] = obs.TRACER.current()
             st = StageStats(op=op_name, cf=cf, sf_id=sf_id)
             stage_items: set = set()
             next_active: dict[int, set] = {}
@@ -117,6 +135,9 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
             stages.append(st)
             active = next_active
             items_all = stage_items
+            stage_span.set(segments=st.segments_scanned, items=st.items,
+                           detect_calls=st.detect_calls)
+            stage_span.__exit__(None, None, None)
 
     dur = len(segments) * spec.segment_seconds
     return QueryResult(items=items_all, stages=stages, video_seconds=dur,

@@ -27,6 +27,7 @@ from collections import Counter
 import numpy as np
 
 from ..core.knobs import FidelityOption
+from ..obs import trace as obs
 from .cache import DecodedSegmentCache, covering_rows
 
 
@@ -127,6 +128,17 @@ class RetrievalPlanner:
               cf: FidelityOption) -> tuple[np.ndarray, dict]:
         """Drop-in for ``VideoStore.retrieve``: cache lookup (exact or
         richer-CF reuse), else a single-flight union decode."""
+        if not obs.TRACER.enabled:
+            return self._fetch(stream, seg, sf_id, cf)
+        with obs.span("retrieve", seg=seg, sf=sf_id, cf=cf.name()) as sp:
+            out, cost = self._fetch(stream, seg, sf_id, cf)
+            sp.set(cache=cost.get("cache", ""), bytes=cost.get("bytes", 0),
+                   chunks=cost.get("chunks", 0),
+                   frames=cost.get("frames", 0))
+            return out, cost
+
+    def _fetch(self, stream: str, seg: int, sf_id: str,
+               cf: FidelityOption) -> tuple[np.ndarray, dict]:
         want = self.store.want_indices(sf_id, cf)
         gkey = (stream, seg, sf_id)
         while True:
@@ -141,7 +153,8 @@ class RetrievalPlanner:
                 if slot is None:
                     self._inflight[gkey] = _InFlight()
             if slot is not None:
-                slot.event.wait()
+                with obs.span("inflight.wait", seg=seg, sf=sf_id):
+                    slot.event.wait()
                 served = self._from_slot(slot, sf_id, cf, want)
                 if served is not None:
                     return served
@@ -191,3 +204,14 @@ class RetrievalPlanner:
         out = self.store.convert(frames[rows], sf_id, cf)
         cost["cache"] = "miss"
         return out, cost
+
+    def stats(self) -> dict:
+        """Snapshot of the planner's counters under its own lock — the
+        form ``VStoreServer.stats`` merges in, so a reader racing a decode
+        can't see a torn decodes/bytes pair."""
+        with self._lock:
+            return {"decodes": self.decodes,
+                    "coalesced_cfs": self.coalesced_cfs,
+                    "inflight_hits": self.inflight_hits,
+                    "decode_bytes": self.decode_bytes,
+                    "decode_chunks": self.decode_chunks}

@@ -26,6 +26,9 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 
 from ..analytics.query import QueryResult, stage_specs
+from ..obs import trace as obs
+from ..obs.drift import DriftDetector
+from ..obs.metrics import MetricsRegistry
 from .cache import DecodedSegmentCache
 from .executor import run_pipelined
 from .planner import Request, RetrievalPlanner
@@ -45,17 +48,25 @@ class QueryRequest:
     segments: list[int]
     accuracy: float
     block: bool = False
+    # distributed trace context (repro.obs): 0 means "no caller context" —
+    # the server starts a fresh trace if tracing is enabled
+    trace_id: int = 0
+    parent_span: int = 0
 
     def to_wire(self) -> dict:
         return {"query": self.query, "stream": self.stream,
                 "segments": [int(s) for s in self.segments],
-                "accuracy": float(self.accuracy), "block": self.block}
+                "accuracy": float(self.accuracy), "block": self.block,
+                "trace_id": int(self.trace_id),
+                "parent_span": int(self.parent_span)}
 
     @staticmethod
     def from_wire(d: dict) -> "QueryRequest":
         return QueryRequest(d["query"], d["stream"],
                             [int(s) for s in d["segments"]],
-                            float(d["accuracy"]), bool(d.get("block", False)))
+                            float(d["accuracy"]), bool(d.get("block", False)),
+                            int(d.get("trace_id", 0)),
+                            int(d.get("parent_span", 0)))
 
 
 def recovery_rank_for(config, spec, profiler=None) -> dict[str, float]:
@@ -125,23 +136,26 @@ class VStoreServer:
         self._erosion = None     # erosion executor (attach_ingest)
         if attach:
             store.attach_retriever(self.planner.fetch)
-        # aggregate stats
-        self.completed = 0
-        self.rejected = 0
-        self.failed = 0
-        self.collapsed = 0
-        self.video_seconds = 0.0
-        self.query_wall_s = 0.0
+        # aggregate stats live on a metrics registry (repro.obs.metrics):
+        # counters for the lifecycle tallies, a latency histogram whose
+        # snapshot the cluster rollup can merge distribution-correctly,
+        # and a drift detector fed by every completed query
+        self.metrics = MetricsRegistry()
+        self._h_latency = self.metrics.histogram("query_latency_s")
+        self.drift = DriftDetector(config, store.spec)
         self._t_up = time.perf_counter()
 
     # -- submission ----------------------------------------------------------
     def submit(self, query: str, stream: str, segments: list[int],
-               accuracy: float, block: bool = False) -> QueryTicket:
+               accuracy: float, block: bool = False,
+               trace: tuple[int, int] = (0, 0)) -> QueryTicket:
         """Admit one cascade query; returns a ticket whose ``result()``
         yields the QueryResult.  Rejects with AdmissionError at capacity
         unless ``block`` (then waits for a slot).  An identical query
         already in flight is collapsed: the ticket shares its execution
-        (and consumes no worker slot)."""
+        (and consumes no worker slot).  ``trace`` is an optional
+        ``(trace_id, parent_span)`` context the execution's spans parent
+        under (a collapsed duplicate keeps the leader's context)."""
         live_key = (query, stream, tuple(segments), accuracy)
         # resolved before taking an admission slot so a bad query name
         # raises without leaking in-flight accounting
@@ -151,7 +165,7 @@ class VStoreServer:
                     for seg in segments]
         with self._mu:
             if self._collapse and live_key in self._live:
-                self.collapsed += 1
+                self.metrics.inc("collapsed")
                 qid = self._next_qid
                 self._next_qid += 1
                 shared = self._live[live_key]
@@ -166,7 +180,7 @@ class VStoreServer:
         with self._mu:
             while self._inflight >= self.max_inflight:
                 if not block:
-                    self.rejected += 1
+                    self.metrics.inc("rejected")
                     raise AdmissionError(
                         f"{self._inflight} queries in flight "
                         f"(max {self.max_inflight})")
@@ -182,7 +196,7 @@ class VStoreServer:
         self.planner.register_query(requests)
         try:
             self._pool.submit(self._run, fut, query, stream, segments,
-                              accuracy, requests, live_key)
+                              accuracy, requests, live_key, trace)
         except BaseException as e:  # pool shut down: roll back the slot
             self.planner.release_query(requests)
             with self._mu:
@@ -198,27 +212,33 @@ class VStoreServer:
         if fut.exception() is not None:
             return
         res = fut.result()
-        with self._mu:
-            self.completed += 1
-            self.video_seconds += res.video_seconds
+        self.metrics.inc("completed")
+        self.metrics.inc("video_seconds", res.video_seconds)
 
     def _run(self, fut, query, stream, segments, accuracy, requests,
-             live_key) -> None:
+             live_key, trace=(0, 0)) -> None:
         try:
-            res = run_pipelined(self.store, self.config, query, stream,
-                                segments, accuracy,
-                                retriever=self.planner.fetch,
-                                prefetch_depth=self.prefetch_depth,
-                                batch_segments=self.batch_segments,
-                                batch_shapes=self.batch_shapes)
-            with self._mu:
-                self.completed += 1
-                self.video_seconds += res.video_seconds
-                self.query_wall_s += res.wall_s
+            # adopt the caller's trace context (a router's rpc span when
+            # the request came over the wire) and wrap the execution in a
+            # query span — closed before set_result, so a worker can ship
+            # the trace's spans as soon as the future resolves
+            with obs.TRACER.activate(*trace), \
+                    obs.span("query", query=query, stream=stream,
+                             accuracy=accuracy, segments=len(segments)):
+                res = run_pipelined(self.store, self.config, query, stream,
+                                    segments, accuracy,
+                                    retriever=self.planner.fetch,
+                                    prefetch_depth=self.prefetch_depth,
+                                    batch_segments=self.batch_segments,
+                                    batch_shapes=self.batch_shapes)
+            self.metrics.inc("completed")
+            self.metrics.inc("video_seconds", res.video_seconds)
+            self.metrics.inc("query_wall_s", res.wall_s)
+            self._h_latency.observe(res.wall_s)
+            self.drift.observe(accuracy, res)
             fut.set_result(res)
         except BaseException as e:
-            with self._mu:
-                self.failed += 1
+            self.metrics.inc("failed")
             fut.set_exception(e)
         finally:
             self.planner.release_query(requests)
@@ -231,7 +251,8 @@ class VStoreServer:
         """``submit`` over the serialize-friendly request form (what a
         shard worker calls after unpacking a router frame)."""
         return self.submit(req.query, req.stream, req.segments, req.accuracy,
-                           block=req.block)
+                           block=req.block,
+                           trace=(req.trace_id, req.parent_span))
 
     def run_batch(self, submissions: list[tuple], block: bool = True
                   ) -> list[QueryResult]:
@@ -249,33 +270,65 @@ class VStoreServer:
         self._erosion = erosion
 
     # -- stats / lifecycle ---------------------------------------------------
+    # registry-backed counter views, kept as attributes for compatibility
+    @property
+    def completed(self) -> int:
+        return int(self.metrics.value("completed"))
+
+    @property
+    def rejected(self) -> int:
+        return int(self.metrics.value("rejected"))
+
+    @property
+    def failed(self) -> int:
+        return int(self.metrics.value("failed"))
+
+    @property
+    def collapsed(self) -> int:
+        return int(self.metrics.value("collapsed"))
+
+    @property
+    def video_seconds(self) -> float:
+        return float(self.metrics.value("video_seconds"))
+
+    @property
+    def query_wall_s(self) -> float:
+        return float(self.metrics.value("query_wall_s"))
+
     def stats(self) -> dict:
+        # every sub-snapshot is taken under its owner's lock (scheduler,
+        # erosion, cache, planner, registry each lock internally), never
+        # by reading their mutable state from here — a reader racing a
+        # worker sees consistent counts
         ingest = self._ingest.stats() if self._ingest is not None else None
         erosion = self._erosion.stats() if self._erosion is not None else None
+        cache = self.cache.stats_snapshot()
+        planner = self.planner.stats()
+        counters = self.metrics.snapshot()["counters"]
         with self._mu:
-            uptime = time.perf_counter() - self._t_up
-            return {
-                "ingest": ingest,
-                "erosion": erosion,
-                "completed": self.completed,
-                "rejected": self.rejected,
-                "failed": self.failed,
-                "collapsed": self.collapsed,
-                "inflight": self._inflight,
-                "video_seconds": self.video_seconds,
-                "query_wall_s": self.query_wall_s,
-                # served video time per wall second since start — the
-                # aggregate x-realtime of everything this server ran
-                "aggregate_x_realtime": self.video_seconds / max(uptime, 1e-9),
-                "uptime_s": uptime,
-                "cache": self.cache.stats.snapshot(),
-                "cache_bytes": self.cache.bytes,
-                "decodes": self.planner.decodes,
-                "coalesced_cfs": self.planner.coalesced_cfs,
-                "inflight_hits": self.planner.inflight_hits,
-                "decode_bytes": self.planner.decode_bytes,
-                "decode_chunks": self.planner.decode_chunks,
-            }
+            inflight = self._inflight
+        uptime = time.perf_counter() - self._t_up
+        video_seconds = counters.get("video_seconds", 0.0)
+        return {
+            "ingest": ingest,
+            "erosion": erosion,
+            "completed": int(counters.get("completed", 0)),
+            "rejected": int(counters.get("rejected", 0)),
+            "failed": int(counters.get("failed", 0)),
+            "collapsed": int(counters.get("collapsed", 0)),
+            "inflight": inflight,
+            "video_seconds": video_seconds,
+            "query_wall_s": counters.get("query_wall_s", 0.0),
+            # served video time per wall second since start — the
+            # aggregate x-realtime of everything this server ran
+            "aggregate_x_realtime": video_seconds / max(uptime, 1e-9),
+            "uptime_s": uptime,
+            "cache": cache,
+            "cache_bytes": cache["bytes"],
+            "latency": self._h_latency.snapshot(),
+            "drift": self.drift.report(),
+            **planner,
+        }
 
     def close(self):
         if self._attached:

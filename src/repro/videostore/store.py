@@ -17,6 +17,8 @@ import threading
 
 import msgpack
 
+from ..obs.trace import span as _span
+
 _SHARD_LIMIT = 64 * 1024 * 1024
 
 
@@ -122,6 +124,12 @@ class SegmentStore:
             self._maybe_compact_locked()
 
     def get(self, key: str) -> bytes:
+        with _span("store.get", key=key) as sp:
+            blob = self._get(key)
+            sp.set(bytes=len(blob))
+            return blob
+
+    def _get(self, key: str) -> bytes:
         # Optimistic read: snapshot the index entry under the lock, read the
         # shard without it (gets stay concurrent), then verify no compact()
         # rewrote the shard layout mid-read.  compact() holds the lock for

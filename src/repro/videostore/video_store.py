@@ -16,6 +16,7 @@ import numpy as np
 
 from ..codec import segment as codec
 from ..codec import transform as T
+from ..obs.trace import span as _span
 from ..core.knobs import (CodingOption, FidelityOption, IngestSpec,
                           StorageFormat)
 from .store import SegmentStore
@@ -346,7 +347,11 @@ class VideoStore:
         installed (``cost['fallback']`` flags it)."""
         blob, fb = self._blob(stream, seg, sf_id)
         t0 = time.perf_counter()
-        frames, info = codec.decode_segment_ex(blob, np.asarray(want))
+        with _span("codec.decode", sf=sf_id, seg=seg,
+                   fallback=bool(fb)) as sp:
+            frames, info = codec.decode_segment_ex(blob, np.asarray(want))
+            sp.set(bytes=info["bytes"], chunks=info["chunks"],
+                   frames=info["frames"])
         t_dec = time.perf_counter() - t0
         cost = {
             "decode_s": t_dec, "convert_s": 0.0, "bytes": info["bytes"],
@@ -365,7 +370,10 @@ class VideoStore:
         fetched = [self._blob(stream, s, sf_id) for s in segs]
         blobs = [b for b, _fb in fetched]
         t0 = time.perf_counter()
-        frames_list, info = codec.decode_many(blobs, np.asarray(want))
+        with _span("codec.decode", sf=sf_id, segments=len(segs)) as sp:
+            frames_list, info = codec.decode_many(blobs, np.asarray(want))
+            sp.set(bytes=info["bytes"], chunks=info["chunks"],
+                   frames=info["frames"])
         cost = {
             "decode_s": time.perf_counter() - t0, "convert_s": 0.0,
             "bytes": info["bytes"], "chunks": info["chunks"],
@@ -380,7 +388,9 @@ class VideoStore:
                 cf: FidelityOption) -> np.ndarray:
         """Storage-grid frames -> consumption fidelity (crop + resize)."""
         sf = self.formats[sf_id]
-        return np.asarray(T.spatial_convert(frames, sf.fidelity, cf, self.spec))
+        with _span("convert", sf=sf_id, cf=cf.name(), frames=len(frames)):
+            return np.asarray(
+                T.spatial_convert(frames, sf.fidelity, cf, self.spec))
 
     def has_segment(self, stream: str, seg: int, sf_id: str) -> bool:
         """Whether the blob is physically materialized (fallback excluded)."""

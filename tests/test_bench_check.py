@@ -104,3 +104,42 @@ def test_duplicate_false_taints_boolean():
                                              "identical=False")]
     violations = check_rows(BASE, rows)
     assert any("identical regressed" in v for v in violations)
+
+
+# -- additive-key tolerance (rows that grew new identity knobs) ---------------
+
+def test_added_id_key_still_matches():
+    # the bench gained a new identity knob (kint=) after the baseline was
+    # committed; the old baseline row must match via the superset fallback
+    rows = [_row("decode_path", "mode=dense;kint=10;seed_x=400;fused_x=700;"
+                                "speedup=1.7;identical=True"),
+            _row("decode_path", "mode=sparse;kint=10;seed_x=900;"
+                                "fused_x=2500;speedup=2.6;identical=True"),
+            _row("other_bench", "query=A;speedup=1.3;identical=True")]
+    assert check_rows(BASE, rows) == []
+
+
+def test_added_id_key_regression_still_fails():
+    rows = [_row("decode_path", "mode=dense;kint=10;seed_x=400;fused_x=100;"
+                                "speedup=0.2;identical=True"),
+            _row("decode_path", "mode=sparse;kint=10;seed_x=900;"
+                                "fused_x=2500;speedup=2.6;identical=True")]
+    violations = check_rows(BASE, rows, factor=0.5)
+    assert any("speedup" in v for v in violations)
+
+
+def test_added_id_key_splits_merge_conservatively():
+    # one baseline row split into two (new knob, two values): a boolean
+    # claim failing in EITHER split taints the match; the guarded ratio
+    # takes the best split (duplicate-row semantics)
+    rows = [_row("other_bench", "query=A;n=1;speedup=1.5;identical=True"),
+            _row("other_bench", "query=A;n=4;speedup=0.9;identical=False")]
+    violations = check_rows([BASE[2]], rows)
+    assert any("identical regressed" in v for v in violations)
+    assert not any("speedup" in v for v in violations)
+
+
+def test_mismatched_ident_does_not_match():
+    rows = [_row("other_bench", "query=B;speedup=1.3;identical=True")]
+    violations = check_rows([BASE[2]], rows)
+    assert any("row missing" in v for v in violations)

@@ -300,3 +300,84 @@ def test_rebalance_directs_budget_at_backlog(cfg, tmp_path_factory):
         coord.set_budget_x(None)
         coord.drain()
         assert coord.stats()["debt_s"] == 0
+
+
+# ---------------------------------------------------------------------------
+# distributed tracing
+# ---------------------------------------------------------------------------
+
+def test_cluster_trace_propagation_and_restart(ref, cfg, tmp_path_factory):
+    """Trace context crosses the wire: shard-side spans re-parent under the
+    router's query span, cover every data-path stage on every shard, and a
+    SIGKILL'd-then-reattached worker cannot corrupt the merged timeline."""
+    import json
+
+    from repro.obs import trace as obstrace
+
+    root = str(tmp_path_factory.mktemp("traced"))
+    obstrace.enable(True)
+    obstrace.TRACER.clear()
+    try:
+        with ShardRouter(root, cfg, 2, spec=SPEC,
+                         opts={"workers": 1, "trace": True}) as router:
+            for s in STREAMS:
+                for g in SEGS:
+                    router.ingest(s, g, generate_segment(s, g, SPEC)[0])
+            results = {}
+            for s in STREAMS:  # one query per shard: spans on every shard
+                results[s] = router.query("A", s, SEGS, 0.8)
+            for s in STREAMS:  # tracing observes, never perturbs
+                want = run_query(ref, cfg, "A", s, SEGS, 0.8)
+                assert results[s].items == want.items
+
+            spans = obstrace.TRACER.spans()
+            by_id = {sp.span_id: sp for sp in spans}
+            shard_pids = {h.idx + 1 for h in router.hosts}
+            assert shard_pids <= {sp.pid for sp in spans}
+            for pid in shard_pids:  # full data path visible per shard
+                names = {sp.name for sp in spans if sp.pid == pid}
+                assert {"query", "retrieve", "codec.decode", "convert",
+                        "detect"} <= names
+            for sp in spans:  # merged timeline: every parent resolves
+                assert sp.parent_id == 0 or sp.parent_id in by_id
+            shard_queries = [sp for sp in spans
+                             if sp.name == "query" and sp.pid in shard_pids]
+            assert shard_queries
+            for sq in shard_queries:  # shard query -> rpc:query -> root
+                rpc = by_id[sq.parent_id]
+                assert rpc.name == "rpc:query"
+                assert rpc.pid not in shard_pids
+                top = by_id[rpc.parent_id]
+                assert top.name == "query"
+                assert top.trace_id == sq.trace_id
+                assert sq.t0 >= top.t0 - 0.05  # clock-offset rebased
+
+            # SIGKILL mid-query: retried query completes identically and
+            # the respawned worker's spans merge without dangling parents
+            n_before = len(spans)
+            host = router.host_of("jackson")
+            out = {}
+            t = threading.Thread(target=lambda: out.setdefault(
+                "res", router.query("A", "jackson", SEGS, 0.8)))
+            t.start()
+            time.sleep(0.02)
+            host.kill()
+            t.join(timeout=240)
+            assert not t.is_alive()
+            assert out["res"].items == results["jackson"].items
+            router.harvest_spans()  # ingest-time spans still on workers
+            spans = obstrace.TRACER.spans()
+            assert len(spans) > n_before
+            by_id = {sp.span_id: sp for sp in spans}
+            for sp in spans:
+                assert sp.parent_id == 0 or sp.parent_id in by_id
+
+            path = f"{root}/trace.json"
+            n = obstrace.export_trace(path)
+            assert n == len(spans)
+            with open(path) as f:
+                doc = json.load(f)
+            assert any(e["ph"] == "X" for e in doc["traceEvents"])
+    finally:
+        obstrace.enable(False)
+        obstrace.TRACER.clear()
