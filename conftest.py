@@ -1,0 +1,48 @@
+"""Root conftest: opt-in runtime concurrency checking.
+
+With ``REPRO_ANALYSIS=1`` in the environment, the mini-TSan from
+``repro.analysis.runtime`` is installed *at import time* — before pytest
+collects anything — so every ``threading.Lock``/``RLock`` the suite
+creates is traced.  At session end the observed acquisition graph is
+validated (cycles, blocking-under-lock, inversions of the static lock
+order from ``repro.analysis.locks``) and any violation fails the run.
+
+Shard worker processes install the checker themselves when they see the
+env var (see ``repro.cluster.worker.shard_worker_main``); their lock
+orders are validated in-process since edges can't cross the exit.
+"""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+
+try:
+    import repro.analysis.runtime as _runtime
+except ImportError:
+    sys.path.insert(0, _SRC)
+    import repro.analysis.runtime as _runtime
+
+_runtime.install_from_env()
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if not _runtime.installed():
+        return
+    from repro.analysis.core import load_tree
+    from repro.analysis import locks
+
+    lock_an = locks.analyze(load_tree(os.path.join(_SRC, "repro")))
+    violations = _runtime.check(static_sites=lock_an.sites,
+                                static_edges=set(lock_an.edges))
+    if violations:
+        tr = session.config.pluginmanager.get_plugin("terminalreporter")
+        lines = ["REPRO_ANALYSIS: runtime concurrency violations:"]
+        lines += [f"  - {v}" for v in violations]
+        if tr is not None:
+            tr.write_sep("=", "repro.analysis runtime checker")
+            for ln in lines:
+                tr.write_line(ln)
+        else:  # pragma: no cover - no terminal reporter registered
+            print("\n".join(lines), file=sys.stderr)
+        session.exitstatus = 1

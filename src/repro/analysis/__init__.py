@@ -1,0 +1,26 @@
+"""repro.analysis: invariant linter + runtime concurrency checker.
+
+Static passes (stdlib ``ast`` only — this package must stay importable
+on a bare interpreter with no third-party deps):
+
+- ``locks``        lock discipline (guarded fields, blocking-under-lock)
+                   and the static lock-acquisition order graph;
+- ``wirecheck``    wire completeness for everything crossing the cluster
+                   wire protocol;
+- ``determinism``  no ``hash()`` / unseeded randomness / wall-clock reads
+                   in placement, merge, seed, or bench-identity paths;
+- ``jitshape``     jitted call sites must not be fed data-dependent
+                   shapes (jit-cache fragmentation).
+
+Run the suite with ``python -m repro.analysis.lint src/``.  The runtime
+companion (``repro.analysis.runtime``) wraps ``threading.Lock``/``RLock``
+to record real acquisition orders while the test suite runs
+(``REPRO_ANALYSIS=1``) and cross-checks them against the static graph.
+
+See ``README.md`` in this directory for rules, the ``# guarded-by:``
+annotation syntax, and the baseline / suppression format.
+"""
+
+from .core import Finding, Module, load_modules, load_tree
+
+__all__ = ["Finding", "Module", "load_modules", "load_tree"]

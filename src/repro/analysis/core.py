@@ -1,0 +1,181 @@
+"""Shared plumbing for the analysis passes.
+
+A pass consumes ``Module`` objects (source + AST + comment directives)
+and yields ``Finding``s.  Three kinds of comment directives exist:
+
+``# guarded-by: <lock>``
+    On a ``self.<attr> = ...`` line: declares that every subsequent
+    mutation of ``<attr>`` must happen while ``self.<lock>`` is held
+    (``<lock>`` names a ``threading.Lock``/``RLock``/``Condition``
+    attribute of the same class, or a module-level lock).
+
+``# holds: <lock>[, <lock>...]``
+    On a ``def`` line: the method is documented to be called with the
+    named lock(s) already held (the ``*_locked`` naming convention
+    implies this for single-lock classes without the directive).
+
+``# analysis: allow[<rule>[,<rule>...]] <justification>``
+    Suppresses findings of the named rule(s) on that line.  The
+    justification text is mandatory — an allow without a reason is
+    itself a finding (rule ``bare-allow``).
+
+``# analysis: determinism-path``
+    Anywhere in a file: opts the whole module into the determinism
+    pass (in addition to the built-in path patterns).
+
+Findings are fingerprinted as ``rule:path:symbol`` (no line numbers, so
+baselines survive unrelated edits).  The baseline file holds one
+fingerprint per line with a mandatory trailing ``# reason`` comment.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import os
+import re
+import tokenize
+
+_ALLOW_RE = re.compile(
+    r"#\s*analysis:\s*allow\[([A-Za-z0-9_,\- ]+)\]\s*(.*)")
+_GUARDED_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][A-Za-z0-9_]*)")
+_HOLDS_RE = re.compile(
+    r"#\s*holds:\s*([A-Za-z_][A-Za-z0-9_]*(?:\s*,\s*[A-Za-z_][A-Za-z0-9_]*)*)")
+_DETPATH_RE = re.compile(r"#\s*analysis:\s*determinism-path\b")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str        # e.g. "guard", "lock-order", "wire-field", ...
+    path: str        # path as given on the command line (relative)
+    line: int
+    symbol: str      # stable anchor: "Class.attr", "Class.method", ...
+    message: str
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}:{self.path}:{self.symbol}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class Module:
+    """One parsed source file plus its comment directives."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        # line -> set of suppressed rules; line -> guard lock name; ...
+        self.allows: dict[int, set[str]] = {}
+        self.bare_allows: list[int] = []
+        self.guards: dict[int, str] = {}
+        self.holds: dict[int, list[str]] = {}
+        self.determinism_opt_in = False
+        self._scan_comments()
+
+    def _scan_comments(self) -> None:
+        src_lines = self.source.splitlines()
+
+        def _attach_line(line: int) -> int:
+            """An allow on a comment-only line suppresses the next code
+            line (standard suppress-next-line semantics); an end-of-line
+            allow suppresses its own line."""
+            text = src_lines[line - 1].strip() if line <= len(src_lines) \
+                else ""
+            if not text.startswith("#"):
+                return line
+            nxt = line + 1
+            while nxt <= len(src_lines):
+                stripped = src_lines[nxt - 1].strip()
+                if stripped and not stripped.startswith("#"):
+                    return nxt
+                nxt += 1
+            return line
+
+        try:
+            toks = tokenize.generate_tokens(io.StringIO(self.source).readline)
+            for tok in toks:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                text, line = tok.string, tok.start[0]
+                m = _ALLOW_RE.search(text)
+                if m:
+                    rules = {r.strip() for r in m.group(1).split(",")
+                             if r.strip()}
+                    if not m.group(2).strip():
+                        self.bare_allows.append(line)
+                    target = _attach_line(line)
+                    self.allows.setdefault(target, set()).update(rules)
+                    if target != line:
+                        self.allows.setdefault(line, set()).update(rules)
+                m = _GUARDED_RE.search(text)
+                if m:
+                    self.guards[line] = m.group(1)
+                m = _HOLDS_RE.search(text)
+                if m:
+                    self.holds[line] = [s.strip()
+                                        for s in m.group(1).split(",")]
+                if _DETPATH_RE.search(text):
+                    self.determinism_opt_in = True
+        except tokenize.TokenError:
+            pass
+
+    def allowed(self, rule: str, line: int) -> bool:
+        return rule in self.allows.get(line, ())
+
+
+def load_tree(root: str) -> list[Module]:
+    """Parse every ``.py`` file under ``root`` (or the single file)."""
+    paths: list[str] = []
+    if os.path.isfile(root):
+        paths = [root]
+    else:
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in ("__pycache__", ".git"))
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    paths.append(os.path.join(dirpath, name))
+    return load_modules(paths)
+
+
+def load_modules(paths: list[str]) -> list[Module]:
+    mods = []
+    for path in paths:
+        with open(path, encoding="utf-8") as fh:
+            source = fh.read()
+        mods.append(Module(os.path.normpath(path), source))
+    return mods
+
+
+# -- baseline ------------------------------------------------------------------
+
+def load_baseline(path: str) -> dict[str, str]:
+    """fingerprint -> reason.  Entries without a reason are rejected by
+    the CLI (the baseline must justify every suppression)."""
+    entries: dict[str, str] = {}
+    if not os.path.exists(path):
+        return entries
+    with open(path, encoding="utf-8") as fh:
+        for raw in fh:
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            fp, _, reason = line.partition("#")
+            entries[fp.strip()] = reason.strip()
+    return entries
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """'a.b.c' for Name/Attribute chains, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None

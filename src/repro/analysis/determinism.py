@@ -1,0 +1,124 @@
+"""Determinism: placement / merge / seed / bench-identity paths must be
+process-stable.
+
+``PYTHONHASHSEED`` randomizes ``hash()`` per process, wall clocks differ
+across machines, and unseeded RNGs differ across runs — any of these in
+a path that decides shard placement, erosion victims, synthetic-scene
+content, or bench identity breaks the ``--check`` regression gate and
+the bit-identical single-process-vs-cluster guarantee (crc32 and the
+golden-ratio integer hash are the sanctioned tools; see
+``cluster.router.stable_shard`` and ``videostore.stratified_pick``).
+
+Scoped to ``DETERMINISM_PATHS`` plus any module carrying an
+``# analysis: determinism-path`` comment.  Rule name: ``determinism``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .core import Finding, Module, dotted_name
+
+DETERMINISM_PATHS = (
+    "analytics/scene.py",        # synthetic scenes: bench identity
+    "cluster/router.py",         # shard placement + scatter-gather merge
+    "videostore/video_store.py",  # stratified erosion victim spread
+    "ingest/erosion_exec.py",    # cohort erosion seeds
+    "core/erosion.py",           # erosion plan math
+)
+
+# dotted call names that are nondeterministic across processes/machines
+BANNED_CALLS = {
+    "time.time": "wall-clock read",
+    "time.time_ns": "wall-clock read",
+    "datetime.now": "wall-clock read",
+    "datetime.utcnow": "wall-clock read",
+    "datetime.datetime.now": "wall-clock read",
+    "datetime.datetime.utcnow": "wall-clock read",
+    "date.today": "wall-clock read",
+    "uuid.uuid4": "random identity",
+    "os.urandom": "random bytes",
+    "secrets.token_bytes": "random bytes",
+    "secrets.token_hex": "random bytes",
+}
+
+# the stdlib `random` module: any use is banned in these paths (seeded
+# determinism goes through np.random.default_rng(seed) instead)
+_RANDOM_PREFIXES = ("random.",)
+_NP_RANDOM_DIRECT = {
+    "np.random.rand", "np.random.randn", "np.random.randint",
+    "np.random.random", "np.random.choice", "np.random.permutation",
+    "np.random.shuffle", "np.random.seed",
+    "numpy.random.rand", "numpy.random.randn", "numpy.random.randint",
+    "numpy.random.random", "numpy.random.choice",
+    "numpy.random.permutation", "numpy.random.shuffle",
+    "numpy.random.seed",
+}
+
+
+def _in_scope(mod: Module) -> bool:
+    if mod.determinism_opt_in:
+        return True
+    p = mod.path.replace("\\", "/")
+    return any(p.endswith(suffix) for suffix in DETERMINISM_PATHS)
+
+
+def check(modules: list[Module]) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in modules:
+        if not _in_scope(mod):
+            continue
+
+        def add(f: Finding):
+            if not mod.allowed(f.rule, f.line):
+                findings.append(f)
+
+        func_stack: list[str] = []
+
+        def sym(line_hint: str) -> str:
+            return ".".join(func_stack) if func_stack else line_hint
+
+        def walk(node: ast.AST):
+            pushed = False
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                func_stack.append(node.name)
+                pushed = True
+            if isinstance(node, ast.Call):
+                d = dotted_name(node.func)
+                if isinstance(node.func, ast.Name) \
+                        and node.func.id == "hash":
+                    add(Finding(
+                        "determinism", mod.path, node.lineno,
+                        sym("hash"),
+                        "hash() is randomized per process "
+                        "(PYTHONHASHSEED) — use zlib.crc32 or the "
+                        "golden-ratio integer hash"))
+                elif d in BANNED_CALLS:
+                    add(Finding(
+                        "determinism", mod.path, node.lineno, sym(d),
+                        f"{d}() is a {BANNED_CALLS[d]} — not stable "
+                        f"across processes/machines"))
+                elif d and d.startswith(_RANDOM_PREFIXES):
+                    add(Finding(
+                        "determinism", mod.path, node.lineno, sym(d),
+                        f"stdlib {d}() in a determinism path — use "
+                        f"np.random.default_rng(seed)"))
+                elif d in _NP_RANDOM_DIRECT:
+                    add(Finding(
+                        "determinism", mod.path, node.lineno, sym(d),
+                        f"{d}() uses global RNG state — use "
+                        f"np.random.default_rng(seed)"))
+                elif d and d.endswith("default_rng") and not node.args \
+                        and not node.keywords:
+                    add(Finding(
+                        "determinism", mod.path, node.lineno, sym(d),
+                        "default_rng() without a seed is entropy-"
+                        "seeded — pass an explicit seed"))
+            for child in ast.iter_child_nodes(node):
+                walk(child)
+            if pushed:
+                func_stack.pop()
+
+        walk(mod.tree)
+    return findings

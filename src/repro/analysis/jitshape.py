@@ -1,0 +1,137 @@
+"""Jit-shape safety: jitted call sites must not be fed data-dependent
+shapes.
+
+Every distinct argument shape retraces and recompiles a jitted
+function; a variable-bound slice (``x[:k]`` with ``k`` computed from
+data) flowing straight into a jitted call fragments the jit cache that
+the batch-shape ladder (``DEFAULT_BATCH_SHAPES``) and the pad-then-
+slice idiom (``_pad_tail`` / ``_pad_to`` / ``_pad_chunk_count``)
+deliberately bound.
+
+The pass collects jitted callables — ``@jax.jit``-decorated defs,
+``functools.partial(jax.jit, ...)`` decorations, and ``name =
+jax.jit(fn)`` assignments — across the scanned tree, then flags any
+call to one of them whose argument expression contains a subscript
+with a non-constant slice bound, unless that subscript is wrapped in a
+padding helper (function name containing ``pad``) inside the same
+argument expression.  Arguments that are plain names are not chased
+through dataflow: hoisting the slice through an explicit pad call is
+exactly the idiom the rule wants to force.  Rule name: ``jit-shape``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .core import Finding, Module, dotted_name
+
+_JIT_NAMES = {"jax.jit", "jit"}
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """True for `jax.jit`, `jax.jit(...)`, `partial(jax.jit, ...)`."""
+    if dotted_name(node) in _JIT_NAMES:
+        return True
+    if isinstance(node, ast.Call):
+        d = dotted_name(node.func)
+        if d in _JIT_NAMES:
+            return True
+        if d in ("functools.partial", "partial") and node.args \
+                and _is_jit_expr(node.args[0]):
+            return True
+    return False
+
+
+def collect_jitted(modules: list[Module]) -> set[str]:
+    """Simple names of every jitted callable in the tree."""
+    jitted: set[str] = set()
+    for mod in modules:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.FunctionDef):
+                if any(_is_jit_expr(dec) for dec in node.decorator_list):
+                    jitted.add(node.name)
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Call) \
+                    and _is_jit_expr(node.value):
+                jitted.add(node.targets[0].id)
+    return jitted
+
+
+def _variable_slice(node: ast.Subscript) -> bool:
+    """Subscript whose slice has a non-constant bound."""
+    def bound_varies(b) -> bool:
+        if b is None or isinstance(b, ast.Constant):
+            return False
+        if isinstance(b, ast.UnaryOp) and isinstance(b.operand,
+                                                     ast.Constant):
+            return False
+        return True
+
+    sl = node.slice
+    parts = sl.elts if isinstance(sl, ast.Tuple) else [sl]
+    for p in parts:
+        if isinstance(p, ast.Slice) and (bound_varies(p.lower)
+                                         or bound_varies(p.upper)):
+            return True
+    return False
+
+
+def _find_unpadded_slices(arg: ast.AST) -> list[ast.Subscript]:
+    """Variable-bound slices in `arg` not wrapped by a pad helper."""
+    hits: list[ast.Subscript] = []
+    stack: list[tuple[ast.AST, bool]] = [(arg, False)]
+    while stack:
+        node, padded = stack.pop()
+        if isinstance(node, ast.Call):
+            d = dotted_name(node.func) or ""
+            if "pad" in d.rsplit(".", 1)[-1].lower():
+                padded = True
+        if isinstance(node, ast.Subscript) and not padded \
+                and _variable_slice(node):
+            hits.append(node)
+        for child in ast.iter_child_nodes(node):
+            stack.append((child, padded))
+    return hits
+
+
+def check(modules: list[Module]) -> list[Finding]:
+    jitted = collect_jitted(modules)
+    if not jitted:
+        return []
+    findings: list[Finding] = []
+    for mod in modules:
+        func_stack: list[str] = []
+
+        def walk(node: ast.AST):
+            pushed = False
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                func_stack.append(node.name)
+                pushed = True
+            if isinstance(node, ast.Call):
+                name = None
+                if isinstance(node.func, ast.Name):
+                    name = node.func.id
+                elif isinstance(node.func, ast.Attribute):
+                    name = node.func.attr
+                if name in jitted:
+                    for arg in list(node.args) + \
+                            [kw.value for kw in node.keywords]:
+                        for sub in _find_unpadded_slices(arg):
+                            f = Finding(
+                                "jit-shape", mod.path, sub.lineno,
+                                ".".join(func_stack) or name,
+                                f"call to jitted {name}() takes a "
+                                f"variable-bound slice — every distinct "
+                                f"shape retraces; pad to a static shape "
+                                f"(_pad_tail/_pad_to) first")
+                            if not mod.allowed(f.rule, f.line):
+                                findings.append(f)
+            for child in ast.iter_child_nodes(node):
+                walk(child)
+            if pushed:
+                func_stack.pop()
+
+        walk(mod.tree)
+    return findings

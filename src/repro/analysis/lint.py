@@ -1,0 +1,113 @@
+"""CLI driver: ``python -m repro.analysis.lint src/``.
+
+Runs every static pass, applies inline ``# analysis: allow[...]``
+suppressions (done inside each pass) and the baseline file, and exits
+non-zero on any remaining finding.  ``--write-baseline`` records the
+current findings as the new baseline (each entry still needs a reason
+added by hand — a baseline entry without one fails the next run).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import determinism, jitshape, locks, wirecheck
+from .core import Finding, load_baseline, load_tree
+
+DEFAULT_BASELINE = "src/repro/analysis/baseline.txt"
+
+
+def run(paths: list[str], baseline_path: str | None = None
+        ) -> tuple[list[Finding], locks.LockAnalysis, dict]:
+    """-> (unsuppressed findings, lock analysis, stale-baseline map)."""
+    modules = []
+    for p in paths:
+        modules.extend(load_tree(p))
+    findings: list[Finding] = []
+    for mod in modules:
+        for line in mod.bare_allows:
+            findings.append(Finding(
+                "bare-allow", mod.path, line, f"allow@{line}",
+                "analysis: allow[...] without a justification — state "
+                "why the finding is acceptable"))
+    lock_an = locks.analyze(modules)
+    findings.extend(lock_an.findings)
+    findings.extend(wirecheck.check(modules))
+    findings.extend(determinism.check(modules))
+    findings.extend(jitshape.check(modules))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+
+    baseline = load_baseline(baseline_path) if baseline_path else {}
+    kept, used = [], set()
+    for f in findings:
+        if f.fingerprint in baseline:
+            used.add(f.fingerprint)
+            if not baseline[f.fingerprint]:
+                kept.append(Finding(
+                    "bare-allow", f.path, f.line, f.symbol,
+                    f"baseline entry {f.fingerprint} has no reason "
+                    f"comment"))
+        else:
+            kept.append(f)
+    stale = {fp: r for fp, r in baseline.items() if fp not in used}
+    return kept, lock_an, stale
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="invariant linter: lock discipline/order, wire "
+                    "completeness, determinism, jit-shape safety")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to scan (default: src)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file of accepted fingerprints")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline file")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable output")
+    ap.add_argument("--graph", action="store_true",
+                    help="also dump the static lock-acquisition graph")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or ["src"]
+    baseline = None if args.no_baseline else args.baseline
+    findings, lock_an, stale = run(paths, baseline_path=baseline)
+
+    if args.write_baseline:
+        with open(args.baseline, "w", encoding="utf-8") as fh:
+            fh.write("# repro.analysis baseline — every entry needs a "
+                     "'# reason' justifying it.\n")
+            for f in findings:
+                fh.write(f"{f.fingerprint}  # TODO: justify\n")
+        print(f"wrote {len(findings)} entries to {args.baseline}")
+        return 0
+
+    if args.json:
+        print(json.dumps({
+            "findings": [vars(f) | {"fingerprint": f.fingerprint}
+                         for f in findings],
+            "stale_baseline": sorted(stale),
+            "lock_edges": sorted(f"{a} -> {b}" for a, b in lock_an.edges),
+        }, indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        if args.graph:
+            print("lock-acquisition graph:")
+            for (a, b), (p, ln) in sorted(lock_an.edges.items()):
+                print(f"  {a} -> {b}   ({p}:{ln})")
+        for fp in sorted(stale):
+            print(f"warning: stale baseline entry {fp} "
+                  f"(no longer triggered — remove it)", file=sys.stderr)
+        if findings:
+            print(f"{len(findings)} finding(s)", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

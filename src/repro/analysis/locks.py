@@ -1,0 +1,573 @@
+"""Lock discipline + lock-order analysis.
+
+Three rules come out of this pass:
+
+``guard``        a field declared ``# guarded-by: <lock>`` is mutated
+                 (assigned, augmented, deleted, or hit with a mutating
+                 container method) outside a ``with self.<lock>`` block.
+                 ``__init__`` and init-only helpers are exempt (single-
+                 threaded construction), as are methods carrying a
+                 ``# holds: <lock>`` directive or the ``*_locked``
+                 naming convention.
+``block``        a blocking call (``time.sleep``, ``subprocess``,
+                 socket send/recv, wire frames, worker RPC,
+                 ``queue.Queue.get/put``, ``Future.result``) made while
+                 any lock is held.
+``lock-order``   the static lock-acquisition graph (nested ``with``
+                 blocks, propagated through resolvable intra-repo calls)
+                 contains a cycle.
+
+The acquisition graph is deliberately *under*-approximate: only calls
+whose receiver is statically resolvable (``self.method``, or
+``self.attr.method`` where ``__init__`` assigned ``self.attr =
+KnownClass(...)``) propagate acquisitions.  The runtime checker
+(``repro.analysis.runtime``) covers what this misses, and cross-checks
+observed orders against the edges collected here.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from .core import Finding, Module, dotted_name
+
+LOCK_CTORS = {"threading.Lock", "threading.RLock"}
+COND_CTOR = "threading.Condition"
+
+# fully-qualified callables that block
+BLOCKING_FUNCS = {
+    "time.sleep", "socket.create_connection",
+    "subprocess.run", "subprocess.call", "subprocess.check_call",
+    "subprocess.check_output", "subprocess.Popen",
+}
+# method names that block regardless of receiver (receivers resolving to
+# a known lock/Condition attribute are exempted for "wait")
+BLOCKING_METHODS = {
+    "recv", "recv_exact", "recv_msg", "send_msg", "sendall", "accept",
+    "connect", "call", "call_retry", "broadcast", "result", "wait",
+}
+# component classes whose get/put are queue-style blocking calls
+QUEUE_CTORS = {"queue.Queue", "Queue", "queue.SimpleQueue", "SimpleQueue"}
+
+MUTATING_METHODS = {
+    "append", "extend", "add", "remove", "discard", "pop", "popleft",
+    "appendleft", "clear", "update", "setdefault", "insert", "sort",
+    "move_to_end", "popitem", "rotate",
+}
+
+
+def norm_path(path: str) -> str:
+    """Stable path key shared with the runtime checker: the part of the
+    path from the last ``repro/`` component on (else the basename)."""
+    p = path.replace("\\", "/")
+    idx = p.rfind("/repro/")
+    if idx >= 0:
+        return p[idx + 1:]
+    if p.startswith("repro/"):
+        return p
+    return p.rsplit("/", 1)[-1]
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    name: str
+    module: Module
+    node: ast.ClassDef
+    locks: dict = dataclasses.field(default_factory=dict)       # attr -> canonical attr
+    lock_sites: dict = dataclasses.field(default_factory=dict)  # canonical -> (path, line)
+    guarded: dict = dataclasses.field(default_factory=dict)     # field -> canonical lock
+    guard_lines: dict = dataclasses.field(default_factory=dict)
+    components: dict = dataclasses.field(default_factory=dict)  # attr -> ctor dotted name
+    methods: dict = dataclasses.field(default_factory=dict)     # name -> FunctionDef
+    init_only: set = dataclasses.field(default_factory=set)
+
+    def node_id(self, canonical: str) -> str:
+        return f"{self.name}.{canonical}"
+
+
+@dataclasses.dataclass
+class LockAnalysis:
+    findings: list
+    # (src_node, dst_node) -> (path, line) of first example acquisition
+    edges: dict
+    # (norm_path, line) -> node_id, for runtime site translation
+    sites: dict
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _collect_classes(modules: list[Module]) -> tuple[dict, dict, list]:
+    """-> (classes by name, module-level locks by name, findings)."""
+    classes: dict[str, ClassInfo] = {}
+    module_locks: dict[str, tuple[str, str, int]] = {}  # name -> (id, path, line)
+    findings: list[Finding] = []
+    for mod in modules:
+        stem = norm_path(mod.path).rsplit("/", 1)[-1]
+        for st in mod.tree.body:
+            if (isinstance(st, ast.Assign) and len(st.targets) == 1
+                    and isinstance(st.targets[0], ast.Name)
+                    and isinstance(st.value, ast.Call)
+                    and dotted_name(st.value.func) in LOCK_CTORS):
+                name = st.targets[0].id
+                module_locks[name] = (f"{stem}::{name}", mod.path, st.lineno)
+            if not isinstance(st, ast.ClassDef):
+                continue
+            info = ClassInfo(name=st.name, module=mod, node=st)
+            for item in st.body:
+                if isinstance(item, ast.FunctionDef):
+                    info.methods[item.name] = item
+            # first sweep: lock constructions + component types + guards
+            cond_aliases: dict[str, str] = {}
+            for meth in info.methods.values():
+                for sub in ast.walk(meth):
+                    if isinstance(sub, ast.Assign) \
+                            and len(sub.targets) == 1:
+                        target, value = sub.targets[0], sub.value
+                    elif isinstance(sub, ast.AnnAssign):
+                        target, value = sub.target, sub.value
+                    else:
+                        continue
+                    attr = _self_attr(target)
+                    if attr is None:
+                        continue
+                    if sub.lineno in mod.guards:
+                        info.guarded[attr] = mod.guards[sub.lineno]
+                        info.guard_lines[attr] = sub.lineno
+                    if not isinstance(value, ast.Call):
+                        continue
+                    ctor = dotted_name(value.func)
+                    if ctor in LOCK_CTORS:
+                        info.locks[attr] = attr
+                        info.lock_sites[attr] = (mod.path, sub.lineno)
+                    elif ctor == COND_CTOR:
+                        arg = _self_attr(value.args[0]) \
+                            if value.args else None
+                        if arg is not None:
+                            cond_aliases[attr] = arg
+                        else:
+                            info.locks[attr] = attr
+                            info.lock_sites[attr] = (mod.path, sub.lineno)
+                    elif ctor is not None:
+                        info.components[attr] = ctor
+            for alias, target in cond_aliases.items():
+                if target in info.locks:
+                    info.locks[alias] = info.locks[target]
+                else:
+                    findings.append(Finding(
+                        "bad-guard-decl", mod.path,
+                        info.methods.get("__init__", st).lineno,
+                        f"{info.name}.{alias}",
+                        f"Condition({info.name}.{alias}) wraps unknown "
+                        f"lock {target!r}"))
+            # guard declarations must name a known lock
+            for field, lockname in list(info.guarded.items()):
+                if lockname in info.locks:
+                    info.guarded[field] = info.locks[lockname]  # canonical
+                elif lockname in module_locks:
+                    info.guarded[field] = f"::{lockname}"
+                else:
+                    findings.append(Finding(
+                        "bad-guard-decl", mod.path,
+                        info.guard_lines[field],
+                        f"{info.name}.{field}",
+                        f"guarded-by names unknown lock {lockname!r} on "
+                        f"{info.name}.{field}"))
+                    del info.guarded[field]
+            # init-only helpers: private methods reachable only from
+            # __init__ (fixpoint over intra-class self.m() calls)
+            callers: dict[str, set] = {m: set() for m in info.methods}
+            for mname, meth in info.methods.items():
+                for sub in ast.walk(meth):
+                    if isinstance(sub, ast.Call):
+                        tgt = _self_attr(sub.func)
+                        if tgt in callers:
+                            callers[tgt].add(mname)
+            changed = True
+            init_only = set()
+            while changed:
+                changed = False
+                for mname, who in callers.items():
+                    if mname == "__init__" or mname in init_only:
+                        continue
+                    if (mname.startswith("_") and who
+                            and all(c == "__init__" or c in init_only
+                                    for c in who)):
+                        init_only.add(mname)
+                        changed = True
+            info.init_only = init_only
+            classes[st.name] = info
+    return classes, module_locks, findings
+
+
+class _MethodWalker:
+    """Walks one function body tracking the lexically-held lock set."""
+
+    def __init__(self, analysis: "_Analyzer", info: ClassInfo | None,
+                 mod: Module, fn: ast.FunctionDef, entry_held: frozenset,
+                 exempt_guard: bool, method_key: tuple):
+        self.an = analysis
+        self.info = info
+        self.mod = mod
+        self.fn = fn
+        self.entry_held = entry_held
+        self.exempt_guard = exempt_guard
+        self.method_key = method_key
+        self.direct_acquires: set[str] = set()
+        self.calls: list[tuple] = []  # (callee_key, held, line)
+
+    # -- lock resolution -------------------------------------------------------
+    def resolve_lock(self, expr: ast.AST) -> str | None:
+        """Node id for an expression naming a lock, else None."""
+        attr = _self_attr(expr)
+        if attr is not None and self.info and attr in self.info.locks:
+            return self.info.node_id(self.info.locks[attr])
+        if isinstance(expr, ast.Name) and expr.id in self.an.module_locks:
+            return self.an.module_locks[expr.id][0]
+        d = dotted_name(expr)
+        if d and "." in d:
+            last = d.rsplit(".", 1)[-1]
+            if last in self.an.module_locks:
+                return self.an.module_locks[last][0]
+        return None
+
+    def _is_lock_attr(self, expr: ast.AST) -> bool:
+        attr = _self_attr(expr)
+        return (attr is not None and self.info is not None
+                and attr in self.info.locks)
+
+    # -- traversal -------------------------------------------------------------
+    def run(self):
+        self.walk_body(self.fn.body, self.entry_held)
+
+    def walk_body(self, stmts, held: frozenset) -> frozenset:
+        for st in stmts:
+            held = self.visit_stmt(st, held)
+        return held
+
+    def visit_stmt(self, st, held: frozenset) -> frozenset:
+        if isinstance(st, ast.With):
+            inner = held
+            for item in st.items:
+                self.scan_expr(item.context_expr, inner)
+                lock = self.resolve_lock(item.context_expr)
+                if lock is not None:
+                    self.acquire(lock, inner, item.context_expr.lineno)
+                    inner = inner | {lock}
+            self.walk_body(st.body, inner)
+            return held
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # closure: runs later, not under the current held set
+            saved = self.exempt_guard
+            self.walk_body(st.body, frozenset())
+            self.exempt_guard = saved
+            return held
+        if isinstance(st, ast.ClassDef):
+            return held
+        # manual acquire()/release() on a known lock adjusts held state
+        # for the remainder of the current block
+        if (isinstance(st, ast.Expr) and isinstance(st.value, ast.Call)
+                and isinstance(st.value.func, ast.Attribute)
+                and st.value.func.attr in ("acquire", "release")):
+            lock = self.resolve_lock(st.value.func.value)
+            if lock is not None:
+                if st.value.func.attr == "acquire":
+                    self.acquire(lock, held, st.lineno)
+                    return held | {lock}
+                return held - {lock}
+        # guard checks on assignment-like statements
+        if isinstance(st, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = st.targets if isinstance(st, ast.Assign) \
+                else [st.target]
+            for tgt in targets:
+                self.check_mutation(tgt, held, st.lineno)
+        if isinstance(st, ast.Delete):
+            for tgt in st.targets:
+                self.check_mutation(tgt, held, st.lineno)
+        # recurse into nested statement bodies; scan everything else
+        for field, value in ast.iter_fields(st):
+            if isinstance(value, list) and value \
+                    and isinstance(value[0], ast.stmt):
+                self.walk_body(value, held)
+            elif isinstance(value, list):
+                for v in value:
+                    if isinstance(v, ast.AST):
+                        self.scan_expr(v, held)
+            elif isinstance(value, ast.AST):
+                self.scan_expr(value, held)
+        return held
+
+    def check_mutation(self, tgt, held: frozenset, line: int):
+        """Flag writes to guarded fields outside their lock."""
+        if self.exempt_guard or self.info is None:
+            return
+        node = tgt
+        while isinstance(node, (ast.Subscript, ast.Starred)):
+            node = node.value
+        attr = _self_attr(node)
+        if attr is None and isinstance(node, ast.Attribute):
+            # `self.stats.hits += 1` mutates the object behind
+            # `self.stats`
+            attr = _self_attr(node.value)
+        if attr is None or attr not in self.info.guarded:
+            return
+        lock = self.info.guarded[attr]
+        need = lock if lock.startswith("::") is False \
+            else self.an.module_locks.get(lock[2:], ("?",))[0]
+        need_id = self.info.node_id(lock) if not lock.startswith("::") \
+            else need
+        if need_id not in held:
+            self.an.add(Finding(
+                "guard", self.mod.path, line,
+                f"{self.info.name}.{attr}",
+                f"{self.info.name}.{attr} is guarded by "
+                f"{lock.lstrip(':')} but mutated without holding it "
+                f"(in {self.fn.name})"), self.mod)
+
+    def scan_expr(self, expr: ast.AST, held: frozenset):
+        """Find calls / mutating-method calls in an expression tree,
+        skipping Lambda bodies (deferred execution)."""
+        stack = [(expr, held)]
+        while stack:
+            node, h = stack.pop()
+            if isinstance(node, ast.Lambda):
+                stack.append((node.body, frozenset()))
+                continue
+            if isinstance(node, ast.Call):
+                self.visit_call(node, h)
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.stmt,)):
+                    continue
+                stack.append((child, h))
+
+    def visit_call(self, call: ast.Call, held: frozenset):
+        func = call.func
+        d = dotted_name(func)
+        line = call.lineno
+        # mutating container method on a guarded field
+        if isinstance(func, ast.Attribute) \
+                and func.attr in MUTATING_METHODS:
+            recv = _self_attr(func.value)
+            if (not self.exempt_guard and self.info is not None
+                    and recv in self.info.guarded):
+                lock = self.info.guarded[recv]
+                need_id = self.info.node_id(lock) \
+                    if not lock.startswith("::") \
+                    else self.an.module_locks.get(lock[2:], ("?",))[0]
+                if need_id not in held:
+                    self.an.add(Finding(
+                        "guard", self.mod.path, line,
+                        f"{self.info.name}.{recv}",
+                        f"{self.info.name}.{recv} is guarded by "
+                        f"{lock.lstrip(':')} but .{func.attr}() called "
+                        f"without holding it (in {self.fn.name})"),
+                        self.mod)
+        # blocking call while holding any lock
+        if held:
+            blocked = None
+            if d in BLOCKING_FUNCS:
+                blocked = d
+            elif isinstance(func, ast.Attribute) \
+                    and func.attr in BLOCKING_METHODS \
+                    and not isinstance(func.value, ast.Constant) \
+                    and not self._is_lock_attr(func.value):
+                blocked = f".{func.attr}()"
+            elif isinstance(func, ast.Attribute) \
+                    and func.attr in ("get", "put") \
+                    and self.info is not None:
+                recv = _self_attr(func.value)
+                if self.info.components.get(recv) in QUEUE_CTORS:
+                    blocked = f"queue.{func.attr}()"
+            if blocked is not None:
+                self.an.add(Finding(
+                    "block", self.mod.path, line,
+                    f"{self.method_key[0]}.{self.fn.name}",
+                    f"blocking call {blocked} while holding "
+                    f"{sorted(held)} (in {self.fn.name})"), self.mod)
+        # *_locked convention: callee expects a lock already held
+        recv_attr = _self_attr(func) if isinstance(func, ast.Attribute) \
+            else None
+        if (recv_attr is not None and recv_attr.endswith("_locked")
+                and self.info is not None
+                and recv_attr in self.info.methods):
+            need = self.an.entry_held_of(self.info, recv_attr)
+            if need and not need <= held:
+                self.an.add(Finding(
+                    "locked-call", self.mod.path, line,
+                    f"{self.info.name}.{recv_attr}",
+                    f"{recv_attr}() expects {sorted(need)} held but "
+                    f"caller {self.fn.name} holds {sorted(held)}"),
+                    self.mod)
+        # record resolvable calls for interprocedural acquisition edges
+        callee = self.resolve_callee(func)
+        if callee is not None:
+            self.calls.append((callee, held, line))
+
+    def resolve_callee(self, func) -> tuple | None:
+        if isinstance(func, ast.Name) and self.an.functions.get(
+                ("", func.id)) is not None:
+            return ("", func.id)
+        attr = _self_attr(func)
+        if attr is not None and self.info and attr in self.info.methods:
+            return (self.info.name, attr)
+        if isinstance(func, ast.Attribute):
+            recv = _self_attr(func.value)
+            if recv is not None and self.info:
+                comp = self.info.components.get(recv)
+                if comp is not None:
+                    cname = comp.rsplit(".", 1)[-1]
+                    if (cname, func.attr) in self.an.functions:
+                        return (cname, func.attr)
+        return None
+
+    def acquire(self, lock: str, held: frozenset, line: int):
+        self.direct_acquires.add(lock)
+        for h in held:
+            if h != lock:
+                self.an.edge(h, lock, self.mod.path, line)
+
+
+class _Analyzer:
+    def __init__(self, modules: list[Module]):
+        self.modules = modules
+        self.findings: list[Finding] = []
+        self.edges: dict = {}
+        self.classes, self.module_locks, pre = _collect_classes(modules)
+        self.findings.extend(pre)
+        # (ClassName|"", method) -> (info | None, Module, FunctionDef)
+        self.functions: dict = {}
+        for info in self.classes.values():
+            for mname, fn in info.methods.items():
+                self.functions[(info.name, mname)] = (info, info.module, fn)
+        for mod in modules:
+            for st in mod.tree.body:
+                if isinstance(st, ast.FunctionDef):
+                    self.functions.setdefault(("", st.name),
+                                              (None, mod, st))
+        self._entry_cache: dict = {}
+
+    def add(self, finding: Finding, mod: Module):
+        if not mod.allowed(finding.rule, finding.line):
+            self.findings.append(finding)
+
+    def edge(self, a: str, b: str, path: str, line: int):
+        self.edges.setdefault((a, b), (path, line))
+
+    def entry_held_of(self, info: ClassInfo, mname: str) -> frozenset:
+        key = (info.name, mname)
+        if key in self._entry_cache:
+            return self._entry_cache[key]
+        fn = info.methods[mname]
+        held = set()
+        names = info.module.holds.get(fn.lineno)
+        if names:
+            for n in names:
+                if n in info.locks:
+                    held.add(info.node_id(info.locks[n]))
+                elif n in self.module_locks:
+                    held.add(self.module_locks[n][0])
+                else:
+                    self.findings.append(Finding(
+                        "bad-guard-decl", info.module.path, fn.lineno,
+                        f"{info.name}.{mname}",
+                        f"holds: names unknown lock {n!r}"))
+        elif mname.endswith("_locked"):
+            canon = set(info.locks.values())
+            if len(canon) == 1:
+                held.add(info.node_id(next(iter(canon))))
+            elif canon:
+                self.findings.append(Finding(
+                    "locked-needs-holds", info.module.path, fn.lineno,
+                    f"{info.name}.{mname}",
+                    f"{mname} uses the *_locked convention but "
+                    f"{info.name} has several locks — add a "
+                    f"'# holds: <lock>' directive"))
+        result = frozenset(held)
+        self._entry_cache[key] = result
+        return result
+
+    def run(self) -> LockAnalysis:
+        walkers = {}
+        for key, (info, mod, fn) in self.functions.items():
+            entry = self.entry_held_of(info, key[1]) if info else frozenset()
+            exempt = (key[1] == "__init__"
+                      or (info is not None and key[1] in info.init_only))
+            w = _MethodWalker(self, info, mod, fn, entry, exempt, key)
+            w.run()
+            walkers[key] = w
+        # fixpoint: transitive may-acquire sets through resolvable calls
+        acq = {key: set(w.direct_acquires) for key, w in walkers.items()}
+        changed = True
+        while changed:
+            changed = False
+            for key, w in walkers.items():
+                for callee, _, _ in w.calls:
+                    extra = acq.get(callee, set()) - acq[key]
+                    if extra:
+                        acq[key].update(extra)
+                        changed = True
+        for key, w in walkers.items():
+            for callee, held, line in w.calls:
+                for lock in acq.get(callee, ()):
+                    for h in held:
+                        if h != lock:
+                            self.edge(h, lock, w.mod.path, line)
+        self._check_cycles()
+        sites = {}
+        for info in self.classes.values():
+            for canon, (path, line) in info.lock_sites.items():
+                sites[(norm_path(path), line)] = info.node_id(canon)
+        for name, (nid, path, line) in self.module_locks.items():
+            sites[(norm_path(path), line)] = nid
+        return LockAnalysis(self.findings, self.edges, sites)
+
+    def _check_cycles(self):
+        adj: dict[str, list[str]] = {}
+        for (a, b) in self.edges:
+            adj.setdefault(a, []).append(b)
+        WHITE, GRAY, BLACK = 0, 1, 2
+        color = {n: WHITE for n in
+                 set(adj) | {b for (_, b) in self.edges}}
+        reported = set()
+        for start in sorted(color):
+            if color[start] != WHITE:
+                continue
+            stack = [(start, iter(adj.get(start, ())))]
+            path = [start]
+            color[start] = GRAY
+            while stack:
+                node, it = stack[-1]
+                nxt = next(it, None)
+                if nxt is None:
+                    color[node] = BLACK
+                    stack.pop()
+                    path.pop()
+                    continue
+                if color[nxt] == GRAY:
+                    cyc = tuple(path[path.index(nxt):] + [nxt])
+                    if frozenset(cyc) not in reported:
+                        reported.add(frozenset(cyc))
+                        sites = []
+                        for a, b in zip(cyc, cyc[1:]):
+                            p, ln = self.edges[(a, b)]
+                            sites.append(f"{a}->{b} at {p}:{ln}")
+                        self.findings.append(Finding(
+                            "lock-order", sites and
+                            self.edges[(cyc[0], cyc[1])][0] or "?",
+                            self.edges[(cyc[0], cyc[1])][1],
+                            "->".join(cyc),
+                            "lock-order cycle: " + "; ".join(sites)))
+                elif color[nxt] == WHITE:
+                    color[nxt] = GRAY
+                    stack.append((nxt, iter(adj.get(nxt, ()))))
+                    path.append(nxt)
+
+
+def analyze(modules: list[Module]) -> LockAnalysis:
+    return _Analyzer(modules).run()

@@ -1,0 +1,320 @@
+"""Runtime concurrency checker: a mini-TSan for the test suite.
+
+``install()`` replaces ``threading.Lock``/``threading.RLock`` with
+wrappers that record, per thread, which locks are held and in what
+order locks nest (an edge ``A -> B`` means B was acquired while A was
+held).  ``time.sleep`` is wrapped to record blocking-under-lock.
+Locks are identified by their construction site (``file:line`` of the
+``threading.Lock()`` call), which is exactly the site the static pass
+(``repro.analysis.locks``) knows each lock attribute by — so observed
+orders can be cross-checked against the static graph:
+
+- a cycle among observed edges is always a violation (real deadlock
+  potential, whether or not the static pass could see it);
+- an observed edge that *reverses* a static edge between two known
+  locks is a violation even before a full cycle manifests.
+
+Enable via ``REPRO_ANALYSIS=1`` (the root ``conftest.py`` installs the
+checker before collection and fails the session on violations) — shard
+worker processes install it themselves when they see the env var.
+
+Locks created *before* ``install()`` are not traced (they are plain
+``_thread`` locks); install as early as possible.  The wrappers add a
+few hundred nanoseconds per acquire — fine for tests, not for
+production serving.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import threading
+import time
+import _thread
+
+_REAL_LOCK = threading.Lock
+_REAL_RLOCK = threading.RLock
+_REAL_SLEEP = time.sleep
+
+# internal graph lock: a raw _thread lock so it is never itself traced
+_graph_mu = _thread.allocate_lock()
+_edges: dict[tuple, tuple] = {}   # (siteA, siteB) -> (thread, file:line)
+_violations: list[str] = []
+_installed = False
+_tls = threading.local()
+
+_SELF = os.path.abspath(__file__)
+
+
+def _norm(path: str) -> str:
+    p = path.replace("\\", "/")
+    idx = p.rfind("/repro/")
+    if idx >= 0:
+        return p[idx + 1:]
+    return p.rsplit("/", 1)[-1]
+
+
+def _caller_site(skip_threading: bool = True) -> str:
+    f = sys._getframe(2)
+    while f is not None:
+        fn = f.f_code.co_filename
+        if fn != _SELF and not (skip_threading
+                                and fn == threading.__file__):
+            return f"{_norm(fn)}:{f.f_lineno}"
+        f = f.f_back
+    return "<unknown>"
+
+
+def _held() -> list:
+    lst = getattr(_tls, "held", None)
+    if lst is None:
+        lst = _tls.held = []
+    return lst
+
+
+def _note_acquire(lock: "_TracedLockBase") -> None:
+    held = _held()
+    if not any(h is lock for h in held):
+        sites = {h.site for h in held}
+        with _graph_mu:
+            for s in sites:
+                if s != lock.site and (s, lock.site) not in _edges:
+                    _edges[(s, lock.site)] = (
+                        threading.current_thread().name,
+                        _caller_site())
+    held.append(lock)
+
+
+def _note_release(lock: "_TracedLockBase") -> None:
+    held = _held()
+    for i in range(len(held) - 1, -1, -1):
+        if held[i] is lock:
+            del held[i]
+            return
+
+
+class _TracedLockBase:
+    __slots__ = ("_inner", "site")
+
+    def __init__(self, inner, site: str):
+        self._inner = inner
+        self.site = site
+
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        ok = self._inner.acquire(blocking, timeout)
+        if ok:
+            _note_acquire(self)
+        return ok
+
+    def release(self):
+        self._inner.release()
+        _note_release(self)
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def locked(self):
+        return self._inner.locked()
+
+    def __repr__(self):
+        return f"<traced {self._inner!r} @ {self.site}>"
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+class _TracedLock(_TracedLockBase):
+    __slots__ = ()
+
+
+class _TracedRLock(_TracedLockBase):
+    __slots__ = ()
+
+    # Condition-protocol passthroughs with held-set bookkeeping
+    def _is_owned(self):
+        return self._inner._is_owned()
+
+    def _release_save(self):
+        state = self._inner._release_save()
+        held = _held()
+        _tls.held = [h for h in held if h is not self]
+        return state
+
+    def _acquire_restore(self, state):
+        self._inner._acquire_restore(state)
+        _note_acquire(self)
+
+
+def _lock_factory():
+    return _TracedLock(_REAL_LOCK(), _caller_site())
+
+
+def _rlock_factory():
+    return _TracedRLock(_REAL_RLOCK(), _caller_site())
+
+
+class allow_block:
+    """Marks a region where blocking while holding a lock is deliberate —
+    the runtime mirror of the static ``# analysis: allow[block]``
+    directive, and like it, a justification is mandatory.  Only
+    sleep-under-lock recording is suppressed; acquisition-order edges are
+    still collected."""
+
+    __slots__ = ()
+
+    def __init__(self, reason: str):
+        if not reason or not reason.strip():
+            raise ValueError("allow_block requires a justification")
+
+    def __enter__(self):
+        _tls.allow_block = getattr(_tls, "allow_block", 0) + 1
+        return self
+
+    def __exit__(self, *exc):
+        _tls.allow_block -= 1
+        return False
+
+
+def _traced_sleep(secs):
+    held = _held()
+    if held and not getattr(_tls, "allow_block", 0):
+        sites = sorted(h.site for h in held)
+        msg = (f"time.sleep({secs!r}) while holding lock(s) {sites} "
+               f"at {_caller_site(skip_threading=False)}")
+        with _graph_mu:
+            if msg not in _violations:
+                _violations.append(msg)
+    return _REAL_SLEEP(secs)
+
+
+def install() -> bool:
+    """Idempotent; returns True if this call did the installation."""
+    global _installed
+    if _installed:
+        return False
+    _installed = True
+    threading.Lock = _lock_factory
+    threading.RLock = _rlock_factory
+    time.sleep = _traced_sleep
+    return True
+
+
+def uninstall() -> None:
+    global _installed
+    if not _installed:
+        return
+    _installed = False
+    threading.Lock = _REAL_LOCK
+    threading.RLock = _REAL_RLOCK
+    time.sleep = _REAL_SLEEP
+
+
+def installed() -> bool:
+    return _installed
+
+
+def reset() -> None:
+    with _graph_mu:
+        _edges.clear()
+        _violations.clear()
+
+
+class scoped:
+    """Context manager for self-tests: snapshots the edge graph and
+    violation list, restores them on exit, so an injected inversion does
+    not fail the surrounding REPRO_ANALYSIS=1 session."""
+
+    def __enter__(self):
+        with _graph_mu:
+            self._edges = dict(_edges)
+            self._violations = list(_violations)
+        return self
+
+    def __exit__(self, *exc):
+        with _graph_mu:
+            _edges.clear()
+            _edges.update(self._edges)
+            _violations.clear()
+            _violations.extend(self._violations)
+        return False
+
+
+def edges() -> dict:
+    with _graph_mu:
+        return dict(_edges)
+
+
+def _find_cycle(adj: dict) -> list | None:
+    color: dict[str, int] = {}
+    for start in sorted(adj):
+        if color.get(start):
+            continue
+        stack = [(start, iter(adj.get(start, ())))]
+        path = [start]
+        color[start] = 1
+        while stack:
+            node, it = stack[-1]
+            nxt = next(it, None)
+            if nxt is None:
+                color[node] = 2
+                stack.pop()
+                path.pop()
+                continue
+            if color.get(nxt) == 1:
+                return path[path.index(nxt):] + [nxt]
+            if not color.get(nxt):
+                color[nxt] = 1
+                stack.append((nxt, iter(adj.get(nxt, ()))))
+                path.append(nxt)
+    return None
+
+
+def check(static_sites: dict | None = None,
+          static_edges: set | None = None) -> list[str]:
+    """Current violations: recorded blocking-under-lock events, cycles
+    in the observed acquisition graph, and (when the static lock
+    analysis is provided) observed edges that reverse a static edge.
+
+    ``static_sites`` maps ``(norm_path, line) -> node_id`` and
+    ``static_edges`` is a set of ``(node_id, node_id)`` — both exactly
+    as produced by ``repro.analysis.locks.analyze``."""
+    with _graph_mu:
+        observed = dict(_edges)
+        out = list(_violations)
+    adj: dict[str, list[str]] = {}
+    for (a, b) in observed:
+        adj.setdefault(a, []).append(b)
+    cyc = _find_cycle(adj)
+    if cyc is not None:
+        detail = []
+        for a, b in zip(cyc, cyc[1:]):
+            thread, where = observed[(a, b)]
+            detail.append(f"{a} -> {b} (thread {thread} at {where})")
+        out.append("lock-order cycle observed: " + "; ".join(detail))
+    if static_sites and static_edges:
+        def to_node(site: str):
+            path, _, line = site.rpartition(":")
+            try:
+                return static_sites.get((path, int(line)))
+            except ValueError:
+                return None
+        for (a, b), (thread, where) in observed.items():
+            na, nb = to_node(a), to_node(b)
+            if na and nb and (nb, na) in static_edges \
+                    and (na, nb) not in static_edges:
+                out.append(
+                    f"observed acquisition {na} -> {nb} (thread {thread} "
+                    f"at {where}) reverses the static lock order "
+                    f"{nb} -> {na}")
+    return out
+
+
+def install_from_env() -> bool:
+    if os.environ.get("REPRO_ANALYSIS") == "1":
+        return install()
+    return False

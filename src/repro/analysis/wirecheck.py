@@ -1,0 +1,179 @@
+"""Wire completeness: everything crossing the cluster wire must have a
+faithful ``to_wire``/``from_wire`` pair covering every field.
+
+Two checks:
+
+``wire-pair``    a class defines ``to_wire`` without ``from_wire`` (or
+                 vice versa).
+``wire-field``   a field is missing from the wire handling — either a
+                 dataclass/``__slots__`` field not referenced in the
+                 class's own ``to_wire``/``from_wire`` bodies, or a
+                 field of a dataclass imported by ``cluster/wire.py``
+                 that never appears in that module (as an attribute
+                 access, keyword argument, or string key).
+
+Coverage is judged syntactically: a field counts as covered if its name
+appears as ``self.<field>`` / ``x.<field>``, a ``<field>=`` keyword, a
+``"<field>"`` string constant, or if the body calls
+``dataclasses.asdict`` / ``vars`` on self (which covers everything).
+Missing-field findings anchor to the class (or the wire-module import
+line) so an inline ``# analysis: allow[wire-field] reason`` can justify
+fields that are deliberately not shipped.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .core import Finding, Module, dotted_name
+
+WIRE_MODULE_SUFFIX = "cluster/wire.py"
+
+
+def class_fields(cls: ast.ClassDef) -> list[str]:
+    """Dataclass annotated fields or ``__slots__`` entries."""
+    fields: list[str] = []
+    for st in cls.body:
+        if isinstance(st, ast.AnnAssign) and isinstance(st.target, ast.Name):
+            if not st.target.id.startswith("_"):
+                fields.append(st.target.id)
+        elif (isinstance(st, ast.Assign) and len(st.targets) == 1
+              and isinstance(st.targets[0], ast.Name)
+              and st.targets[0].id == "__slots__"
+              and isinstance(st.value, (ast.Tuple, ast.List))):
+            for elt in st.value.elts:
+                if isinstance(elt, ast.Constant) and isinstance(
+                        elt.value, str) and not elt.value.startswith("_"):
+                    fields.append(elt.value)
+    return fields
+
+
+def _is_dataclass(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        d = dotted_name(dec.func if isinstance(dec, ast.Call) else dec)
+        if d in ("dataclass", "dataclasses.dataclass"):
+            return True
+    return False
+
+
+def _mentions(tree: ast.AST, cls_name: str | None = None,
+              n_fields: int = 0) -> tuple[set, bool]:
+    """-> (mentioned field-ish names, covers_all).
+
+    ``covers_all`` is set by ``dataclasses.asdict``/``vars`` (to_wire
+    side) or by a constructor call that provably supplies every field:
+    ``Cls(**d)`` or ``Cls(a, b, ..., z)`` with at least ``n_fields``
+    positional arguments (from_wire side)."""
+    names: set[str] = set()
+    covers_all = False
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute):
+            names.add(node.attr)
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            names.add(node.value)
+        elif isinstance(node, ast.keyword) and node.arg:
+            names.add(node.arg)
+        elif isinstance(node, ast.Name):
+            names.add(node.id)
+        elif isinstance(node, ast.Call):
+            d = dotted_name(node.func)
+            if d in ("dataclasses.asdict", "asdict", "vars"):
+                covers_all = True
+            last = (d or "").rsplit(".", 1)[-1]
+            if cls_name is not None and last in (cls_name, "cls"):
+                if any(kw.arg is None for kw in node.keywords):
+                    covers_all = True
+                elif n_fields and len(node.args) >= n_fields:
+                    covers_all = True
+    return names, covers_all
+
+
+def _ctor_covers(tree: ast.AST, cls_name: str, n_fields: int) -> bool:
+    """True if the module constructs ``cls_name`` in a way that covers
+    every field by construction (splat or full positional call)."""
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        last = (dotted_name(node.func) or "").rsplit(".", 1)[-1]
+        if last != cls_name:
+            continue
+        if any(kw.arg is None for kw in node.keywords):
+            return True
+        if n_fields and len(node.args) >= n_fields:
+            return True
+    return False
+
+
+def check(modules: list[Module]) -> list[Finding]:
+    findings: list[Finding] = []
+    # index every class def for the wire-module import check
+    class_index: dict[str, ast.ClassDef] = {}
+    for mod in modules:
+        for st in mod.tree.body:
+            if isinstance(st, ast.ClassDef):
+                class_index.setdefault(st.name, st)
+
+    def add(mod: Module, f: Finding):
+        if not mod.allowed(f.rule, f.line):
+            findings.append(f)
+
+    # method-style pairs on any class
+    for mod in modules:
+        for cls in mod.tree.body:
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            methods = {st.name: st for st in cls.body
+                       if isinstance(st, ast.FunctionDef)}
+            has_to, has_from = "to_wire" in methods, "from_wire" in methods
+            if not (has_to or has_from):
+                continue
+            if has_to != has_from:
+                missing = "from_wire" if has_to else "to_wire"
+                add(mod, Finding(
+                    "wire-pair", mod.path, cls.lineno, cls.name,
+                    f"{cls.name} defines "
+                    f"{'to_wire' if has_to else 'from_wire'} but no "
+                    f"{missing}"))
+                continue
+            fields = class_fields(cls)
+            for side in ("to_wire", "from_wire"):
+                mentioned, covers_all = _mentions(
+                    methods[side], cls.name, len(fields))
+                if covers_all:
+                    continue
+                for f in fields:
+                    if f not in mentioned:
+                        add(mod, Finding(
+                            "wire-field", mod.path, methods[side].lineno,
+                            f"{cls.name}.{f}",
+                            f"{cls.name}.{f} not covered by "
+                            f"{cls.name}.{side} — adding a field without "
+                            f"wire handling silently truncates it"))
+
+    # dataclasses imported by the wire module must be fully referenced
+    for mod in modules:
+        if not mod.path.replace("\\", "/").endswith(WIRE_MODULE_SUFFIX):
+            continue
+        mentioned, _ = _mentions(mod.tree)
+        for st in mod.tree.body:
+            if not isinstance(st, ast.ImportFrom):
+                continue
+            internal = st.level > 0 or (st.module or "").startswith("repro")
+            if not internal:
+                continue
+            for alias in st.names:
+                cls = class_index.get(alias.name)
+                if cls is None or not (_is_dataclass(cls)
+                                       or class_fields(cls)):
+                    continue
+                flds = class_fields(cls)
+                if _ctor_covers(mod.tree, cls.name, len(flds)):
+                    continue
+                for f in flds:
+                    if f not in mentioned:
+                        add(mod, Finding(
+                            "wire-field", mod.path, st.lineno,
+                            f"{alias.name}.{f}",
+                            f"{alias.name}.{f} is imported into the wire "
+                            f"module but never serialized there"))
+    return findings

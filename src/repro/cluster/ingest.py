@@ -24,6 +24,8 @@ per-format reclaimed bytes — like per-format transcode debt in
 
 from __future__ import annotations
 
+import threading
+
 from ..obs.metrics import Histogram
 from .router import ShardRouter
 
@@ -50,22 +52,39 @@ class ClusterIngest:
     def __init__(self, router: ShardRouter, budget_x: float | None = None,
                  *, max_skew: float = 8.0):
         self.router = router
-        self.budget_x = budget_x
         self.max_skew = max_skew
-        self.rebalances = 0
+        # rebalance() runs on whatever thread drives the coordinator
+        # while on_reattach callbacks read grants from the router's pool
+        # threads: grant state is one lock domain.  The grants list is
+        # replaced wholesale under _mu and never mutated in place.
+        self._mu = threading.Lock()
+        self.budget_x = budget_x  # guarded-by: _mu
+        self.rebalances = 0       # guarded-by: _mu
         # start every shard at the uniform grant (single-process semantics
         # until the first rebalance observes actual backlog)
-        self.grants: list[float | None] = [budget_x] * router.n_shards
-        self._apply_grants()
+        self.grants = [budget_x] * router.n_shards  # guarded-by: _mu
+        self._apply_grants(self.grants_snapshot())
         for host in router.hosts:
             # a respawned worker reverts to its spawn-time budget; push
             # the coordinator's current grant back as soon as it reattaches
             host.on_reattach.append(
                 lambda h: h.call("set_budget",
-                                 budget_x=self.grants[h.idx]))
+                                 budget_x=self.grant_for(h.idx)))
 
-    def _apply_grants(self):
-        for host, x in zip(self.router.hosts, self.grants):
+    def grants_snapshot(self) -> list[float | None]:
+        """Consistent copy of the per-shard grants."""
+        with self._mu:
+            return list(self.grants)
+
+    def grant_for(self, idx: int) -> float | None:
+        with self._mu:
+            return self.grants[idx]
+
+    def _apply_grants(self, grants: list[float | None]):
+        # RPCs happen outside _mu: a slow or respawning worker must not
+        # stall grant reads (and the reattach callback path re-enters
+        # grant_for, which would self-deadlock under a held _mu)
+        for host, x in zip(self.router.hosts, grants):
             host.call_retry("set_budget", budget_x=x)
 
     # -- data path -------------------------------------------------------------
@@ -85,7 +104,8 @@ class ClusterIngest:
     # -- budget splitting ------------------------------------------------------
     def set_budget_x(self, budget_x: float | None) -> None:
         """Change the global rate; re-splits immediately."""
-        self.budget_x = budget_x
+        with self._mu:
+            self.budget_x = budget_x
         self.rebalance()
 
     def rebalance(self) -> list[float | None]:
@@ -96,27 +116,32 @@ class ClusterIngest:
         no arrivals yet get the uniform rate.  Conserves the cluster-wide
         encode-second rate (up to the ``max_skew`` clamp) while directing
         slack at the shards that are actually behind."""
-        if self.budget_x is None:  # unbounded: nothing to split
-            self.grants = [None] * self.router.n_shards
-            self._apply_grants()
-            return self.grants
+        with self._mu:
+            budget_x = self.budget_x
+        if budget_x is None:  # unbounded: nothing to split
+            grants: list[float | None] = [None] * self.router.n_shards
+            with self._mu:
+                self.grants = grants
+            self._apply_grants(grants)
+            return grants
         stats = self.router.broadcast("stats")
         ingests = [s.get("ingest") or {} for s in stats]
         arrivals = [float(ing.get("video_seconds", 0.0)) for ing in ingests]
         debts = [float(ing.get("debt_s", 0.0)) for ing in ingests]
         total_r = sum(arrivals)
         total_debt = sum(debts)
-        grants: list[float | None] = []
+        grants = []
         for r_i, d_i in zip(arrivals, debts):
             if total_r <= 0 or r_i <= 0 or total_debt <= 0:
-                grants.append(self.budget_x)
+                grants.append(budget_x)
                 continue
             w_i = d_i / total_debt
-            x_i = self.budget_x * total_r * w_i / r_i
-            grants.append(min(x_i, self.max_skew * self.budget_x))
-        self.grants = grants
-        self.rebalances += 1
-        self._apply_grants()
+            x_i = budget_x * total_r * w_i / r_i
+            grants.append(min(x_i, self.max_skew * budget_x))
+        with self._mu:
+            self.grants = grants
+            self.rebalances += 1
+        self._apply_grants(grants)
         return grants
 
     def requeue_shed(self) -> int:
@@ -162,9 +187,10 @@ class ClusterIngest:
             snaps = [ing[key] for ing in ingests if ing.get(key)]
             if snaps:
                 out[key] = Histogram.merge(snaps)
-        out["grants"] = list(self.grants)
-        out["budget_x"] = self.budget_x
-        out["rebalances"] = self.rebalances
+        with self._mu:
+            out["grants"] = list(self.grants)
+            out["budget_x"] = self.budget_x
+            out["rebalances"] = self.rebalances
         out["erosion"] = {
             "eroded_segments": sum(e.get("eroded_segments", 0)
                                    for e in erosions),

@@ -34,6 +34,7 @@ import time
 import zlib
 from concurrent.futures import ThreadPoolExecutor
 
+from ..analysis.runtime import allow_block as _allow_block
 from ..analytics.query import QueryResult
 from ..obs import drift as obs_drift
 from ..obs import trace as obs
@@ -123,7 +124,7 @@ class ShardHost:
         self.on_reattach: list = []
         self.process = None
         self.sock_path = ""
-        self._idle: list[socket.socket] = []
+        self._idle: list[socket.socket] = []  # guarded-by: _mu
         self._mu = threading.Lock()
         self._restart_mu = threading.Lock()
 
@@ -260,10 +261,18 @@ class ShardHost:
         identity recorded at first hello — the router must never hand a
         replacement worker a directory that isn't the shard it lost.  The
         replacement runs generation+1; its hello must echo both."""
-        with self._restart_mu:
+        with self._restart_mu, _allow_block(
+                "reattach is deliberately serialized: the probe and "
+                "respawn RPCs (with their connect-retry sleeps) run "
+                "under _restart_mu so concurrent callers can't "
+                "double-spawn; _restart_mu is never on the query path"):
             # a concurrent caller may have already restarted it
             if self.process is not None and self.process.is_alive():
                 try:
+                    # analysis: allow[block] reattach is deliberately
+                    # serialized: the liveness-probe RPC must happen under
+                    # _restart_mu so concurrent callers can't double-spawn;
+                    # _restart_mu is never taken on the query path
                     self.call("hello")
                     return
                 except ConnectionError:

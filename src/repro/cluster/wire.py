@@ -32,6 +32,10 @@ import msgpack
 import numpy as np
 
 from ..core.coalesce import SFNode
+# analysis: allow[wire-field] DerivedConfig.erosion is deliberately not
+# in the config frame: the erosion plan ships separately (opts
+# ["erosion_plan"], erosion_plan_to_wire) so workers can rebuild their
+# ErosionExecutor without re-deriving the whole config
 from ..core.configure import DerivedConfig
 from ..core.consumption import Consumer, ConsumerPlan
 from ..core.erosion import ErosionPlan

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import os
 import socket
+import sys
 import threading
 import time
 import traceback
@@ -251,6 +252,13 @@ class _ShardStack:
 def shard_worker_main(shard_dir: str, sock_path: str, generation: int,
                       cfg_wire: dict, spec_wire: dict, opts: dict) -> None:
     """Process entry point (importable top-level, as ``spawn`` requires)."""
+    if os.environ.get("REPRO_ANALYSIS") == "1":
+        # trace lock acquisition orders inside the worker too; the
+        # store/scheduler/erosion locks below are created after this
+        from ..analysis import runtime as _analysis_runtime
+        _analysis_runtime.install()
+    else:
+        _analysis_runtime = None
     apply_runtime_isolation(opts)
     pin = opts.get("pin_core")
     if pin is not None and hasattr(os, "sched_setaffinity"):
@@ -331,3 +339,9 @@ def shard_worker_main(shard_dir: str, sock_path: str, generation: int,
         except OSError:
             pass
         stack.close()
+        if _analysis_runtime is not None:
+            # worker-side lock orders can't cross the process exit, so
+            # validate them here; stderr reaches the harness/CI log
+            for v in _analysis_runtime.check():
+                print(f"REPRO_ANALYSIS[worker {shard_dir}]: {v}",
+                      file=sys.stderr)

@@ -475,6 +475,10 @@ def decode_segment_scan(blob: bytes,
     sym_all, _ = _chunk_symbols(header, payload, chunks, len(chunks))
     for row, c in enumerate(chunks):
         kc = min(k, n - int(c) * k)
+        # analysis: allow[jit-shape] per-chunk reference oracle, not a
+        # serving path: decode_segment_scan exists to cross-check the
+        # batched decoder bit-for-bit, and the tail chunk's kc<k shape
+        # is the exact semantics it must replicate
         frames = np.asarray(_decode_chunk(jnp.asarray(sym_all[row, :kc]), qs))
         sel = np.nonzero(chunk_of == c)[0]
         out[sel] = np.clip(np.round(frames[want[sel] - int(c) * k]),

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import threading
 
 from ..core.erosion import ErosionPlan
 from ..obs.trace import span as _span
@@ -51,42 +52,62 @@ class ErosionExecutor:
         self.golden_id = golden_id
         self.seed = seed
         self.compact = compact
-        self.day = 0
+        # note_ingested arrives on ingest threads (IngestScheduler's
+        # on_ingest callbacks) concurrently with advance()/apply() on
+        # whoever drives the day clock (worker op loop, tests): the whole
+        # age ledger is one lock domain
+        self._mu = threading.Lock()
+        self.day = 0  # guarded-by: _mu
         # (stream, ingest_day) -> [segs]; ages derive from the day clock
-        self._cohorts: dict[tuple[str, int], list[int]] = {}
+        self._cohorts: dict[tuple[str, int], list[int]] = {}  # guarded-by: _mu
         # (stream, ingest_day, sf_id) -> segments already eroded
-        self._eroded: dict[tuple[str, int, str], int] = {}
-        self.total = ErosionReport(day=0)
+        self._eroded: dict[tuple[str, int, str], int] = {}  # guarded-by: _mu
+        self.total = ErosionReport(day=0)  # guarded-by: _mu
 
     # -- age ledger -----------------------------------------------------------
     def note_ingested(self, stream: str, seg: int):
         """Place a segment in today's cohort (wire to
         ``IngestScheduler.on_ingest``, or call directly)."""
-        self._cohorts.setdefault((stream, self.day), []).append(seg)
+        with self._mu:
+            self._cohorts.setdefault((stream, self.day), []).append(seg)
 
     def register_existing(self, streams: list[str], day: int | None = None):
         """Adopt already-stored golden segments into a cohort (e.g. a store
         ingested before the executor attached)."""
-        d = self.day if day is None else day
         for stream in streams:
             segs = self.store.available_segments(stream, self.golden_id)
             if segs:
-                self._cohorts.setdefault((stream, d), []).extend(segs)
+                with self._mu:
+                    d = self.day if day is None else day
+                    self._cohorts.setdefault((stream, d), []).extend(segs)
 
     # -- execution ------------------------------------------------------------
     def advance(self, days: int = 1) -> ErosionReport:
         """Move the day clock and erode every cohort to its age target."""
-        self.day += days
-        with _span("erosion.advance", day=self.day) as sp:
+        with self._mu:
+            self.day += days
+            day = self.day
+        with _span("erosion.advance", day=day) as sp:
             rep = self.apply()
             sp.set(segments=rep.segments, bytes=rep.bytes)
             return rep
 
     def apply(self) -> ErosionReport:
-        rep = ErosionReport(day=self.day)
+        # snapshot the ledger under the lock, erode outside it: the
+        # store calls (erode/compact) are far too slow to hold _mu
+        # across, and note_ingested must stay wait-free for the ingest
+        # hot path.  Segments ingested after the snapshot simply join
+        # the next apply() — same semantics as arriving a moment later.
+        with self._mu:
+            day = self.day
+            cohorts = sorted((key, list(segs))
+                             for key, segs in self._cohorts.items())
+            eroded = dict(self._eroded)
+        rep = ErosionReport(day=day)
+        erode_deltas: dict[tuple[str, int, str], int] = {}
         before_compactions = self.store.backend.compactions
-        for (stream, born), segs in sorted(self._cohorts.items()):
-            age = self.day - born
+        for (stream, born), segs in cohorts:
+            age = day - born
             if age < 1 or not segs:
                 continue
             # the plan's fractions are cumulative per planned age; apply
@@ -101,14 +122,15 @@ class ErosionExecutor:
                     continue
                 target = int(round(frac.get(idx, 0.0) * len(segs)))
                 done_key = (stream, born, sf_id)
-                done = self._eroded.get(done_key, 0)
+                done = eroded.get(done_key, 0)
                 delta = target - done
                 if delta <= 0:
                     continue
                 res = self.store.erode(
                     stream, sf_id, segments=segs, count=delta,
-                    seed=self.seed + self.day + idx)
-                self._eroded[done_key] = done + res.segments
+                    seed=self.seed + day + idx)
+                erode_deltas[done_key] = \
+                    erode_deltas.get(done_key, 0) + res.segments
                 rep.segments += res.segments
                 rep.bytes += res.bytes
                 rep.chunks += res.chunks
@@ -124,18 +146,22 @@ class ErosionExecutor:
             self.store.backend.compact()
         rep.compactions = self.store.backend.compactions - before_compactions
         rep.dead_bytes_after = self.store.backend.dead_bytes
-        self.total.segments += rep.segments
-        self.total.bytes += rep.bytes
-        self.total.chunks += rep.chunks
-        self.total.chunk_bytes += rep.chunk_bytes
+        with self._mu:
+            for done_key, n in erode_deltas.items():
+                self._eroded[done_key] = self._eroded.get(done_key, 0) + n
+            self.total.segments += rep.segments
+            self.total.bytes += rep.bytes
+            self.total.chunks += rep.chunks
+            self.total.chunk_bytes += rep.chunk_bytes
         return rep
 
     def stats(self) -> dict:
-        return {
-            "day": self.day,
-            "cohorts": len(self._cohorts),
-            "eroded_segments": self.total.segments,
-            "eroded_bytes": self.total.bytes,
-            "eroded_chunks": self.total.chunks,
-            "eroded_chunk_bytes": self.total.chunk_bytes,
-        }
+        with self._mu:
+            return {
+                "day": self.day,
+                "cohorts": len(self._cohorts),
+                "eroded_segments": self.total.segments,
+                "eroded_bytes": self.total.bytes,
+                "eroded_chunks": self.total.chunks,
+                "eroded_chunk_bytes": self.total.chunk_bytes,
+            }

@@ -100,13 +100,13 @@ class FallbackChain:
         self.spec = spec
         self.golden_id, self.parents = build_parents(formats, golden_id)
         self.memo_blobs = memo_blobs
-        self._memo: OrderedDict[tuple, bytes] = OrderedDict()
+        self._memo: OrderedDict[tuple, bytes] = OrderedDict()  # guarded-by: _lock
         self._lock = threading.Lock()
-        self._inflight: dict[tuple, threading.Event] = {}
+        self._inflight: dict[tuple, threading.Event] = {}  # guarded-by: _lock
         self._write_back = None        # materialize-on-read hook
-        self.reconstructions = 0       # transcodes actually executed
-        self.fallback_reads = 0        # _blob misses served via the chain
-        self.per_format: dict[str, int] = {}
+        self.reconstructions = 0       # guarded-by: _lock (transcodes run)
+        self.fallback_reads = 0        # guarded-by: _lock (chain reads)
+        self.per_format: dict[str, int] = {}  # guarded-by: _lock
 
     def enable_write_back(self, charge) -> None:
         """Materialize-on-read: after a reconstruction, call

@@ -146,23 +146,23 @@ class IngestScheduler:
         self._rank = self._build_rank(config, profiler)
         self._mu = threading.Lock()
         self._work = threading.Condition(self._mu)
-        self._queue: list[TranscodeTask] = []   # kept sorted; [0] = next
-        self._shed: list[TranscodeTask] = []
-        self._est_s: dict[str, float] = {}      # sf_id -> EMA encode seconds
-        self._credit = 0.0
-        self._video_s_arrived = 0.0   # stream seconds admitted so far
-        self._spent_s = 0.0           # encode seconds spent (golden + bg)
-        self._streams: dict[str, _StreamState] = {}
+        self._queue: list[TranscodeTask] = []  # guarded-by: _mu ([0]=next)
+        self._shed: list[TranscodeTask] = []   # guarded-by: _mu
+        self._est_s: dict[str, float] = {}     # guarded-by: _mu (EMA enc s)
+        self._credit = 0.0                     # guarded-by: _mu
+        self._video_s_arrived = 0.0   # guarded-by: _mu (stream s admitted)
+        self._spent_s = 0.0           # guarded-by: _mu (encode s spent)
+        self._streams: dict[str, _StreamState] = {}  # guarded-by: _mu
         self._stop = threading.Event()
         self._worker: threading.Thread | None = None
-        self.transcodes = 0
-        self.transcode_s = 0.0
-        self.shed_total = 0
-        self.task_errors = 0
-        self.last_task_error: str | None = None
-        self.write_backs = 0         # materialize-on-read blobs persisted
-        self.write_back_s = 0.0      # ... and their budget charge
-        self.write_backs_skipped = 0  # skipped: bucket had no credit
+        self.transcodes = 0           # guarded-by: _mu
+        self.transcode_s = 0.0        # guarded-by: _mu
+        self.shed_total = 0           # guarded-by: _mu
+        self.task_errors = 0          # guarded-by: _mu
+        self.last_task_error: str | None = None  # guarded-by: _mu
+        self.write_backs = 0          # guarded-by: _mu (blobs persisted)
+        self.write_back_s = 0.0       # guarded-by: _mu (budget charge)
+        self.write_backs_skipped = 0  # guarded-by: _mu (no credit)
         self._h_golden = Histogram()     # per-segment golden encode seconds
         self._h_transcode = Histogram()  # per-task background encode seconds
         self._on_ingest: list = []   # callbacks(stream, seg) after golden
@@ -537,7 +537,7 @@ class IngestScheduler:
                 per_format[t.sf_id]["shed"] += 1
             total_video = sum(st.video_seconds
                               for st in self._streams.values())
-            return {
+            out = {
                 "streams": streams,
                 "formats": per_format,
                 "debt_s": self._debt_locked(),
@@ -554,7 +554,11 @@ class IngestScheduler:
                 "write_back_s": self.write_back_s,
                 "write_backs_skipped": self.write_backs_skipped,
                 "video_seconds": total_video,
-                "golden_hist": self._h_golden.snapshot(),
-                "transcode_hist": self._h_transcode.snapshot(),
-                "fallback": self.fallback.stats(),
             }
+        # the histogram and fallback sub-snapshots take their owners'
+        # locks — never acquire those while holding _mu (lock-order
+        # discipline: component locks are leaves, see repro.analysis)
+        out["golden_hist"] = self._h_golden.snapshot()
+        out["transcode_hist"] = self._h_transcode.snapshot()
+        out["fallback"] = self.fallback.stats()
+        return out

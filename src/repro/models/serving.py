@@ -20,7 +20,6 @@ import jax
 import jax.numpy as jnp
 
 from . import attention as A
-from . import moe as M
 from . import recurrent as R
 from .config import ArchConfig
 from .layers import mlp, rms_norm, softcap
@@ -197,8 +196,6 @@ def prefill(params, cfg: ArchConfig, batch: dict, max_len: int,
             cache_dtype=jnp.bfloat16, moe_dispatch: str = "scatter"):
     """Run the full-sequence forward while building a decode cache.
     batch: tokens (B, S).  Returns (logits (B, S, vocab), cache)."""
-    from .transformer import forward  # logits via the standard path
-
     if cfg.frontend == "tokens":
         b, s = batch["tokens"].shape
     else:

@@ -18,7 +18,6 @@ a scanned boolean so one scan body covers both.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Any
 

@@ -54,8 +54,8 @@ class DriftDetector:
             (sf_id, cf_name): float(x)
             for (sf_id, cf_name), x in (retrieval_speeds or {}).items()}
         self._mu = threading.Lock()
-        self._consume: dict[tuple, tuple[float, int]] = {}   # key -> (ema, n)
-        self._retrieve: dict[tuple, tuple[float, int]] = {}
+        self._consume: dict[tuple, tuple[float, int]] = {}   # guarded-by: _mu
+        self._retrieve: dict[tuple, tuple[float, int]] = {}  # guarded-by: _mu
 
     def observe(self, accuracy: float, result) -> None:
         """Fold one completed query's per-stage speeds in."""

@@ -73,11 +73,11 @@ class Histogram:
 
     def __init__(self, bounds=None):
         self.bounds = tuple(bounds if bounds is not None else DEFAULT_BOUNDS)
-        self._counts = [0] * (len(self.bounds) + 1)
-        self._count = 0
-        self._sum = 0.0
-        self._min = math.inf
-        self._max = -math.inf
+        self._counts = [0] * (len(self.bounds) + 1)  # guarded-by: _mu
+        self._count = 0        # guarded-by: _mu
+        self._sum = 0.0        # guarded-by: _mu
+        self._min = math.inf   # guarded-by: _mu
+        self._max = -math.inf  # guarded-by: _mu
         self._mu = threading.Lock()
 
     def observe(self, value: float) -> None:
@@ -97,9 +97,12 @@ class Histogram:
         return self._count
 
     def percentile(self, q: float) -> float:
-        return self.snapshot()[f"p{int(q * 100)}"] if q in (0.5, 0.95, 0.99) \
-            else _percentiles(self.bounds, self._counts, self._count,
-                              self._min, self._max, (q,))[q]
+        if q in (0.5, 0.95, 0.99):
+            return self.snapshot()[f"p{int(q * 100)}"]
+        with self._mu:
+            counts, count = list(self._counts), self._count
+            lo, hi = self._min, self._max
+        return _percentiles(self.bounds, counts, count, lo, hi, (q,))[q]
 
     def snapshot(self) -> dict:
         with self._mu:
@@ -143,9 +146,9 @@ class MetricsRegistry:
 
     def __init__(self):
         self._mu = threading.Lock()
-        self._counters: dict[str, float] = {}
-        self._gauges: dict[str, float] = {}
-        self._hists: dict[str, Histogram] = {}
+        self._counters: dict[str, float] = {}   # guarded-by: _mu
+        self._gauges: dict[str, float] = {}     # guarded-by: _mu
+        self._hists: dict[str, Histogram] = {}  # guarded-by: _mu
 
     # -- counters / gauges ---------------------------------------------------
     def inc(self, name: str, n: float = 1) -> None:

@@ -172,7 +172,7 @@ class Tracer:
         self.capacity = int(capacity)
         self.pid = os.getpid() if pid is None else pid
         self._mu = threading.Lock()
-        self._spans: deque[Span] = deque(maxlen=self.capacity)
+        self._spans: deque[Span] = deque(maxlen=self.capacity)  # guarded-by: _mu
         self._tls = threading.local()
         # ids unique across processes without coordination: a random
         # 32-bit per-process salt above a monotone counter

@@ -103,10 +103,10 @@ class DecodedSegmentCache:
         self.max_bytes = int(max_bytes)
         self.recovery_rank = dict(recovery_rank) if recovery_rank else None
         self._lock = threading.Lock()
-        self._entries: OrderedDict[Key, CacheEntry] = OrderedDict()
-        self._by_segment: dict[tuple, list[Key]] = {}
-        self._bytes = 0
-        self.stats = CacheStats()
+        self._entries: OrderedDict[Key, CacheEntry] = OrderedDict()  # guarded-by: _lock
+        self._by_segment: dict[tuple, list[Key]] = {}  # guarded-by: _lock
+        self._bytes = 0  # guarded-by: _lock
+        self.stats = CacheStats()  # guarded-by: _lock
 
     @property
     def bytes(self) -> int:
@@ -170,14 +170,14 @@ class DecodedSegmentCache:
                 return False
             old = self._entries.pop(key, None)
             if old is not None:
-                self._drop_index(old)
+                self._drop_index_locked(old)
                 self._bytes -= old.nbytes
             self._entries[key] = entry
             self._by_segment.setdefault((stream, seg, sf_id), []).append(key)
             self._bytes += entry.nbytes
             while self._bytes > self.max_bytes:
                 victim = self._evict_one_locked()
-                self._drop_index(victim)
+                self._drop_index_locked(victim)
                 self._bytes -= victim.nbytes
                 if victim is entry:  # the newcomer lost to the residents
                     self.stats.admission_rejects += 1
@@ -197,7 +197,7 @@ class DecodedSegmentCache:
                    key=lambda k: self.recovery_rank.get(k[2], float("inf")))
         return self._entries.pop(vkey)
 
-    def _drop_index(self, entry: CacheEntry):
+    def _drop_index_locked(self, entry: CacheEntry):
         skey = (entry.stream, entry.seg, entry.sf_id)
         keys = self._by_segment.get(skey, [])
         keys.remove((entry.stream, entry.seg, entry.sf_id, entry.cf))

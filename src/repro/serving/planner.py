@@ -73,13 +73,14 @@ class RetrievalPlanner:
         self.store = store
         self.cache = cache
         self._lock = threading.Lock()
-        self._interest: dict[tuple, Counter] = {}
-        self._inflight: dict[tuple, _InFlight] = {}
-        self.decodes = 0          # actual store decodes issued
-        self.coalesced_cfs = 0    # extra CFs folded into union decodes
-        self.inflight_hits = 0    # follower fetches served from a leader
-        self.decode_bytes = 0     # blob bytes the misses actually touched
-        self.decode_chunks = 0    # chunks the misses actually reconstructed
+        self._interest: dict[tuple, Counter] = {}    # guarded-by: _lock
+        self._inflight: dict[tuple, _InFlight] = {}  # guarded-by: _lock
+        # counters: guarded by _lock; each comment names the meaning
+        self.decodes = 0          # guarded-by: _lock (store decodes issued)
+        self.coalesced_cfs = 0    # guarded-by: _lock (CFs folded into unions)
+        self.inflight_hits = 0    # guarded-by: _lock (served from a leader)
+        self.decode_bytes = 0     # guarded-by: _lock (blob bytes touched)
+        self.decode_chunks = 0    # guarded-by: _lock (chunks reconstructed)
 
     # -- query lifecycle -----------------------------------------------------
     def register_query(self, requests: list[Request]):

@@ -127,10 +127,10 @@ class VStoreServer:
                                         thread_name_prefix="vstore-query")
         self._mu = threading.Lock()
         self._slot_freed = threading.Condition(self._mu)
-        self._inflight = 0
-        self._next_qid = 0
+        self._inflight = 0   # guarded-by: _mu
+        self._next_qid = 0   # guarded-by: _mu
         self._collapse = collapse
-        self._live: dict[tuple, Future] = {}  # in-flight query key -> future
+        self._live: dict[tuple, Future] = {}  # guarded-by: _mu
         self._attached = attach
         self._ingest = None      # live-ingest scheduler (attach_ingest)
         self._erosion = None     # erosion executor (attach_ingest)

@@ -40,14 +40,14 @@ class SegmentStore:
         self.auto_compact_frac = None if readonly else auto_compact_frac
         self.auto_compact_min_bytes = auto_compact_min_bytes
         self._lock = threading.Lock()
-        self._index: dict[str, tuple[int, int, int]] = {}
-        self._shard_id = 0
-        self._shard_size = 0
-        self._live_bytes = 0  # sum of indexed value lengths (incremental)
-        self._dead_bytes = 0  # shard bytes no index entry references
-        self._gen = 0  # bumped by compact(); lets readers detect shard rewrites
-        self.compactions = 0  # total (manual + automatic)
-        self.auto_compactions = 0
+        self._index: dict[str, tuple[int, int, int]] = {}  # guarded-by: _lock
+        self._shard_id = 0    # guarded-by: _lock
+        self._shard_size = 0  # guarded-by: _lock
+        self._live_bytes = 0  # guarded-by: _lock (sum of indexed lengths)
+        self._dead_bytes = 0  # guarded-by: _lock (unreferenced shard bytes)
+        self._gen = 0  # guarded-by: _lock (compact() bump; detects rewrites)
+        self.compactions = 0  # guarded-by: _lock (manual + automatic)
+        self.auto_compactions = 0  # guarded-by: _lock
         self._load()
 
     # -- persistence --------------------------------------------------------

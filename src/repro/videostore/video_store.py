@@ -138,7 +138,7 @@ class VideoStore:
                                     readonly=readonly)
         self.formats: dict[str, StorageFormat] = {}
         self.store_id: str | None = None
-        self.ingest_stats: dict[str, IngestStats] = {}
+        self.ingest_stats: dict[str, IngestStats] = {}  # guarded-by: _stats_mu
         self._meta_path = os.path.join(root, "meta.json")
         self._retriever = None  # serving-layer hook (see attach_retriever)
         self._fallback = None   # ingest-layer hook (see set_fallback)
@@ -147,6 +147,9 @@ class VideoStore:
         self._stats_mu = threading.Lock()
         self._load_meta()
         if self.store_id is None and not readonly:
+            # analysis: allow[determinism] store identity is minted once
+            # at creation and persisted in meta.json; it must be unique
+            # across stores (shard-identity checks), not reproducible
             self.store_id = os.urandom(8).hex()
             self._save_meta()
 

@@ -1,0 +1,10 @@
+"""Seeded violation: hash() in a placement path.
+
+Expected finding: exactly one ``determinism`` on ``place``.
+"""
+
+# analysis: determinism-path
+
+
+def place(key: str, n_shards: int) -> int:
+    return hash(key) % n_shards

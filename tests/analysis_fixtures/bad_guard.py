@@ -1,0 +1,15 @@
+"""Seeded violation: mutates a guarded field without holding its lock.
+
+Expected finding: exactly one ``guard`` on ``Counter.bump``.
+"""
+
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.n = 0  # guarded-by: _lock
+
+    def bump(self):
+        self.n += 1

@@ -1,0 +1,16 @@
+"""Seeded violation: a data-dependent slice fed straight to a jitted
+function — every distinct bound retraces.
+
+Expected finding: exactly one ``jit-shape`` in ``consume``.
+"""
+
+import jax
+
+
+@jax.jit
+def kernel(x):
+    return x * 2
+
+
+def consume(x, k):
+    return kernel(x[:k])

@@ -1,0 +1,22 @@
+"""Seeded violation: two code paths nest the same locks in opposite
+orders — the classic ABBA deadlock shape.
+
+Expected finding: exactly one ``lock-order`` cycle.
+"""
+
+import threading
+
+MU_A = threading.Lock()
+MU_B = threading.Lock()
+
+
+def forward():
+    with MU_A:
+        with MU_B:
+            pass
+
+
+def backward():
+    with MU_B:
+        with MU_A:
+            pass

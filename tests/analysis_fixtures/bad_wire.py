@@ -1,0 +1,21 @@
+"""Seeded violation: ``to_wire`` silently drops a dataclass field.
+
+Expected finding: exactly one ``wire-field`` on ``Packet.checksum``.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass
+class Packet:
+    seq: int
+    payload: bytes
+    checksum: int
+
+    def to_wire(self) -> dict:
+        return {"seq": self.seq, "payload": self.payload}
+
+    @classmethod
+    def from_wire(cls, d: dict) -> "Packet":
+        return cls(seq=d["seq"], payload=d["payload"],
+                   checksum=d["checksum"])

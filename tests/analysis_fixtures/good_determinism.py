@@ -1,0 +1,9 @@
+"""Clean twin of ``bad_determinism.py``: crc32 is process-stable."""
+
+# analysis: determinism-path
+
+import zlib
+
+
+def place(key: str, n_shards: int) -> int:
+    return zlib.crc32(key.encode()) % n_shards

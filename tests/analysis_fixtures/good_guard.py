@@ -1,0 +1,13 @@
+"""Clean twin of ``bad_guard.py``: the mutation holds the lock."""
+
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.n = 0  # guarded-by: _lock
+
+    def bump(self):
+        with self._lock:
+            self.n += 1

@@ -1,0 +1,17 @@
+"""Clean twin of ``bad_jitshape.py``: the slice goes through a pad
+helper, so the jitted call sees a static shape."""
+
+import jax
+
+
+@jax.jit
+def kernel(x):
+    return x * 2
+
+
+def _pad_to(x, n):
+    return x  # stand-in for the real pad-then-slice helper
+
+
+def consume(x, k):
+    return kernel(_pad_to(x[:k], 16))

@@ -1,0 +1,18 @@
+"""Clean twin of ``bad_lock_order.py``: both paths agree on A -> B."""
+
+import threading
+
+MU_A = threading.Lock()
+MU_B = threading.Lock()
+
+
+def forward():
+    with MU_A:
+        with MU_B:
+            pass
+
+
+def also_forward():
+    with MU_A:
+        with MU_B:
+            pass

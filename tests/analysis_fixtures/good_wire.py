@@ -1,0 +1,19 @@
+"""Clean twin of ``bad_wire.py``: every field crosses the wire."""
+
+from dataclasses import dataclass
+
+
+@dataclass
+class Packet:
+    seq: int
+    payload: bytes
+    checksum: int
+
+    def to_wire(self) -> dict:
+        return {"seq": self.seq, "payload": self.payload,
+                "checksum": self.checksum}
+
+    @classmethod
+    def from_wire(cls, d: dict) -> "Packet":
+        return cls(seq=d["seq"], payload=d["payload"],
+                   checksum=d["checksum"])

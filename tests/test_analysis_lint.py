@@ -1,0 +1,164 @@
+"""Self-tests for the invariant linter (``repro.analysis``).
+
+Each seeded-violation fixture in ``analysis_fixtures/`` must produce
+*exactly* its expected finding, and its clean twin must pass — this is
+the linter's own regression net: a pass that silently stops firing
+shows up here, not as quietly-ignored production violations.
+"""
+
+import os
+
+import pytest
+
+from repro.analysis import lint
+from repro.analysis.core import Finding, Module, load_modules
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "analysis_fixtures")
+SRC = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+
+def run_on(name):
+    findings, lock_an, _ = lint.run(
+        [os.path.join(FIXTURES, name)], baseline_path=None)
+    return findings, lock_an
+
+
+@pytest.mark.parametrize("bad,good,rule", [
+    ("bad_guard.py", "good_guard.py", "guard"),
+    ("bad_lock_order.py", "good_lock_order.py", "lock-order"),
+    ("bad_wire.py", "good_wire.py", "wire-field"),
+    ("bad_determinism.py", "good_determinism.py", "determinism"),
+    ("bad_jitshape.py", "good_jitshape.py", "jit-shape"),
+])
+def test_seeded_violation_caught_and_clean_twin_passes(bad, good, rule):
+    findings, _ = run_on(bad)
+    assert [f.rule for f in findings] == [rule], \
+        f"{bad}: expected exactly one {rule!r}, got {findings}"
+    clean, _ = run_on(good)
+    assert clean == [], f"{good}: expected no findings, got {clean}"
+
+
+def test_guard_finding_names_the_field():
+    findings, _ = run_on("bad_guard.py")
+    [f] = findings
+    assert "n" in f.symbol and "_lock" in f.message
+
+
+def test_wire_finding_names_the_dropped_field():
+    findings, _ = run_on("bad_wire.py")
+    [f] = findings
+    assert f.symbol == "Packet.checksum"
+    assert "to_wire" in f.message
+
+
+def test_lock_order_cycle_names_both_locks():
+    findings, _ = run_on("bad_lock_order.py")
+    [f] = findings
+    assert "MU_A" in f.symbol and "MU_B" in f.symbol
+
+
+def test_good_lock_order_still_records_the_edge():
+    # the clean twin is clean because both paths agree, not because the
+    # analyzer failed to see the nesting
+    _, lock_an = run_on("good_lock_order.py")
+    edges = {(a.rsplit("::")[-1], b.rsplit("::")[-1])
+             for a, b in lock_an.edges}
+    assert ("MU_A", "MU_B") in edges
+
+
+def test_inline_allow_suppresses_with_justification():
+    mod = Module("f.py", (
+        "# analysis: determinism-path\n"
+        "def place(key, n):\n"
+        "    # analysis: allow[determinism] key is an int, hash is identity\n"
+        "    return hash(key) % n\n"))
+    from repro.analysis import determinism
+    assert determinism.check([mod]) == []
+    assert mod.bare_allows == []
+
+
+def test_bare_allow_is_itself_a_finding(tmp_path):
+    p = tmp_path / "f.py"
+    p.write_text("# analysis: determinism-path\n"
+                 "def place(key, n):\n"
+                 "    # analysis: allow[determinism]\n"
+                 "    return hash(key) % n\n")
+    findings, _, _ = lint.run([str(p)], baseline_path=None)
+    assert [f.rule for f in findings] == ["bare-allow"]
+
+
+def test_baseline_suppresses_only_with_reason(tmp_path):
+    src = tmp_path / "f.py"
+    src.write_text("# analysis: determinism-path\n"
+                   "def place(key, n):\n"
+                   "    return hash(key) % n\n")
+    findings, _, _ = lint.run([str(src)], baseline_path=None)
+    [f] = findings
+    bl = tmp_path / "baseline.txt"
+
+    bl.write_text(f"{f.fingerprint}  # int keys only, hash is identity\n")
+    findings, _, stale = lint.run([str(src)], baseline_path=str(bl))
+    assert findings == [] and stale == {}
+
+    bl.write_text(f"{f.fingerprint}\n")
+    findings, _, _ = lint.run([str(src)], baseline_path=str(bl))
+    assert [f.rule for f in findings] == ["bare-allow"]
+
+
+def test_stale_baseline_entries_reported(tmp_path):
+    src = tmp_path / "f.py"
+    src.write_text("x = 1\n")
+    bl = tmp_path / "baseline.txt"
+    bl.write_text("determinism:gone.py:place  # obsolete\n")
+    findings, _, stale = lint.run([str(src)], baseline_path=str(bl))
+    assert findings == []
+    assert set(stale) == {"determinism:gone.py:place"}
+
+
+def test_fingerprint_is_line_stable():
+    f1 = Finding("guard", "a.py", 10, "C.n", "msg")
+    f2 = Finding("guard", "a.py", 99, "C.n", "other msg")
+    assert f1.fingerprint == f2.fingerprint
+
+
+def test_src_tree_is_clean():
+    """The linter's reason to exist: the shipped tree passes with no
+    baseline entries (every deliberate pattern carries an inline
+    justified allow)."""
+    findings, _, _ = lint.run([SRC], baseline_path=None)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_src_lock_graph_is_small_and_acyclic():
+    _, lock_an, _ = lint.run([SRC], baseline_path=None)
+    assert not any(f.rule == "lock-order" for f in lock_an.findings)
+    # the static graph should stay near-empty: cross-component edges are
+    # deadlock surface, and the scheduler/ingest fixes removed them all
+    assert len(lock_an.edges) <= 6, sorted(lock_an.edges)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = os.path.join(FIXTURES, "bad_guard.py")
+    good = os.path.join(FIXTURES, "good_guard.py")
+    assert lint.main([good, "--no-baseline"]) == 0
+    assert lint.main([bad, "--no-baseline"]) == 1
+    out = capsys.readouterr().out
+    assert "[guard]" in out
+
+
+def test_cli_json_output(capsys):
+    import json
+    bad = os.path.join(FIXTURES, "bad_wire.py")
+    assert lint.main([bad, "--no-baseline", "--json"]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert [f["rule"] for f in doc["findings"]] == ["wire-field"]
+    assert doc["findings"][0]["fingerprint"].startswith("wire-field:")
+
+
+def test_load_modules_normalizes_paths(tmp_path):
+    p = tmp_path / "sub" / "f.py"
+    p.parent.mkdir()
+    p.write_text("x = 1\n")
+    [mod] = load_modules([str(p)])
+    assert mod.path == os.path.normpath(str(p))

@@ -1,0 +1,182 @@
+"""Self-tests for the runtime concurrency checker (mini-TSan).
+
+Each test installs the tracer if the session hasn't (REPRO_ANALYSIS=1
+sessions already have), injects a violation inside ``runtime.scoped()``
+so the injected edges never leak into the session-end check, and
+asserts the checker catches it.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.analysis import runtime
+
+
+@pytest.fixture
+def traced():
+    installed_here = runtime.install()
+    try:
+        with runtime.scoped():
+            runtime.reset()
+            yield
+    finally:
+        if installed_here:
+            runtime.uninstall()
+
+
+def test_injected_lock_order_inversion_detected(traced):
+    a = threading.Lock()
+    b = threading.Lock()
+    with a:
+        with b:
+            pass
+    with b:
+        with a:
+            pass
+    violations = runtime.check()
+    assert any("lock-order cycle observed" in v for v in violations), \
+        violations
+
+
+def test_cross_thread_inversion_detected(traced):
+    a = threading.Lock()
+    b = threading.Lock()
+
+    def thread_side():
+        with a:
+            with b:
+                pass
+
+    t = threading.Thread(target=thread_side)
+    t.start()
+    t.join()
+    with b:
+        with a:
+            pass
+    violations = runtime.check()
+    assert any("lock-order cycle observed" in v for v in violations), \
+        violations
+
+
+def test_consistent_order_is_clean(traced):
+    a = threading.Lock()
+    b = threading.Lock()
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert runtime.check() == []
+
+
+def test_sleep_while_holding_lock_flagged(traced):
+    mu = threading.Lock()
+    with mu:
+        time.sleep(0)
+    violations = runtime.check()
+    assert any("time.sleep" in v and "holding lock" in v
+               for v in violations), violations
+
+
+def test_sleep_without_lock_is_clean(traced):
+    time.sleep(0)
+    assert runtime.check() == []
+
+
+def test_allow_block_suppresses_only_its_region(traced):
+    mu = threading.Lock()
+    with mu, runtime.allow_block("self-test: deliberate blocking"):
+        time.sleep(0)
+    assert runtime.check() == []
+    # outside the region the same pattern is flagged again
+    with mu:
+        time.sleep(0)
+    assert any("time.sleep" in v for v in runtime.check())
+
+
+def test_allow_block_requires_justification():
+    with pytest.raises(ValueError):
+        runtime.allow_block("")
+    with pytest.raises(ValueError):
+        runtime.allow_block("   ")
+
+
+def test_observed_edge_reversing_static_order_flagged(traced):
+    a = threading.Lock()
+    b = threading.Lock()
+    sites = {}
+    for lock, node in ((a, "T.a"), (b, "T.b")):
+        path, _, line = lock.site.rpartition(":")
+        sites[(path, int(line))] = node
+    # static analysis says a -> b; observe only the reversal (no cycle
+    # at runtime, so this is the static cross-check firing, not the
+    # observed-cycle rule)
+    with b:
+        with a:
+            pass
+    violations = runtime.check(static_sites=sites,
+                               static_edges={("T.a", "T.b")})
+    assert any("reverses the static lock order" in v
+               for v in violations), violations
+    assert not any("cycle" in v for v in violations)
+
+
+def test_condition_wait_keeps_held_set_straight(traced):
+    mu = threading.RLock()
+    cond = threading.Condition(mu)
+    done = threading.Event()
+
+    def waker():
+        done.wait(5)
+        with cond:
+            cond.notify_all()
+
+    t = threading.Thread(target=waker)
+    t.start()
+    with cond:
+        done.set()
+        cond.wait(5)
+        # after wait() reacquires, the lock must be back in the held set:
+        # a nested acquire here must record an edge, not nothing
+        inner = threading.Lock()
+        with inner:
+            pass
+    t.join()
+    edges = runtime.edges()
+    assert any(b == inner.site for (_, b) in edges), edges
+    assert runtime.check() == []
+
+
+def test_scoped_restores_graph(traced):
+    a = threading.Lock()
+    b = threading.Lock()
+    before = runtime.edges()
+    with runtime.scoped():
+        with b:
+            with a:
+                pass
+        assert runtime.edges() != before
+    assert runtime.edges() == before
+
+
+def test_install_is_idempotent():
+    first = runtime.install()
+    try:
+        assert runtime.install() is False
+        assert runtime.installed()
+    finally:
+        if first:
+            runtime.uninstall()
+
+
+def test_traced_locks_survive_uninstall(traced):
+    # a lock created while traced keeps working after uninstall (the
+    # wrapper object is still a lock); only *new* locks go untraced
+    mu = threading.Lock()
+    runtime.uninstall()
+    try:
+        with mu:
+            assert mu.locked()
+    finally:
+        runtime.install()

@@ -12,7 +12,7 @@ from _hyp_compat import given, settings, st
 
 from repro.analytics.batch import (DEFAULT_BATCH_SHAPES, BatchedConsumer,
                                    _MIN_SLOT_GAP)
-from repro.analytics.operators import OPERATORS, Operator, _positions
+from repro.analytics.operators import OPERATORS, Operator
 from repro.analytics.query import _active_frame_mask, run_query
 from repro.analytics.scene import generate_segment
 from repro.core.knobs import FidelityOption, IngestSpec

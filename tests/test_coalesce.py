@@ -4,7 +4,7 @@ exhaustive enumeration on a small CF set (§6.4)."""
 
 import itertools
 
-from repro.core.coalesce import SFNode, choose_coding, coalesce
+from repro.core.coalesce import choose_coding, coalesce
 from repro.core.consumption import Consumer, ConsumerPlan
 from repro.core.knobs import (GOLDEN_CODING, RAW, CodingOption,
                               FidelityOption, StorageFormat, coding_space)

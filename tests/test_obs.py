@@ -6,11 +6,10 @@ import threading
 import pytest
 
 from repro.analytics.query import QueryResult, StageStats
-from repro.core.knobs import FidelityOption, IngestSpec
+from repro.core.knobs import IngestSpec
 from repro.launch.vserve import demo_config
-from repro.obs import (DEFAULT_BOUNDS, DriftDetector, Histogram,
-                       MetricsRegistry, Span, Tracer, chrome_trace_events,
-                       merge_reports)
+from repro.obs import (DriftDetector, Histogram, MetricsRegistry,
+                       Span, Tracer, merge_reports)
 from repro.obs import trace as obstrace
 
 

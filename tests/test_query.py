@@ -1,7 +1,6 @@
 """Cascade query execution over a real store: early stages filter later
 ones; speed accounting; accuracy/cost tradeoff across target levels."""
 
-import numpy as np
 import pytest
 
 from repro.analytics.query import QUERIES, run_query
@@ -9,8 +8,8 @@ from repro.analytics.scene import generate_segment
 from repro.core.coalesce import SFNode
 from repro.core.configure import DerivedConfig
 from repro.core.consumption import Consumer, ConsumerPlan
-from repro.core.knobs import (GOLDEN_CODING, RAW, CodingOption,
-                              FidelityOption, IngestSpec, StorageFormat)
+from repro.core.knobs import (GOLDEN_CODING, RAW, FidelityOption,
+                              IngestSpec)
 from repro.videostore import VideoStore
 
 

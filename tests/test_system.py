@@ -1,8 +1,6 @@
 """End-to-end system behaviour: ingest -> auto-configure (table-driven) ->
 store -> query, exercising the full data path the paper's Figure 1 draws."""
 
-import numpy as np
-
 from repro.analytics.query import run_query
 from repro.analytics.scene import generate_segment
 from repro.core import derive_config

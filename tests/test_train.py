@@ -2,7 +2,6 @@
 single-batch gradients, int8 gradient compression converges."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

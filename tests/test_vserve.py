@@ -13,8 +13,8 @@ from repro.analytics.scene import generate_segment
 from repro.core.coalesce import SFNode
 from repro.core.configure import DerivedConfig
 from repro.core.consumption import Consumer, ConsumerPlan
-from repro.core.knobs import (GOLDEN_CODING, RAW, FidelityOption, IngestSpec,
-                              StorageFormat)
+from repro.core.knobs import (GOLDEN_CODING, RAW, FidelityOption,
+                              IngestSpec)
 from repro.serving import (AdmissionError, DecodedSegmentCache, Request,
                            RetrievalPlanner, VStoreServer, run_pipelined)
 from repro.videostore import VideoStore

@@ -1,0 +1,194 @@
+"""Auto-discovered wire round-trip property: ``from_wire(to_wire(x))``
+must reproduce ``x`` for *every* wire form in the tree.
+
+Discovery is the same syntactic net the ``wire-field`` lint pass casts:
+any class with a ``to_wire``/``from_wire`` method pair, plus the
+``<name>_to_wire``/``<name>_from_wire`` function pairs in
+``cluster/wire.py``.  A new wire form without a factory here fails
+``test_every_discovered_form_has_a_factory`` — you cannot add one and
+dodge the round-trip check.
+"""
+
+import ast
+import os
+
+import pytest
+
+from _hyp_compat import given, settings, st
+from repro.analytics.query import QueryResult, StageStats
+from repro.cluster import wire
+from repro.core.coalesce import SFNode
+from repro.core.configure import DerivedConfig
+from repro.core.consumption import Consumer, ConsumerPlan
+from repro.core.erosion import ErosionPlan
+from repro.core.knobs import CodingOption, FidelityOption, IngestSpec
+from repro.obs.trace import Span
+from repro.serving.server import QueryRequest
+
+SRC = os.path.normpath(
+    os.path.join(os.path.dirname(__file__), os.pardir, "src"))
+
+
+def discover_wire_forms():
+    """-> sorted names: 'Class' for method pairs, 'name()' for function
+    pairs in cluster/wire.py."""
+    forms = set()
+    for dirpath, dirnames, filenames in os.walk(SRC):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in filenames:
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path, encoding="utf-8") as fh:
+                tree = ast.parse(fh.read(), filename=path)
+            for st_ in tree.body:
+                if isinstance(st_, ast.ClassDef):
+                    names = {m.name for m in st_.body
+                             if isinstance(m, ast.FunctionDef)}
+                    if {"to_wire", "from_wire"} <= names:
+                        forms.add(st_.name)
+                elif (isinstance(st_, ast.FunctionDef)
+                      and path.replace("\\", "/").endswith(
+                          "cluster/wire.py")
+                      and st_.name.endswith("_to_wire")
+                      and not st_.name.startswith("_")):
+                    forms.add(st_.name[:-len("_to_wire")] + "()")
+    return sorted(forms)
+
+
+def _cf():
+    return FidelityOption("good", 0.75, 360, 0.5)
+
+
+def _plan():
+    return ConsumerPlan(Consumer("nn", 0.9), _cf(), 0.95, 30.0)
+
+
+def _config():
+    p = _plan()
+    node = SFNode(_cf(), CodingOption("fast", 10), [p], golden=True)
+    return DerivedConfig(plans=[p], nodes=[node], coalesce_log=None)
+
+
+def _stage():
+    return StageStats(op="nn", cf=_cf(), sf_id="sf1", retrieve_s=0.125,
+                      consume_s=0.5, frames=32, items=3,
+                      segments_scanned=2, detect_calls=1,
+                      batched_frames=64)
+
+
+def _span():
+    return Span("decode", 7 << 32 | 1, 7 << 32 | 2, 7 << 32 | 1,
+                0.25, 0.125, 4242, 99, {"kind": "hit", "bytes": 4096})
+
+
+def _eq_roundtrip(x):
+    assert type(x).from_wire(x.to_wire()) == x
+
+
+def _wire_eq_roundtrip(x):
+    """For forms without value equality: the wire dict must be a fixed
+    point of from_wire ∘ to_wire."""
+    w = x.to_wire()
+    assert type(x).from_wire(w).to_wire() == w
+
+
+def _check_config():
+    # ConsumerPlan is eq=False (plans key subscription maps by identity),
+    # so the check is: the wire dict is a fixed point of from/to
+    w = wire.config_to_wire(_config())
+    assert wire.config_to_wire(wire.config_from_wire(w)) == w
+
+
+def _check_spec():
+    s = IngestSpec(96, 160, 8, 4, 720)
+    assert wire.spec_from_wire(wire.spec_to_wire(s)) == s
+
+
+def _check_erosion_plan():
+    plan = ErosionPlan(k=0.5, ages=[0, 1, 7],
+                       fractions=[{0: 0.5}, {1: 0.25, 2: 1.0}, {}],
+                       overall_speed=[1.0, 2.0, 4.0],
+                       daily_bytes=[100.0, 50.0, 0.0],
+                       total_bytes=150.0, feasible=True)
+    assert wire.erosion_plan_from_wire(
+        wire.erosion_plan_to_wire(plan)) == plan
+
+
+# name -> round-trip check; keep in sync with every discovered form
+FACTORIES = {
+    "QueryRequest": lambda: _eq_roundtrip(
+        QueryRequest("A", "cam0", [1, 2, 3], 0.9, block=True,
+                     trace_id=7, parent_span=9)),
+    "QueryResult": lambda: _eq_roundtrip(
+        QueryResult(items={(3, 0.5, "car"), (4, 0.25, "bus")},
+                    stages=[_stage()], video_seconds=12.0, wall_s=0.75)),
+    "StageStats": lambda: _eq_roundtrip(_stage()),
+    # Span has __slots__ and identity equality — compare wire dicts
+    "Span": lambda: _wire_eq_roundtrip(_span()),
+    "config()": _check_config,
+    "spec()": _check_spec,
+    "erosion_plan()": _check_erosion_plan,
+}
+
+
+def test_every_discovered_form_has_a_factory():
+    discovered = discover_wire_forms()
+    missing = [f for f in discovered if f not in FACTORIES]
+    assert not missing, (
+        f"wire forms without a round-trip factory: {missing} — add one "
+        f"to FACTORIES in {__file__}")
+
+
+@pytest.mark.parametrize("form", sorted(FACTORIES))
+def test_roundtrip(form):
+    FACTORIES[form]()
+
+
+def test_erosion_plan_fraction_keys_are_ints_after_roundtrip():
+    plan = ErosionPlan(k=1.0, ages=[0], fractions=[{3: 0.125}],
+                       overall_speed=[1.0], daily_bytes=[1.0],
+                       total_bytes=1.0, feasible=False)
+    back = wire.erosion_plan_from_wire(wire.erosion_plan_to_wire(plan))
+    [frac] = back.fractions
+    assert all(isinstance(k, int) for k in frac)
+
+
+def test_config_roundtrip_preserves_shared_plan_refs():
+    w = wire.config_to_wire(_config())
+    cfg = wire.config_from_wire(w)
+    # the node's plan list must reference the config's plan objects
+    assert cfg.nodes[0].plans[0] is cfg.plans[0]
+    assert wire.config_to_wire(cfg) == w
+
+
+def test_roundtrip_survives_msgpack_frame():
+    """End-to-end: the wire dict also has to survive pack/unpack (msgpack
+    turns tuples into lists and is strict about key types)."""
+    req = QueryRequest("B", "cam7", [0, 5], 0.8)
+    assert QueryRequest.from_wire(wire.unpack(wire.pack(req.to_wire()))) \
+        == req
+    span = _span()
+    assert Span.from_wire(
+        wire.unpack(wire.pack(span.to_wire()))).to_wire() == span.to_wire()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.text(max_size=8), st.lists(st.integers(0, 10_000), max_size=8),
+       st.floats(0.0, 1.0, allow_nan=False), st.booleans(),
+       st.integers(0, 2**63 - 1), st.integers(0, 2**63 - 1))
+def test_query_request_roundtrip_property(stream, segments, accuracy,
+                                          block, trace_id, parent_span):
+    req = QueryRequest("A", stream, segments, accuracy, block,
+                       trace_id, parent_span)
+    assert QueryRequest.from_wire(req.to_wire()) == req
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.dictionaries(st.text(min_size=1, max_size=8),
+                       st.one_of(st.integers(-1000, 1000), st.booleans(),
+                                 st.text(max_size=8)),
+                       max_size=4))
+def test_span_attrs_roundtrip_property(attrs):
+    span = Span("s", 1, 2, 0, 0.0, 1.0, 1, 1, attrs)
+    assert Span.from_wire(span.to_wire()).to_wire() == span.to_wire()
