@@ -26,11 +26,11 @@ from __future__ import annotations
 ID_KEYS = {
     "mode", "config", "query", "op", "acc", "kint", "n", "step", "q",
     "res", "segments", "arch", "shape", "budget_frac", "sampling",
-    "streams", "shards",
+    "streams", "shards", "dup",
 }
 # measured same-host ratio metrics guarded with a factor (absolute *_x
 # x-realtime speeds are deliberately excluded — host-speed dependent)
-GUARD_KEYS = {"speedup", "hit_rate"}
+GUARD_KEYS = {"speedup", "hit_rate", "call_reduction"}
 # boolean claims guarded exactly
 BOOL_VALUES = {"True", "False"}
 # boolean claims that encode an absolute-speed threshold (e.g. "golden
@@ -45,13 +45,17 @@ BOOL_VALUES = {"True", "False"}
 # informative rather than exactly gated; the factor-gated `speedup` ratio
 # is the enforceable scaling regression guard.
 HOST_SPEED_BOOL_KEYS = {"golden_realtime", "scales", "scales_to_host",
-                        "low_overhead"}
+                        "low_overhead", "realtime_1_5x"}
 # absolute floors for specific (bench, metric) pairs, applied on top of
 # the relative factor: cluster_scaling's speedup is host-capacity-capped
 # (so its factor floor lands below 1.0), but a cluster that fails to beat
 # one process AT ALL is a code regression, not host noise — the most
 # overcommitted sandbox observed still measures >= 1.2
-ABS_MIN = {("cluster_scaling", "speedup"): 1.1}
+ABS_MIN = {("cluster_scaling", "speedup"): 1.1,
+           # the acceptance claim: fused detects <= 0.5x the per-query
+           # count — detect-call counts are deterministic enough across
+           # hosts that the 2x reduction itself is the gate
+           ("cross_query_batching", "call_reduction"): 2.0}
 
 
 def parse_derived(derived: str) -> dict[str, str]:

@@ -354,6 +354,78 @@ def bench_batched_consumption(tmp_root="/tmp/repro_bench_batched"):
             f"identical={identical};fewer_calls={fewer}")
 
 
+def bench_cross_query_batching(tmp_root="/tmp/repro_bench_xquery"):
+    """Beyond-paper: continuous cross-query batching (repro.serving.sched).
+
+    16 concurrent queries at 4x duplication — the demo configuration maps
+    accuracies 0.8 and 0.9 to the *same* CFs per op, so the four live keys
+    (A/B x two accuracies) are distinct (whole-query collapsing can't fuse
+    them, and it is disabled in both arms) while their per-frame work is
+    pairwise identical.  The shared consumption scheduler must (a) cut
+    fused detect calls to <= 0.5x the per-query-batching count
+    (``call_reduction`` >= 2, factor- and floor-gated), (b) hold aggregate
+    serving speed at >= 1.5x realtime (host-speed claim, reported), and
+    (c) return every query's items bit-identical to sequential
+    ``run_query`` (exact-gated)."""
+    import shutil
+
+    from repro.launch.vserve import demo_config
+    from repro.serving import VStoreServer
+
+    cfg = demo_config()
+    n, dup, n_segs = 16, 4, 4
+    shutil.rmtree(tmp_root, ignore_errors=True)
+    vs = VideoStore(f"{tmp_root}/store", SPEC)
+    vs.set_formats(cfg.storage_formats())
+    for seg in range(n_segs):
+        frames, _ = generate_segment("jackson", seg, SPEC)
+        vs.ingest_segment("jackson", seg, frames)
+    segs = list(range(n_segs))
+
+    mix = [("A", 0.8), ("A", 0.9), ("B", 0.8), ("B", 0.9)]
+    subs = [(mix[i % dup][0], "jackson", segs, mix[i % dup][1])
+            for i in range(n)]
+    golden = {}  # warm jit caches (per-segment + static batch shapes)
+    for q, _s, sg, acc in subs:
+        if (q, acc) not in golden:
+            golden[(q, acc)] = run_query(vs, cfg, q, "jackson", sg, acc)
+            run_query(vs, cfg, q, "jackson", sg, acc, batch_segments=4)
+
+    def arm(cross):
+        # workers == n so every query is in flight at once: co-batching
+        # partners must actually overlap for the scheduler to fuse them
+        with VStoreServer(vs, cfg, workers=n, max_inflight=n,
+                          collapse=False, cross_query_batching=cross,
+                          batch_max_wait_ms=20.0) as srv:
+            srv.run_batch(subs)  # warm the server path itself
+            t0 = time.perf_counter()
+            results = srv.run_batch(subs)
+            wall = time.perf_counter() - t0
+            return wall, results, srv.stats()
+
+    base_wall, base_res, _ = arm(cross=False)
+    sched_wall, sched_res, st = arm(cross=True)
+
+    base_calls = sum(s.detect_calls for r in base_res for s in r.stages)
+    sched_calls = sum(s.detect_calls for r in sched_res for s in r.stages)
+    identical = all(
+        r.items == golden[(q, acc)].items
+        for res in (base_res, sched_res)
+        for r, (q, _s, _sg, acc) in zip(res, subs))
+    vsec = n * n_segs * SPEC.segment_seconds
+    agg_x = vsec / sched_wall
+    row("cross_query_batching", sched_wall * 1e6,
+        f"n={n};dup={dup};segments={n_segs};"
+        f"base_x={vsec / base_wall:.0f};agg_x={agg_x:.0f};"
+        f"speedup={base_wall / sched_wall:.2f};"
+        f"base_calls={base_calls};sched_calls={sched_calls};"
+        f"call_reduction={base_calls / max(1, sched_calls):.2f};"
+        f"deduped={st['sched_deduped']};"
+        f"fusion_ratio={st['sched_fusion_ratio']:.2f};"
+        f"occupancy={st['sched_batch_occupancy']:.2f};"
+        f"identical={identical};realtime_1_5x={agg_x >= 1.5}")
+
+
 def bench_ingest_live(tmp_root="/tmp/repro_bench_ingest"):
     """Beyond-paper: the live ingestion subsystem (repro.ingest).
 

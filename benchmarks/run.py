@@ -66,6 +66,7 @@ def main(argv=None) -> None:
         B.bench_table3_ingest_budget,
         B.bench_serve_concurrency,
         B.bench_batched_consumption,
+        B.bench_cross_query_batching,
         B.bench_ingest_live,
         B.bench_cluster_scaling,
         B.bench_decode_path,

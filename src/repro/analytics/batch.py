@@ -143,34 +143,55 @@ class BatchedConsumer:
         where every listed segment has an entry (possibly empty) — exactly
         the segments a per-segment loop would have called ``detect`` for.
         """
-        batch = sorted(((seg, f, p) for seg, f, p in batch if len(f)),
-                       key=lambda t: t[0])  # positions ascend slot-to-slot
-        per_seg: dict[int, set] = {seg: set() for seg, _, _ in batch}
-        stats = ConsumeStats()
-        if not batch:
-            return per_seg, stats
-        segs = [seg for seg, _, _ in batch]
+        batch = sorted(batch, key=lambda t: t[0])
+        per_entry, stats = self.consume_entries(
+            op, cf, [(f, p) for _seg, f, p in batch])
+        per_seg = {seg: items
+                   for (seg, f, _p), items in zip(batch, per_entry)
+                   if len(f)}
+        return per_seg, stats
 
-        # Pack whole segments into chunks of at most the largest static
-        # shape — a chunk boundary inside a segment would drop that
-        # segment's Diff pairs straddling it.
+    def consume_entries(self, op: Operator, cf, entries: list[tuple]
+                        ) -> tuple[list[set], ConsumeStats]:
+        """The slot-granular core of ``consume``: entries key on their list
+        index, not a segment id, so the *same* segment may appear more than
+        once (two queries' different activated subsets of one segment — the
+        shared cross-query scheduler's case).  ``entries`` is
+        ``[(frames_u8, positions), ...]``; returns a per-entry list of item
+        sets in the entry's own (local) position coordinates.
+
+        Bit-exactness carries over unchanged from the module invariants:
+        every entry gets its own slot, slot offsets ascend with entry
+        order, and consecutive slots keep the ``_MIN_SLOT_GAP`` positional
+        gap — a ``Diff`` pair spanning two entries (even two copies of the
+        same segment) can never reach threshold."""
+        per_entry: list[set] = [set() for _ in entries]
+        stats = ConsumeStats()
+        todo = [(i, f, p) for i, (f, p) in enumerate(entries) if len(f)]
+        if not todo:
+            return per_entry, stats
+
+        # Pack whole entries into chunks of at most the largest static
+        # shape — a chunk boundary inside an entry would drop that
+        # entry's Diff pairs straddling it.
         max_shape = self.shapes[-1]
-        chunks: list[list[tuple[int, np.ndarray, np.ndarray]]] = []
-        cur: list[tuple[int, np.ndarray, np.ndarray]] = []
+        chunks: list[list[tuple[int, int, np.ndarray, np.ndarray]]] = []
+        cur: list[tuple[int, int, np.ndarray, np.ndarray]] = []
         cur_n = 0
-        for slot, (_seg, frames, pos) in enumerate(batch):
+        for slot, (idx, frames, pos) in enumerate(todo):
             if cur and cur_n + len(frames) > max_shape:
                 chunks.append(cur)
                 cur, cur_n = [], 0
-            cur.append((slot, frames, pos))
+            cur.append((slot, idx, frames, pos))
             cur_n += len(frames)
         chunks.append(cur)
 
-        sentinel = len(batch) * self._stride  # pad slot past every segment
+        sentinel = len(todo) * self._stride  # pad slot past every entry
+        slot_idx = [idx for idx, _, _ in todo]
         for chunk in chunks:
-            x = np.concatenate([f for _, f, _ in chunk])
+            x = np.concatenate([f for _, _, f, _ in chunk])
             p = np.concatenate([np.asarray(pos, np.int64) + slot * self._stride
-                                for slot, _, pos in chunk])
+                                for slot, _, _, pos in chunk])
             n = len(x)
             target = self._pad_to(n)
             if target > n:
@@ -186,7 +207,7 @@ class BatchedConsumer:
             stats.batched_frames += target
             for it in items:
                 slot, local = divmod(int(it[1]), self._spb)
-                if slot >= len(segs):
+                if slot >= len(slot_idx):
                     continue  # produced by a padding frame
-                per_seg[segs[slot]].add((it[0], local) + tuple(it[2:]))
-        return per_seg, stats
+                per_entry[slot_idx[slot]].add((it[0], local) + tuple(it[2:]))
+        return per_entry, stats

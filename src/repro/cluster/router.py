@@ -493,8 +493,27 @@ class ShardRouter:
         rollup_keys = ("completed", "rejected", "failed", "collapsed",
                        "inflight", "video_seconds", "query_wall_s",
                        "decodes", "coalesced_cfs", "inflight_hits",
-                       "decode_bytes", "decode_chunks", "cache_bytes")
+                       "decode_bytes", "decode_chunks", "cache_bytes",
+                       "sched_enqueued", "sched_deduped",
+                       "sched_dispatches", "sched_units",
+                       "sched_detect_calls", "sched_frames",
+                       "sched_batched_frames", "sched_queue_depth")
         total = {k: sum(s[k] for s in per_shard) for k in rollup_keys}
+        # shared-scheduler ratios recomputed from the summed counters
+        # (never averaged across shards — an idle shard's 0.0 would skew
+        # a mean), mirrored into a merged gauge view alongside the live
+        # admission/queue occupancy sums
+        total["sched_fusion_ratio"] = (
+            total["sched_deduped"]
+            / max(1, total["sched_enqueued"] + total["sched_deduped"]))
+        total["sched_batch_occupancy"] = (
+            total["sched_frames"] / max(1, total["sched_batched_frames"]))
+        gauges = {
+            "inflight": total["inflight"],
+            "queue_depth": total["sched_queue_depth"],
+            "fusion_ratio": total["sched_fusion_ratio"],
+            "batch_occupancy": total["sched_batch_occupancy"],
+        }
         cache = {k: sum(s["cache"][k] for s in per_shard)
                  for k in ("hits", "richer_hits", "misses", "evictions",
                            "oversize", "inserted_bytes", "lookups")}
@@ -516,6 +535,7 @@ class ShardRouter:
             "cache": cache,
             "latency": latency,
             "drift": drift,
+            "gauges": gauges,
             **total,
         }
 

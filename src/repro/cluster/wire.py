@@ -162,6 +162,7 @@ def config_to_wire(config: DerivedConfig) -> dict:
             "plans": [plan_idx[id(p)] for p in n.plans],
             "golden": n.golden,
         } for n in config.nodes],
+        "dct_backend": config.dct_backend,
     }
 
 
@@ -174,7 +175,8 @@ def config_from_wire(d: dict) -> DerivedConfig:
                     [plans[i] for i in n["plans"]],
                     golden=n["golden"]) for n in d["nodes"]]
     return DerivedConfig(plans=plans, nodes=nodes,
-                         coalesce_log=_WireCoalesceLog(nodes=nodes))
+                         coalesce_log=_WireCoalesceLog(nodes=nodes),
+                         dct_backend=d.get("dct_backend"))
 
 
 # -- ErosionPlan -------------------------------------------------------------

@@ -109,6 +109,11 @@ class _ShardStack:
         self.generation = generation
         self.QueryRequest = QueryRequest
         self.config = wire.config_from_wire(cfg_wire)
+        if self.config.dct_backend:
+            # the frontend's profiler-measured codec backend choice
+            # applies cluster-wide, not just in the deriving process
+            from ..codec.transform import set_dct_backend
+            set_dct_backend(self.config.dct_backend)
         spec = wire.spec_from_wire(spec_wire)
         self.store = VideoStore(shard_dir, spec)
         self.store.set_formats(self.config.storage_formats())
@@ -119,7 +124,9 @@ class _ShardStack:
             cache_bytes=opts.get("cache_bytes", 256 << 20),
             prefetch_depth=opts.get("prefetch_depth", 1),
             batch_segments=opts.get("batch_segments", 4),
-            cache_policy=opts.get("cache_policy", "lru"))
+            cache_policy=opts.get("cache_policy", "lru"),
+            cross_query_batching=opts.get("cross_query_batching", False),
+            batch_max_wait_ms=opts.get("batch_max_wait_ms", 4.0))
         self.scheduler = None
         self.erosion = None
         if opts.get("ingest"):

@@ -27,6 +27,10 @@ class DerivedConfig:
     nodes: list[SFNode]
     coalesce_log: CoalesceResult
     erosion: ErosionPlan | None = None
+    # codec transform backend ("jnp" | "pallas") chosen from the profiler's
+    # measured dispatch cost (derive_config), not a platform guess; None
+    # means "not profiled" and leaves the codec-wide default untouched
+    dct_backend: str | None = None
 
     # -- derived lookup tables -------------------------------------------------
     def __post_init__(self):
@@ -108,6 +112,17 @@ def derive_config(profiler,
     # 2. storage formats (optimize storage, respect ingestion budget)
     result = coalesce(profiler, plans, ingest_budget=ingest_budget)
     cfg = DerivedConfig(plans=plans, nodes=result.nodes, coalesce_log=result)
+
+    # 2b. codec kernel backend: pick jnp vs Pallas from the profiler's
+    # *measured* dct8 dispatch cost instead of the platform-guessing
+    # default ("auto" -> pallas iff TPU), and install it codec-wide so the
+    # configuration's decode/encode estimates match what serving runs.
+    # Table-backed profilers (tests) have no wall clock and skip this.
+    if hasattr(profiler, "dct_dispatch_cost"):
+        from ..codec.transform import set_dct_backend
+        jnp_s, pallas_s = profiler.dct_dispatch_cost()
+        cfg.dct_backend = "pallas" if pallas_s < jnp_s else "jnp"
+        set_dct_backend(cfg.dct_backend)
 
     # 3. erosion plan (respect storage budget)
     if storage_budget_bytes is not None:

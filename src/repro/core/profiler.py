@@ -198,6 +198,42 @@ class Profiler:
         self.stats.wall_seconds += time.perf_counter() - t_start
         return overhead, per_frame
 
+    def dct_dispatch_cost(self, n_frames: int = 8,
+                          resolution: int = 360) -> tuple[float, float]:
+        """Measured wall seconds of one fused dct8 dequantize dispatch per
+        codec backend: ``(jnp_s, pallas_s)``.  The probe shape defaults to
+        a decode-representative chunk (a handful of mid-res frames), NOT a
+        tiny one: off-TPU the Pallas kernels run in interpret mode, whose
+        per-element cost only shows at realistic sizes — a dispatch-only
+        micro-probe would crown the backend that then crawls on real
+        segments (interpret-mode Pallas wins 2-frame/64px probes but loses
+        >10x at 8-frame/360px).  Best-of-``repeats`` after a warm call per
+        backend so compile time is excluded.  Memoized like the other
+        profiles; feeds ``derive_config``'s ``DerivedConfig.dct_backend``."""
+        key = ("dct_dispatch", n_frames, resolution)
+        if key in self._consume:
+            self.stats.memo_hits += 1
+            return self._consume[key]
+        t_start = time.perf_counter()
+        from ..kernels.dct8.ops import dct_dequantize
+        hb = wb = resolution // 8
+        rng = np.random.default_rng(0)
+        sym = rng.integers(-32, 32, (n_frames, hb, wb, 8, 8), dtype=np.int16)
+        best = {}
+        for use_pallas in (False, True):
+            np.asarray(dct_dequantize(sym, 2.0, use_pallas=use_pallas))
+            times = []
+            for _ in range(max(2, self.repeats)):
+                t0 = time.perf_counter()
+                np.asarray(dct_dequantize(sym, 2.0, use_pallas=use_pallas))
+                times.append(time.perf_counter() - t0)
+            best[use_pallas] = min(times)
+        res = (best[False], best[True])
+        self._consume[key] = res
+        self.stats.consumption_runs += 1
+        self.stats.wall_seconds += time.perf_counter() - t_start
+        return res
+
     def retrieval_speed(self, sf: StorageFormat, cf: FidelityOption) -> float:
         """x-realtime speed of decoding SF (with chunk-skip for the CF's
         sampling) and converting to CF."""

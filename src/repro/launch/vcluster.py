@@ -38,6 +38,12 @@ def main(argv=None):
     ap.add_argument("--queries", type=int, default=8)
     ap.add_argument("--workers", type=int, default=1,
                     help="query worker threads inside each shard process")
+    ap.add_argument("--cross-query-batching", action="store_true",
+                    help="shard servers fuse detects across concurrent "
+                         "queries through a shared consumption scheduler")
+    ap.add_argument("--batch-max-wait-ms", type=float, default=4.0,
+                    help="max time a non-full fused batch waits for "
+                         "co-batching partners inside each shard")
     ap.add_argument("--budget-x", type=float, default=None,
                     help="run live-ingest schedulers in the workers under "
                          "this global transcode budget (default: blocking "
@@ -64,6 +70,9 @@ def main(argv=None):
     segs = list(range(args.segments))
 
     opts = {"workers": args.workers}
+    if args.cross_query_batching:
+        opts.update(cross_query_batching=True,
+                    batch_max_wait_ms=args.batch_max_wait_ms)
     if args.trace:
         opts["trace"] = True
     if args.budget_x is not None:
@@ -118,6 +127,11 @@ def main(argv=None):
               f"{st['n_shards']} shards, {st['restarts']} restarts, "
               f"cache hit rate {st['cache']['hit_rate']:.2f}, "
               f"{st['decodes']} decodes")
+        if args.cross_query_batching:
+            print(f"scheduler: {st['sched_detect_calls']} fused detects "
+                  f"over {st['sched_units']} units across shards "
+                  f"(fusion ratio {st['sched_fusion_ratio']:.2f}, "
+                  f"occupancy {st['sched_batch_occupancy']:.2f})")
 
         if coord is not None:
             coord.set_budget_x(None)

@@ -85,6 +85,14 @@ def main(argv=None):
                          "executor (0 = one detect per segment)")
     ap.add_argument("--no-collapse", action="store_true",
                     help="disable in-flight duplicate-query collapsing")
+    ap.add_argument("--cross-query-batching", action="store_true",
+                    help="fuse detects across concurrent queries through "
+                         "the shared consumption scheduler (with "
+                         "frame-granular duplicate-work dedup)")
+    ap.add_argument("--batch-max-wait-ms", type=float, default=4.0,
+                    help="max time a non-full fused batch waits for "
+                         "co-batching partners (fairness knob for "
+                         "--cross-query-batching)")
     ap.add_argument("--baseline", action="store_true",
                     help="also time the same workload as sequential "
                          "run_query calls")
@@ -135,7 +143,9 @@ def main(argv=None):
                       cache_bytes=args.cache_mb << 20,
                       prefetch_depth=args.prefetch_depth,
                       batch_segments=args.batch_segments,
-                      collapse=not args.no_collapse) as srv:
+                      collapse=not args.no_collapse,
+                      cross_query_batching=args.cross_query_batching,
+                      batch_max_wait_ms=args.batch_max_wait_ms) as srv:
         t0 = time.perf_counter()
         results = srv.run_batch(subs)
         wall = time.perf_counter() - t0
@@ -162,6 +172,12 @@ def main(argv=None):
     print(f"planner: {stats['decodes']} decodes, "
           f"{stats['coalesced_cfs']} CFs coalesced, "
           f"{stats['collapsed']} queries collapsed")
+    if args.cross_query_batching:
+        print(f"scheduler: {stats['sched_detect_calls']} fused detects over "
+              f"{stats['sched_units']} units "
+              f"({stats['sched_deduped']} deduped; fusion ratio "
+              f"{stats['sched_fusion_ratio']:.2f}, occupancy "
+              f"{stats['sched_batch_occupancy']:.2f})")
     if args.trace:
         from ..obs import export_trace
         n = export_trace(args.trace, process_names={os.getpid(): "vserve"})

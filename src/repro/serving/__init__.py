@@ -14,11 +14,13 @@ cache -> planner -> executor -> server (see README.md):
 from .cache import CacheStats, DecodedSegmentCache
 from .executor import run_pipelined
 from .planner import DecodeTask, Request, RetrievalPlanner
+from .sched import ConsumptionScheduler, WorkUnit
 from .server import (AdmissionError, QueryRequest, QueryTicket, VStoreServer,
                      recovery_rank_for)
 
 __all__ = [
-    "AdmissionError", "CacheStats", "DecodedSegmentCache", "DecodeTask",
-    "QueryRequest", "QueryTicket", "Request", "RetrievalPlanner",
-    "VStoreServer", "recovery_rank_for", "run_pipelined",
+    "AdmissionError", "CacheStats", "ConsumptionScheduler",
+    "DecodedSegmentCache", "DecodeTask", "QueryRequest", "QueryTicket",
+    "Request", "RetrievalPlanner", "VStoreServer", "WorkUnit",
+    "recovery_rank_for", "run_pipelined",
 ]

@@ -31,7 +31,8 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
                   accuracy: float, retriever=None,
                   prefetch_depth: int = 1,
                   batch_segments: int = 4,
-                  batch_shapes: tuple[int, ...] | None = None) -> QueryResult:
+                  batch_shapes: tuple[int, ...] | None = None,
+                  scheduler=None) -> QueryResult:
     """Execute a cascade with retrieval/consumption overlap.
 
     ``retriever`` has ``store.retrieve``'s signature (the serving layer
@@ -41,6 +42,17 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
     many retrieved segments a fused detect consumes at once; 0 keeps the
     true per-segment path (exact shapes, no padding — the unbatched A/B
     baseline), still pipelined.
+
+    ``scheduler`` (a ``repro.serving.sched.ConsumptionScheduler``) replaces
+    the run-private ``BatchedConsumer`` with the server's *shared* one:
+    each segment's activated frames are enqueued as retrieval delivers them
+    and the stage waits on per-segment futures, so detects fuse across
+    every in-flight query (and duplicate work dedups at frame granularity).
+    Items are identical either way; consume accounting is attributed to
+    each fused batch's leading unit, so per-query ``detect_calls``/
+    ``frames`` are exact only summed across the server's queries.
+    ``StageStats.consume_s`` then counts time blocked on the shared
+    scheduler's futures, mirroring ``retrieve_s``.
     """
     if batch_segments < 0:
         raise ValueError(f"batch_segments must be >= 0, got {batch_segments}")
@@ -48,7 +60,7 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
     fetch = retriever or store.retrieve
     consumer = (BatchedConsumer(spec, shapes=batch_shapes or
                                 DEFAULT_BATCH_SHAPES)
-                if batch_segments else None)
+                if batch_segments and scheduler is None else None)
     group = batch_segments
     stages: list[StageStats] = []
     active: dict[int, set] | None = None
@@ -98,38 +110,68 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
             futures = {i: pool.submit(fetch, stream, segs[i], sf_id, cf)
                        for i in range(min(prefetch_depth, len(segs)))}
             pending: list[tuple] = []  # retrieved, awaiting a fused detect
-            for i, seg in enumerate(segs):
-                t0 = time.perf_counter()
-                frames, _cost = futures.pop(i).result()
-                st.retrieve_s += time.perf_counter() - t0
-                nxt = i + prefetch_depth
-                if nxt < len(segs):
-                    futures[nxt] = pool.submit(fetch, stream, segs[nxt],
-                                               sf_id, cf)
-
-                mask = _active_frame_mask(pos, None if active is None
-                                          else active.get(seg, set()), spec)
-                if not mask.any():
-                    continue
-                sel = np.nonzero(mask)[0]
-                if consumer is None:  # per-segment detect, exact shapes
+            waits: list[tuple] = []    # (seg, future) from the shared sched
+            if scheduler is not None:
+                scheduler.producer_inc(op_name, cf)
+            try:
+                for i, seg in enumerate(segs):
                     t0 = time.perf_counter()
-                    items = op.detect(frames[sel], cf, spec,
-                                      positions=pos[sel])
-                    st.consume_s += time.perf_counter() - t0
-                    st.detect_calls += 1
-                    st.frames += int(mask.sum())
-                    stage_items |= {(seg,) + it for it in items}
-                    next_active[seg] = {it[1] for it in items}
-                    continue
-                pending.append((seg, frames[sel], pos[sel]))
-                if len(pending) >= group:
-                    # the fused detect runs here while the pool retrieves
-                    # segments i+1 .. i+prefetch_depth in the background
-                    flush(pending)
-                    pending = []
+                    frames, _cost = futures.pop(i).result()
+                    st.retrieve_s += time.perf_counter() - t0
+                    nxt = i + prefetch_depth
+                    if nxt < len(segs):
+                        futures[nxt] = pool.submit(fetch, stream, segs[nxt],
+                                                   sf_id, cf)
+
+                    mask = _active_frame_mask(pos, None if active is None
+                                              else active.get(seg, set()),
+                                              spec)
+                    if not mask.any():
+                        continue
+                    sel = np.nonzero(mask)[0]
+                    if scheduler is not None:
+                        # hand the segment to the shared scheduler as soon
+                        # as it is retrieved; the fused detect may co-batch
+                        # it with other in-flight queries' work
+                        fut, owner = scheduler.enqueue(
+                            op_name, op, cf, stream, seg, sf_id,
+                            frames[sel], pos[sel])
+                        waits.append((seg, fut, owner))
+                        continue
+                    if consumer is None:  # per-segment detect, exact shapes
+                        t0 = time.perf_counter()
+                        items = op.detect(frames[sel], cf, spec,
+                                          positions=pos[sel])
+                        st.consume_s += time.perf_counter() - t0
+                        st.detect_calls += 1
+                        st.frames += int(mask.sum())
+                        stage_items |= {(seg,) + it for it in items}
+                        next_active[seg] = {it[1] for it in items}
+                        continue
+                    pending.append((seg, frames[sel], pos[sel]))
+                    if len(pending) >= group:
+                        # the fused detect runs here while the pool
+                        # retrieves segments i+1 .. i+prefetch_depth in
+                        # the background
+                        flush(pending)
+                        pending = []
+            finally:
+                if scheduler is not None:
+                    # stage fed its last segment: pending work may dispatch
+                    # without waiting out the batching timer
+                    scheduler.producer_dec(op_name, cf)
             if pending:
                 flush(pending)
+            for seg, fut, owner in waits:
+                t0 = time.perf_counter()
+                items, share = fut.result()
+                st.consume_s += time.perf_counter() - t0
+                if owner and share is not None:  # unit led a fused dispatch
+                    st.detect_calls += share.detect_calls
+                    st.frames += share.frames
+                    st.batched_frames += share.batched_frames
+                stage_items |= {(seg,) + it for it in items}
+                next_active[seg] = {it[1] for it in items}
 
             st.items = len(stage_items)
             stages.append(st)

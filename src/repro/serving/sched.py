@@ -1,0 +1,293 @@
+"""Shared consumption scheduler: continuous cross-query detect batching.
+
+``BatchedConsumer`` (repro.analytics.batch) fuses one query's segments into
+few ``op.detect`` calls; this module lifts that fusion across *queries*, the
+way continuous-batching LLM servers fuse decode steps across requests.  The
+server owns one ``ConsumptionScheduler``; every in-flight query's pipelined
+executor enqueues each segment's activated frames here as they come out of
+retrieval instead of running its own private flush, and a dispatcher thread
+continuously drains the queues into fused detects on the same static
+shape-bucket ladder.  Aggregate throughput then scales with *unique* work,
+not with query count.
+
+Mechanics, in the order work flows:
+
+* **Per-(op, cf) queues.**  A work unit is one segment's activated frames
+  for one cascade stage; units for the same ``(op, cf)`` are batchable (one
+  jit cache, one shape ladder) and queue together.  Queues are FIFO, so
+  within a queue the head is always the oldest — arrival order *is*
+  deadline order under a uniform max-wait.
+
+* **Cross-query work dedup.**  The unit's identity is
+  ``(stream, seg, sf_id, op, cf, activated positions)``.  Store content is
+  deterministic and operators are pure, so two queries enqueuing the same
+  identity want the *same* detect: the second attaches to the first's
+  future instead of adding work (PR 1's whole-query request collapsing,
+  reduced to frame granularity — it fires even when the queries differ
+  elsewhere, e.g. two accuracies that resolve to the same CF).  Dedup only
+  joins units still waiting in a queue; once dispatched, a unit's frames
+  are on the operator and a late twin starts a fresh unit.
+
+* **Fused dispatch.**  The dispatcher picks the queue whose head has the
+  earliest deadline (oldest-deadline-first across queues — a lone
+  low-rate query's unit cannot starve behind heavy duplicate traffic),
+  then drains whole units up to the largest batch shape and runs
+  ``BatchedConsumer.consume_entries``: each unit gets its own slot, so two
+  queries' different activated subsets of the *same* segment batch
+  together bit-exactly (the slot-gap invariant holds per slot, not per
+  segment — see batch.py).
+
+* **Batching timer.**  A non-full batch waits for co-batching partners
+  until its head's deadline (``max_wait_ms``), *unless* no producer is
+  still feeding the queue — executors bracket each stage with
+  ``producer_inc``/``producer_dec``, so a stage that has enqueued its last
+  segment dispatches immediately instead of burning its max-wait.  The
+  timer bounds added latency; the producer gate makes the common
+  uncontended case pay none of it.
+
+* **Result routing.**  Every unit resolves a ``Future`` with its item set
+  in the unit's own (local) position coordinates plus its share of the
+  consume accounting; each attached query scatters the items under its own
+  segment.  Dispatch accounting (detect calls, padded rows) is attributed
+  to the batch's first unit so per-server sums stay exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+
+import numpy as np
+
+from ..analytics.batch import DEFAULT_BATCH_SHAPES, BatchedConsumer
+from ..obs.trace import span as _span
+
+
+@dataclasses.dataclass
+class WorkUnit:
+    """One segment's activated frames for one cascade stage of one query."""
+    key: tuple                # (stream, seg, sf_id, op_name, cf, pos_bytes)
+    op: object                # the operator instance (shared per op_name)
+    cf: object
+    frames: np.ndarray
+    positions: np.ndarray
+    future: Future
+    deadline: float           # enqueue time + max_wait
+    waiters: int = 1          # queries attached to this unit's future
+
+
+class ConsumptionScheduler:
+    """Continuously drains per-(op, cf) queues into fused detects.
+
+    One instance per ``VStoreServer``; ``close()`` stops the dispatcher.
+    Thread-safe: executors enqueue from worker threads while the dispatcher
+    drains.  The scheduler lock is a leaf — nothing else is acquired under
+    it, and all operator work runs outside it.
+    """
+
+    def __init__(self, spec, shapes: tuple[int, ...] | None = None,
+                 max_wait_ms: float = 4.0):
+        if max_wait_ms < 0:
+            raise ValueError(f"max_wait_ms must be >= 0, got {max_wait_ms}")
+        self.consumer = BatchedConsumer(spec, shapes=shapes or
+                                        DEFAULT_BATCH_SHAPES)
+        self.max_wait_s = max_wait_ms / 1e3
+        self._mu = threading.Lock()
+        self._work = threading.Condition(self._mu)
+        self._queues: dict[tuple, deque] = {}    # guarded-by: _mu
+        self._by_key: dict[tuple, WorkUnit] = {} # guarded-by: _mu
+        self._producers: dict[tuple, int] = {}   # guarded-by: _mu
+        self._closed = False                     # guarded-by: _mu
+        # lifetime counters (guarded-by: _mu): enqueued counts distinct
+        # units, deduped counts attachments to an already-queued unit
+        self._enqueued = 0        # guarded-by: _mu
+        self._deduped = 0         # guarded-by: _mu
+        self._dispatches = 0      # guarded-by: _mu (fused consume calls)
+        self._dispatched_units = 0  # guarded-by: _mu
+        self._detect_calls = 0    # guarded-by: _mu
+        self._frames = 0          # guarded-by: _mu (real rows consumed)
+        self._batched_frames = 0  # guarded-by: _mu (rows incl. padding)
+        self._dispatcher = threading.Thread(target=self._dispatch_loop,
+                                            name="vstore-sched",
+                                            daemon=True)
+        self._dispatcher.start()
+
+    # -- producer lifecycle --------------------------------------------------
+    def producer_inc(self, op_name: str, cf) -> None:
+        """A query stage began feeding the ``(op, cf)`` queue.  While any
+        producer is registered the dispatcher holds non-full batches back
+        (up to the max-wait deadline) to let the stage's remaining segments
+        co-batch."""
+        qkey = (op_name, cf)
+        with self._mu:
+            self._producers[qkey] = self._producers.get(qkey, 0) + 1
+
+    def producer_dec(self, op_name: str, cf) -> None:
+        qkey = (op_name, cf)
+        with self._mu:
+            n = self._producers.get(qkey, 0) - 1
+            if n <= 0:
+                self._producers.pop(qkey, None)
+            else:
+                self._producers[qkey] = n
+            self._work.notify()  # pending work may now dispatch immediately
+
+    # -- enqueue -------------------------------------------------------------
+    def enqueue(self, op_name: str, op, cf, stream: str, seg: int,
+                sf_id: str, frames: np.ndarray, positions: np.ndarray
+                ) -> tuple[Future, bool]:
+        """Queue one segment's activated frames for a fused detect; returns
+        ``(future, owner)`` where the future resolves to ``(items,
+        stats_share)`` with items in the segment's local position
+        coordinates.  An identical unit already waiting (same
+        stream/seg/sf/op/cf *and* activated positions) is shared instead of
+        re-queued — then ``owner`` is False, and the caller must not count
+        the stats share (exactly one owner per unit keeps server-wide sums
+        exact)."""
+        pos = np.asarray(positions, np.int64)
+        key = (stream, int(seg), sf_id, op_name, cf, pos.tobytes())
+        qkey = (op_name, cf)
+        with self._mu:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            unit = self._by_key.get(key)
+            if unit is not None:
+                unit.waiters += 1
+                self._deduped += 1
+                return unit.future, False
+            unit = WorkUnit(key=key, op=op, cf=cf, frames=frames,
+                            positions=pos, future=Future(),
+                            deadline=time.perf_counter() + self.max_wait_s)
+            self._by_key[key] = unit
+            self._queues.setdefault(qkey, deque()).append(unit)
+            self._enqueued += 1
+            self._work.notify()
+            return unit.future, True
+
+    # -- dispatcher ----------------------------------------------------------
+    def _pick_locked(self, now: float, max_shape: int
+                     ) -> tuple[tuple | None, float | None]:
+        """``(best dispatchable queue, earliest head deadline overall)``.
+
+        A queue is dispatchable when its pending frames fill the largest
+        shape, its head is past deadline, or no producer is still feeding
+        it.  Among dispatchable queues the earliest head deadline wins
+        (oldest-deadline-first); the overall minimum bounds how long the
+        dispatcher may sleep when nothing is ready yet."""
+        best, best_dl, min_dl = None, None, None
+        for qkey, q in self._queues.items():
+            if not q:
+                continue
+            dl = q[0].deadline
+            min_dl = dl if min_dl is None else min(min_dl, dl)
+            ready = (now >= dl or not self._producers.get(qkey)
+                     or sum(len(u.frames) for u in q) >= max_shape)
+            if ready and (best_dl is None or dl < best_dl):
+                best, best_dl = qkey, dl
+        return best, min_dl
+
+    def _dispatch_loop(self) -> None:
+        max_shape = self.consumer.shapes[-1]
+        while True:
+            with self._mu:
+                batch: list[WorkUnit] = []
+                while True:
+                    if self._closed:
+                        return
+                    now = time.perf_counter()
+                    qkey, min_dl = self._pick_locked(now, max_shape)
+                    if qkey is not None:
+                        q = self._queues[qkey]
+                        taken = 0
+                        while q and (not batch
+                                     or taken + len(q[0].frames)
+                                     <= max_shape):
+                            u = q.popleft()
+                            taken += len(u.frames)
+                            del self._by_key[u.key]
+                            batch.append(u)
+                        if not q:
+                            del self._queues[qkey]
+                        break
+                    if min_dl is None:
+                        self._work.wait()
+                    else:
+                        self._work.wait(timeout=max(0.0, min_dl - now))
+            self._run_batch(qkey, batch)
+
+    def _run_batch(self, qkey: tuple, batch: list[WorkUnit]) -> None:
+        """Fused detect over one drained batch (no locks held — the
+        operator call is the expensive part and must not serialize
+        enqueues)."""
+        op_name, cf = qkey
+        try:
+            with _span("sched.dispatch", op=op_name, cf=cf.name(),
+                       units=len(batch),
+                       waiters=sum(u.waiters for u in batch)):
+                per_entry, cstats = self.consumer.consume_entries(
+                    batch[0].op, cf,
+                    [(u.frames, u.positions) for u in batch])
+        except BaseException as e:  # noqa: BLE001 — route to every waiter
+            for u in batch:
+                u.future.set_exception(e)
+            return
+        with self._mu:
+            self._dispatches += 1
+            self._dispatched_units += len(batch)
+            self._detect_calls += cstats.detect_calls
+            self._frames += cstats.frames
+            self._batched_frames += cstats.batched_frames
+        for i, u in enumerate(batch):
+            # accounting attributed to the batch leader: summing the
+            # shares across a server's queries equals the true fused cost
+            share = cstats if i == 0 else None
+            u.future.set_result((per_entry[i], share))
+
+    # -- stats / lifecycle ---------------------------------------------------
+    @staticmethod
+    def zero_stats() -> dict:
+        """The all-zero stats shape — a server running *without* the shared
+        scheduler reports these, so cluster rollups sum the same keys on
+        every shard regardless of per-shard configuration."""
+        return {k: 0 for k in (
+            "sched_enqueued", "sched_deduped", "sched_dispatches",
+            "sched_units", "sched_detect_calls", "sched_frames",
+            "sched_batched_frames", "sched_queue_depth")} | {
+            "sched_fusion_ratio": 0.0, "sched_batch_occupancy": 0.0}
+
+    def stats(self) -> dict:
+        """Counter snapshot plus live gauges, taken under the scheduler
+        lock (a racing reader sees a consistent enqueued/deduped pair)."""
+        with self._mu:
+            depth = sum(len(q) for q in self._queues.values())
+            enq, dup = self._enqueued, self._deduped
+            frames, batched = self._frames, self._batched_frames
+            return {
+                "sched_enqueued": enq,
+                "sched_deduped": dup,
+                "sched_dispatches": self._dispatches,
+                "sched_units": self._dispatched_units,
+                "sched_detect_calls": self._detect_calls,
+                "sched_frames": frames,
+                "sched_batched_frames": batched,
+                "sched_queue_depth": depth,
+                # share of demanded work served by an already-queued twin
+                "sched_fusion_ratio": dup / max(1, enq + dup),
+                # real rows per operator row: 1.0 = no padding waste
+                "sched_batch_occupancy": frames / max(1, batched),
+            }
+
+    def close(self) -> None:
+        with self._mu:
+            self._closed = True
+            # strand nothing: anything still queued resolves with an error
+            pending = [u for q in self._queues.values() for u in q]
+            self._queues.clear()
+            self._by_key.clear()
+            self._work.notify_all()
+        self._dispatcher.join()
+        for u in pending:
+            u.future.set_exception(RuntimeError("scheduler closed"))

@@ -26,12 +26,14 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 
 from ..analytics.query import QueryResult, stage_specs
+from ..codec.transform import dct_backend
 from ..obs import trace as obs
 from ..obs.drift import DriftDetector
 from ..obs.metrics import MetricsRegistry
 from .cache import DecodedSegmentCache
 from .executor import run_pipelined
 from .planner import Request, RetrievalPlanner
+from .sched import ConsumptionScheduler
 
 
 class AdmissionError(RuntimeError):
@@ -99,14 +101,23 @@ class VStoreServer:
                  prefetch_depth: int = 1, batch_segments: int = 4,
                  batch_shapes: tuple[int, ...] | None = None,
                  attach: bool = False, collapse: bool = True,
-                 cache_policy: str = "lru"):
+                 cache_policy: str = "lru",
+                 cross_query_batching: bool = False,
+                 batch_max_wait_ms: float = 4.0):
         """``cache_policy`` selects the decoded-segment cache's eviction
         order: ``"lru"`` (default) or ``"erosion"`` — evict the entry whose
         storage format is cheapest to recover (``recovery_rank_for``), so
         byte pressure spares the decodes that are expensive to redo.
         ``batch_shapes`` overrides the batched consumer's static shape
         ladder (e.g. one derived from the profiler's measured dispatch
-        overhead, ``repro.analytics.batch.derive_shapes``)."""
+        overhead, ``repro.analytics.batch.derive_shapes``).
+
+        ``cross_query_batching`` replaces each query's private batched
+        consumer with one shared ``ConsumptionScheduler``: detects fuse
+        *across* concurrent queries and duplicate ``(stream, segment, op,
+        cf)`` work dedups at frame granularity (see sched.py).
+        ``batch_max_wait_ms`` bounds how long a non-full fused batch may
+        wait for co-batching partners — the fairness knob."""
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         if workers < 1:
@@ -123,6 +134,9 @@ class VStoreServer:
         self.prefetch_depth = prefetch_depth
         self.batch_segments = batch_segments
         self.batch_shapes = batch_shapes
+        self.sched = (ConsumptionScheduler(store.spec, shapes=batch_shapes,
+                                           max_wait_ms=batch_max_wait_ms)
+                      if cross_query_batching else None)
         self._pool = ThreadPoolExecutor(workers,
                                         thread_name_prefix="vstore-query")
         self._mu = threading.Lock()
@@ -230,7 +244,8 @@ class VStoreServer:
                                     retriever=self.planner.fetch,
                                     prefetch_depth=self.prefetch_depth,
                                     batch_segments=self.batch_segments,
-                                    batch_shapes=self.batch_shapes)
+                                    batch_shapes=self.batch_shapes,
+                                    scheduler=self.sched)
             self.metrics.inc("completed")
             self.metrics.inc("video_seconds", res.video_seconds)
             self.metrics.inc("query_wall_s", res.wall_s)
@@ -304,9 +319,21 @@ class VStoreServer:
         erosion = self._erosion.stats() if self._erosion is not None else None
         cache = self.cache.stats_snapshot()
         planner = self.planner.stats()
-        counters = self.metrics.snapshot()["counters"]
+        sched = (self.sched.stats() if self.sched is not None
+                 else ConsumptionScheduler.zero_stats())
         with self._mu:
             inflight = self._inflight
+        # live occupancy as *gauges* (last-write-wins point-in-time reads,
+        # not lifetime counters): admission occupancy plus the shared
+        # scheduler's queue depth / batch occupancy / fusion ratio, so the
+        # cluster rollup sees them in the same registry as everything else
+        self.metrics.set_gauge("inflight", inflight)
+        self.metrics.set_gauge("queue_depth", sched["sched_queue_depth"])
+        self.metrics.set_gauge("fusion_ratio", sched["sched_fusion_ratio"])
+        self.metrics.set_gauge("batch_occupancy",
+                               sched["sched_batch_occupancy"])
+        snap = self.metrics.snapshot()
+        counters = snap["counters"]
         uptime = time.perf_counter() - self._t_up
         video_seconds = counters.get("video_seconds", 0.0)
         return {
@@ -327,6 +354,11 @@ class VStoreServer:
             "cache_bytes": cache["bytes"],
             "latency": self._h_latency.snapshot(),
             "drift": self.drift.report(),
+            # resolved codec transform backend this process serves with
+            # (profiler-chosen via DerivedConfig.dct_backend when derived)
+            "dct_backend": dct_backend(),
+            "gauges": snap["gauges"],
+            **sched,
             **planner,
         }
 
@@ -334,6 +366,8 @@ class VStoreServer:
         if self._attached:
             self.store.attach_retriever(None)
         self._pool.shutdown(wait=True)
+        if self.sched is not None:
+            self.sched.close()
 
     def __enter__(self):
         return self
