@@ -26,11 +26,11 @@ from __future__ import annotations
 ID_KEYS = {
     "mode", "config", "query", "op", "acc", "kint", "n", "step", "q",
     "res", "segments", "arch", "shape", "budget_frac", "sampling",
-    "streams", "shards", "dup",
+    "streams", "shards", "dup", "active", "pace",
 }
 # measured same-host ratio metrics guarded with a factor (absolute *_x
 # x-realtime speeds are deliberately excluded — host-speed dependent)
-GUARD_KEYS = {"speedup", "hit_rate", "call_reduction"}
+GUARD_KEYS = {"speedup", "hit_rate", "call_reduction", "decode_reduction"}
 # boolean claims guarded exactly
 BOOL_VALUES = {"True", "False"}
 # boolean claims that encode an absolute-speed threshold (e.g. "golden
@@ -45,7 +45,12 @@ BOOL_VALUES = {"True", "False"}
 # informative rather than exactly gated; the factor-gated `speedup` ratio
 # is the enforceable scaling regression guard.
 HOST_SPEED_BOOL_KEYS = {"golden_realtime", "scales", "scales_to_host",
-                        "low_overhead", "realtime_1_5x"}
+                        "low_overhead", "realtime_1_5x",
+                        # ingest_soak's debt-stationarity claim holds
+                        # whenever the calibrated budget grants enough
+                        # real CPU time — a property of the host's load,
+                        # not of the scheduler code
+                        "stationary"}
 # absolute floors for specific (bench, metric) pairs, applied on top of
 # the relative factor: cluster_scaling's speedup is host-capacity-capped
 # (so its factor floor lands below 1.0), but a cluster that fails to beat
@@ -55,7 +60,12 @@ ABS_MIN = {("cluster_scaling", "speedup"): 1.1,
            # the acceptance claim: fused detects <= 0.5x the per-query
            # count — detect-call counts are deterministic enough across
            # hosts that the 2x reduction itself is the gate
-           ("cross_query_batching", "call_reduction"): 2.0}
+           ("cross_query_batching", "call_reduction"): 2.0,
+           # the acceptance claim for semantic-index pushdown: >= 5x
+           # fewer stage-0 decoded segments — segment counts are exact
+           # (sketch activations are deterministic), so the floor gates
+           # the reduction itself, not a host-scaled fraction of it
+           ("predicate_pushdown", "decode_reduction"): 5.0}
 
 
 def parse_derived(derived: str) -> dict[str, str]:

@@ -68,6 +68,8 @@ def main(argv=None) -> None:
         B.bench_batched_consumption,
         B.bench_cross_query_batching,
         B.bench_ingest_live,
+        B.bench_ingest_soak,
+        B.bench_predicate_pushdown,
         B.bench_cluster_scaling,
         B.bench_decode_path,
         B.bench_fig13_overhead,

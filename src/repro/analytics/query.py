@@ -71,6 +71,13 @@ class QueryResult:
     stages: list[StageStats]
     video_seconds: float
     wall_s: float = 0.0  # measured end-to-end wall time of the execution
+    # predicate pushdown (repro.index): segments the semantic index pruned
+    # before retrieval — never read, never decoded.  ``pruned_conservative``
+    # counts the subset pruned across a knob mismatch (conservative mode:
+    # bounded recall loss); exact-match prunes never change items.
+    pruned_segments: int = 0
+    pruned_bytes: int = 0
+    pruned_conservative: int = 0
 
     def to_wire(self) -> dict:
         """Plain-scalar form of the result (item tuples become lists; a
@@ -80,6 +87,9 @@ class QueryResult:
             "stages": [s.to_wire() for s in self.stages],
             "video_seconds": float(self.video_seconds),
             "wall_s": float(self.wall_s),
+            "pruned_segments": int(self.pruned_segments),
+            "pruned_bytes": int(self.pruned_bytes),
+            "pruned_conservative": int(self.pruned_conservative),
         }
 
     @staticmethod
@@ -87,7 +97,10 @@ class QueryResult:
         return QueryResult(
             items={tuple(it) for it in d["items"]},
             stages=[StageStats.from_wire(s) for s in d["stages"]],
-            video_seconds=d["video_seconds"], wall_s=d["wall_s"])
+            video_seconds=d["video_seconds"], wall_s=d["wall_s"],
+            pruned_segments=d.get("pruned_segments", 0),
+            pruned_bytes=d.get("pruned_bytes", 0),
+            pruned_conservative=d.get("pruned_conservative", 0))
 
     @property
     def pipelined_speed(self) -> float:
@@ -119,6 +132,27 @@ def stage_specs(config, query: str, accuracy: float):
     return out
 
 
+def apply_pushdown(store, index, stream: str, segments: list[int],
+                   specs: list, accuracy: float, mode: str = "exact"):
+    """Consult the semantic index (repro.index) before any retrieval:
+    segments whose persisted cascade-head sketch shows zero activations
+    at (or dominating) the query's knobs are dropped from the stage-0
+    scan — no store read, no decode.  Returns ``(kept_segments,
+    (pruned_segments, pruned_bytes, pruned_conservative))``.  Shared by
+    ``run_query`` and the pipelined executor so both prune identically."""
+    if index is None or mode == "off" or not segments:
+        return segments, (0, 0, 0)
+    op_name, _op, cf, sf_id = specs[0]
+    if op_name not in getattr(index, "ops", ()):
+        return segments, (0, 0, 0)
+    dec = index.prune(stream, segments, op_name, cf, sf_id, accuracy,
+                      mode=mode)
+    if not dec.pruned:
+        return segments, (0, 0, 0)
+    nbytes = sum(store.segment_bytes(stream, s, sf_id) for s in dec.pruned)
+    return dec.kept, (len(dec.pruned), nbytes, dec.conservative)
+
+
 def _active_frame_mask(frames_pos: np.ndarray, active_buckets: set | None,
                        spec: IngestSpec) -> np.ndarray:
     if active_buckets is None:
@@ -130,7 +164,8 @@ def _active_frame_mask(frames_pos: np.ndarray, active_buckets: set | None,
 def run_query(store, config, query: str, stream: str, segments: list[int],
               accuracy: float, retriever=None,
               batch_segments: int = 0,
-              batch_shapes: tuple[int, ...] | None = None) -> QueryResult:
+              batch_shapes: tuple[int, ...] | None = None,
+              index=None, pushdown: str = "exact") -> QueryResult:
     """Execute a cascade at one target accuracy for every stage.
 
     ``config`` is a DerivedConfig (repro.core.configure): maps consumer
@@ -147,6 +182,12 @@ def run_query(store, config, query: str, stream: str, segments: list[int],
     bit-exact with the per-segment path; ``StageStats.detect_calls`` shows
     the dispatch saving.  ``batch_shapes`` overrides the consumer's static
     shape ladder (see ``batch.derive_shapes`` for the profiler-derived one).
+
+    ``index`` enables predicate pushdown (a ``repro.index.SemanticIndex``
+    or compatible): sketched-inactive segments are pruned before the
+    stage-0 scan (see ``apply_pushdown``).  In ``pushdown="exact"`` the
+    result is bit-identical to the unpruned run; ``"conservative"`` also
+    prunes across knob mismatches when the sketch's accuracy dominates.
     """
     if batch_segments < 0:
         raise ValueError(f"batch_segments must be >= 0, got {batch_segments}")
@@ -155,12 +196,16 @@ def run_query(store, config, query: str, stream: str, segments: list[int],
     consumer = (BatchedConsumer(spec, shapes=batch_shapes or
                                 DEFAULT_BATCH_SHAPES)
                 if batch_segments else None)
+    specs = stage_specs(config, query, accuracy)
+    n_total = len(segments)  # video_seconds covers pruned segments too
+    segments, (n_pruned, pruned_bytes, n_cons) = apply_pushdown(
+        store, index, stream, segments, specs, accuracy, pushdown)
     stages: list[StageStats] = []
     active: dict[int, set] | None = None  # per segment active buckets
     items_all: set = set()
     t_start = time.perf_counter()
 
-    for op_name, op, cf, sf_id in stage_specs(config, query, accuracy):
+    for op_name, op, cf, sf_id in specs:
         st = StageStats(op=op_name, cf=cf, sf_id=sf_id)
         stage_items: set = set()
         next_active: dict[int, set] = {}
@@ -226,6 +271,8 @@ def run_query(store, config, query: str, stream: str, segments: list[int],
         active = next_active
         items_all = stage_items  # final stage's items are the answer
 
-    dur = len(segments) * spec.segment_seconds
+    dur = n_total * spec.segment_seconds
     return QueryResult(items=items_all, stages=stages, video_seconds=dur,
-                       wall_s=time.perf_counter() - t_start)
+                       wall_s=time.perf_counter() - t_start,
+                       pruned_segments=n_pruned, pruned_bytes=pruned_bytes,
+                       pruned_conservative=n_cons)

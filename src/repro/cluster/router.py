@@ -78,11 +78,15 @@ def merge_results(per_stream: dict[str, QueryResult]) -> QueryResult:
     items: set = set()
     stages = None
     vsec, wall = 0.0, 0.0
+    pruned_segs = pruned_bytes = pruned_cons = 0
     for stream in sorted(per_stream):
         r = per_stream[stream]
         items |= {(stream,) + tuple(it) for it in r.items}
         vsec += r.video_seconds
         wall = max(wall, r.wall_s)
+        pruned_segs += r.pruned_segments
+        pruned_bytes += r.pruned_bytes
+        pruned_cons += r.pruned_conservative
         if stages is None:
             stages = [dataclasses.replace(s) for s in r.stages]
         else:
@@ -95,7 +99,10 @@ def merge_results(per_stream: dict[str, QueryResult]) -> QueryResult:
                 agg.detect_calls += s.detect_calls
                 agg.batched_frames += s.batched_frames
     return QueryResult(items=items, stages=stages or [],
-                       video_seconds=vsec, wall_s=wall)
+                       video_seconds=vsec, wall_s=wall,
+                       pruned_segments=pruned_segs,
+                       pruned_bytes=pruned_bytes,
+                       pruned_conservative=pruned_cons)
 
 
 class ShardHost:
@@ -497,7 +504,14 @@ class ShardRouter:
                        "sched_enqueued", "sched_deduped",
                        "sched_dispatches", "sched_units",
                        "sched_detect_calls", "sched_frames",
-                       "sched_batched_frames", "sched_queue_depth")
+                       "sched_batched_frames", "sched_queue_depth",
+                       # shard-local semantic indexes (repro.index): raw
+                       # counts sum across shards; every worker emits the
+                       # keys (zeros without an index) so this stays total
+                       "index_sketches", "index_builds", "index_build_s",
+                       "index_lookups", "index_invalidated", "index_bytes",
+                       "index_pruned_segments", "index_pruned_bytes",
+                       "index_pruned_conservative")
         total = {k: sum(s[k] for s in per_shard) for k in rollup_keys}
         # shared-scheduler ratios recomputed from the summed counters
         # (never averaged across shards — an idle shard's 0.0 would skew

@@ -163,6 +163,8 @@ def config_to_wire(config: DerivedConfig) -> dict:
             "golden": n.golden,
         } for n in config.nodes],
         "dct_backend": config.dct_backend,
+        "index_ops": (list(config.index_ops)
+                      if config.index_ops is not None else None),
     }
 
 
@@ -174,9 +176,12 @@ def config_from_wire(d: dict) -> DerivedConfig:
                     _coding_from_wire(n["coding"]),
                     [plans[i] for i in n["plans"]],
                     golden=n["golden"]) for n in d["nodes"]]
+    index_ops = d.get("index_ops")
     return DerivedConfig(plans=plans, nodes=nodes,
                          coalesce_log=_WireCoalesceLog(nodes=nodes),
-                         dct_backend=d.get("dct_backend"))
+                         dct_backend=d.get("dct_backend"),
+                         index_ops=(tuple(index_ops)
+                                    if index_ops is not None else None))
 
 
 # -- ErosionPlan -------------------------------------------------------------

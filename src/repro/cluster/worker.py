@@ -117,6 +117,14 @@ class _ShardStack:
         spec = wire.spec_from_wire(spec_wire)
         self.store = VideoStore(shard_dir, spec)
         self.store.set_formats(self.config.storage_formats())
+        # shard-local semantic index (repro.index): sketches live beside
+        # the shard's segment store and are built/served by this process
+        # only — the router never sees sketch bytes, just rolled-up stats
+        self.index = None
+        if self.config.index_ops and opts.get("index", True):
+            from ..index import SemanticIndex
+            self.index = SemanticIndex(os.path.join(shard_dir, "index"),
+                                       spec, self.config)
         self.server = VStoreServer(
             self.store, self.config,
             workers=opts.get("workers", 1),
@@ -126,7 +134,9 @@ class _ShardStack:
             batch_segments=opts.get("batch_segments", 4),
             cache_policy=opts.get("cache_policy", "lru"),
             cross_query_batching=opts.get("cross_query_batching", False),
-            batch_max_wait_ms=opts.get("batch_max_wait_ms", 4.0))
+            batch_max_wait_ms=opts.get("batch_max_wait_ms", 4.0),
+            index=self.index,
+            pushdown=opts.get("pushdown", "exact"))
         self.scheduler = None
         self.erosion = None
         if opts.get("ingest"):
@@ -135,6 +145,11 @@ class _ShardStack:
                 budget_x=opts.get("budget_x"),
                 shed_debt_s=opts.get("shed_debt_s"),
                 materialize_on_read=opts.get("materialize_on_read", False))
+            if self.index is not None:
+                # before adopt_missing, so the backlog sweep also queues
+                # sketch backfill for segments that predate the index (or
+                # whose sketch a crash lost before the flush ack)
+                self.scheduler.attach_sketcher(self.index)
             # a restart lost the in-memory transcode queue; re-adopt the
             # backlog for acked-but-unmaterialized formats so debt stays
             # visible and drainable (no-op on a fresh store)
@@ -209,7 +224,19 @@ class _ShardStack:
         # must hit disk before it, or a SIGKILL'd worker would restart
         # without the segment (the shard bytes would be orphan-swept)
         self.store.flush()
+        self._flush_index()
         return {"golden_s": golden_s}
+
+    def _flush_index(self) -> None:
+        """Make the semantic index durable alongside the store: the
+        IndexStore's ack point is its flush (recovery truncates the log
+        tail back to the last flushed index), so sketches built or
+        invalidated under this op become crash-durable with the same ack
+        that makes the segments durable.  A sketch lost anyway (SIGKILL
+        between build and flush) is re-queued by ``adopt_missing`` on
+        restart — never served torn."""
+        if self.index is not None:
+            self.index.flush()
 
     def _sched(self):
         if self.scheduler is None:
@@ -220,12 +247,14 @@ class _ShardStack:
         done = self._sched().pump(req.get("max_tasks"))
         if done:
             self.store.flush()  # background materializations now durable
+            self._flush_index()
         return done
 
     def op_drain(self, req: dict) -> int:
         done = self._sched().drain(req.get("include_shed", True))
         if done:
             self.store.flush()
+            self._flush_index()
         return done
 
     def op_requeue_shed(self, req: dict) -> int:
@@ -248,12 +277,14 @@ class _ShardStack:
 
     def op_flush(self, req: dict) -> None:
         self.store.flush()
+        self._flush_index()
 
     def close(self):
         if self.scheduler is not None:
             self.scheduler.stop()
         self.server.close()
         self.store.flush()
+        self._flush_index()
 
 
 def shard_worker_main(shard_dir: str, sock_path: str, generation: int,

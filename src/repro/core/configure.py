@@ -31,6 +31,9 @@ class DerivedConfig:
     # measured dispatch cost (derive_config), not a platform guess; None
     # means "not profiled" and leaves the codec-wide default untouched
     dct_backend: str | None = None
+    # cascade-head ops to sketch at ingest (repro.index); None disables
+    # ingest-time indexing — queries then never consult a semantic index
+    index_ops: tuple[str, ...] | None = None
 
     # -- derived lookup tables -------------------------------------------------
     def __post_init__(self):

@@ -1,0 +1,30 @@
+"""repro.index: ingest-time semantic indexing with predicate pushdown.
+
+VStore spends ingest/storage resources so queries beat realtime; this
+subsystem spends a little more of the same ingest budget to run the
+cascade-head operators *at ingest* and persist their per-segment
+activation sketches, so repeated and standing queries consult an index
+and skip inactive segments before ever touching disk or the decoder.
+
+* ``IndexStore`` — append-only, crash-safe on-disk store for sketch
+  records beside the segment store (versioned log headers, atomic index
+  flush, torn-tail truncation + orphan sweep on load, readonly attach);
+* ``SemanticIndex`` — builds sketches (``op.detect`` at the op's
+  profiled knobs) and answers pruning lookups: exact-match pushdown is
+  bit-identical to the unpruned query, conservative mode additionally
+  prunes across knob mismatches when the sketch's accuracy dominates;
+* ``SketchRecord`` — the wire-safe persisted record (activation buckets
+  + per-bucket item-count quantiles).
+
+Sketch tasks ride the ingest scheduler's token bucket (priced like
+transcodes, shed the same way); queries report pruning in
+``QueryResult`` and the cluster rolls ``index_*`` counters up.
+"""
+
+from .sketch import PruneDecision, SemanticIndex, SketchRecord, sketch_specs
+from .store import IndexStore
+
+__all__ = [
+    "IndexStore", "PruneDecision", "SemanticIndex", "SketchRecord",
+    "sketch_specs",
+]

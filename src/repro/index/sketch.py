@@ -1,0 +1,257 @@
+"""Semantic sketches: build at ingest, prune at query time.
+
+A *sketch* is the cascade-head operator's activation set over one
+segment, computed at the op's profiled consumption knobs and persisted
+in the ``IndexStore``.  ``run_query``'s cascade already drops a segment
+after stage 0 when the head op returns no items for it — stage 0 sets
+that segment's active-bucket set empty and every later stage skips it —
+so a segment whose *persisted* sketch shows zero activations at the
+query's exact head knobs can be pruned before retrieval without
+changing a single item: the pruned run is bit-identical to the unpruned
+run (held as a hypothesis property in tests/test_index.py).
+
+Two engagement modes:
+
+* ``exact`` — prune only when the sketch's (cf, sf) equal the query
+  head's resolved (cf, sf).  ``op.detect`` is deterministic, so equal
+  knobs imply the sketch *is* the stage-0 result: zero information loss.
+* ``conservative`` — additionally prune across a knob mismatch when the
+  sketch was built at accuracy >= the query's target: the sketch op
+  dominates the query's head on the accuracy ladder, so an empty sketch
+  bounds the recall loss by the accuracy gap.  Engaged only when asked
+  for explicitly; pruned-under-mismatch counts are surfaced separately
+  (``QueryResult.pruned_conservative``).
+
+Sketches are keyed by (stream, op, seg) and carry the sf they were
+computed from; erosion does not invalidate them — fallback-chain
+reconstruction of an eroded format is bit-exact, so the sketch of a
+reconstructed segment equals the sketch of the original.  Re-ingesting
+a segment *does* invalidate (the footage itself may differ).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+
+import msgpack
+import numpy as np
+
+from ..analytics.operators import OPERATORS, _bucket
+from ..core.knobs import FidelityOption, IngestSpec
+from ..obs.trace import span as _span
+from .store import IndexStore
+
+SKETCH_VERSION = 1
+
+
+def _key(stream: str, op: str, seg: int) -> str:
+    return f"{stream}:{op}:{seg:06d}"
+
+
+@dataclasses.dataclass
+class SketchRecord:
+    """One persisted sketch: which time buckets of one segment the op
+    activated, at which knobs, plus per-bucket item-count quantiles
+    (selectivity metadata for planners; only zero-activation prunes)."""
+    op: str
+    cf: FidelityOption
+    sf_id: str
+    accuracy: float
+    n_buckets: int                 # buckets per segment at build time
+    buckets: tuple[int, ...]       # activated buckets, sorted
+    items: int                     # total items the op emitted
+    quantiles: tuple[float, ...]   # (p25, p50, p75, max) items/activated bucket
+    version: int = SKETCH_VERSION
+
+    def to_wire(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["cf"] = [self.cf.quality, self.cf.crop, self.cf.resolution,
+                   self.cf.sampling]
+        d["buckets"] = list(self.buckets)
+        d["quantiles"] = [float(q) for q in self.quantiles]
+        return d
+
+    @staticmethod
+    def from_wire(d: dict) -> "SketchRecord":
+        d = dict(d)
+        q, crop, res, samp = d["cf"]
+        d["cf"] = FidelityOption(q, crop, res, samp)
+        d["buckets"] = tuple(int(b) for b in d["buckets"])
+        d["quantiles"] = tuple(float(x) for x in d["quantiles"])
+        return SketchRecord(**d)
+
+
+@dataclasses.dataclass
+class PruneDecision:
+    """Outcome of one pushdown lookup over a query's segment list."""
+    kept: list[int]
+    pruned: list[int]
+    conservative: int = 0   # of pruned: across a knob mismatch
+    missing: int = 0        # segments with no sketch (always kept)
+
+
+def sketch_specs(config, ops: tuple[str, ...] | None = None
+                 ) -> dict[str, tuple]:
+    """op -> (operator, cf, sf_id, accuracy): the knobs sketches are
+    built at.  Each indexed op uses its highest-accuracy profiled plan —
+    the most conservative sketch, and (configurations like the demo's,
+    where one CF serves every accuracy of an op) usually the *exact*
+    knobs every query resolves to."""
+    ops = tuple(ops if ops is not None else
+                (getattr(config, "index_ops", None) or ()))
+    out = {}
+    for op_name in ops:
+        plans = [p for p in config.plans if p.consumer.op == op_name]
+        if not plans:
+            raise KeyError(f"no consumer plan for indexed op {op_name!r}")
+        p = max(plans, key=lambda p: p.consumer.target)
+        out[op_name] = (OPERATORS[op_name], p.cf,
+                        config.subscription(p.cf), p.consumer.target)
+    return out
+
+
+def segment_buckets(spec: IngestSpec) -> int:
+    """Time buckets per segment (the item-space granularity)."""
+    return _bucket(spec.frames_per_segment - 1, spec) + 1
+
+
+class SemanticIndex:
+    """Facade over the ``IndexStore``: builds sketches and answers
+    pruning lookups.  One per store root (or per shard); thread-safe."""
+
+    def __init__(self, root: str, spec: IngestSpec, config,
+                 ops: tuple[str, ...] | None = None,
+                 readonly: bool = False):
+        self.spec = spec
+        self.store = IndexStore(root, readonly=readonly)
+        self.specs = sketch_specs(config, ops)
+        self.ops = tuple(self.specs)
+        self._mu = threading.Lock()
+        self._builds = 0      # guarded-by: _mu
+        self._build_s = 0.0   # guarded-by: _mu
+        self._lookups = 0     # guarded-by: _mu
+        self._invalidated = 0  # guarded-by: _mu
+
+    # -- build ---------------------------------------------------------------
+    def has_sketch(self, stream: str, seg: int, op_name: str) -> bool:
+        return _key(stream, op_name, seg) in self.store
+
+    def get(self, stream: str, seg: int, op_name: str) -> SketchRecord | None:
+        try:
+            blob = self.store.get(_key(stream, op_name, seg))
+        except KeyError:
+            return None
+        return SketchRecord.from_wire(msgpack.unpackb(blob))
+
+    def build(self, store, stream: str, seg: int, op_name: str) -> float:
+        """Run the op over the segment at its sketch knobs and persist
+        the activation record.  Returns the wall seconds spent (what the
+        ingest scheduler debits from the transcode budget).  Durable
+        only after ``flush()``."""
+        operator, cf, sf_id, accuracy = self.specs[op_name]
+        t0 = time.perf_counter()
+        with _span("index.build", stream=stream, seg=seg, op=op_name) as sp:
+            # the direct decode path: sketch building must not churn the
+            # serving cache, and its input must equal what stage 0 of a
+            # query would consume (retrieve/retrieve_direct are bit-exact)
+            frames, _cost = store.retrieve_direct(stream, seg, sf_id, cf)
+            items = operator.detect(frames, cf, self.spec)
+            per_bucket = collections.Counter(it[1] for it in items)
+            counts = sorted(per_bucket.values())
+            if counts:
+                qs = np.quantile(np.asarray(counts, float),
+                                 (0.25, 0.5, 0.75, 1.0))
+                quantiles = tuple(float(q) for q in qs)
+            else:
+                quantiles = (0.0, 0.0, 0.0, 0.0)
+            rec = SketchRecord(
+                op=op_name, cf=cf, sf_id=sf_id, accuracy=accuracy,
+                n_buckets=segment_buckets(self.spec),
+                buckets=tuple(sorted(per_bucket)), items=len(items),
+                quantiles=quantiles)
+            self.store.put(_key(stream, op_name, seg),
+                           msgpack.packb(rec.to_wire()))
+            sp.set(buckets=len(rec.buckets), items=rec.items)
+        dt = time.perf_counter() - t0
+        with self._mu:
+            self._builds += 1
+            self._build_s += dt
+        return dt
+
+    def invalidate(self, stream: str, seg: int) -> int:
+        """Drop every op's sketch of a segment (re-ingest: the footage
+        may have changed).  Returns how many records were dropped."""
+        n = 0
+        for op_name in self.ops:
+            if self.store.delete(_key(stream, op_name, seg)):
+                n += 1
+        if n:
+            with self._mu:
+                self._invalidated += n
+        return n
+
+    def missing(self, stream: str, segments: list[int]
+                ) -> list[tuple[int, str]]:
+        """(seg, op) pairs that still need a sketch — the backfill list
+        for footage ingested before the index existed."""
+        return [(seg, op_name) for seg in segments for op_name in self.ops
+                if not self.has_sketch(stream, seg, op_name)]
+
+    # -- lookup --------------------------------------------------------------
+    def prune(self, stream: str, segments: list[int], op_name: str,
+              cf: FidelityOption, sf_id: str, accuracy: float,
+              mode: str = "exact") -> PruneDecision:
+        """Partition ``segments`` by the persisted sketches: a segment
+        whose sketch shows zero activations is pruned when the sketch's
+        knobs exactly match the query head's, or — in ``conservative``
+        mode only — when the sketch's accuracy dominates the query's.
+        Unsketched segments and any activation keep the segment."""
+        if mode not in ("exact", "conservative"):
+            raise ValueError(f"unknown pushdown mode {mode!r}")
+        dec = PruneDecision(kept=[], pruned=[])
+        with _span("index.lookup", stream=stream, op=op_name,
+                   segments=len(segments), mode=mode) as sp:
+            for seg in segments:
+                rec = None if op_name not in self.specs else \
+                    self.get(stream, seg, op_name)
+                if rec is None:
+                    dec.missing += 1
+                    dec.kept.append(seg)
+                    continue
+                if rec.buckets:
+                    dec.kept.append(seg)
+                    continue
+                exact = rec.sf_id == sf_id and rec.cf == cf
+                if exact:
+                    dec.pruned.append(seg)
+                elif (mode == "conservative"
+                        and rec.accuracy >= accuracy - 1e-9):
+                    dec.pruned.append(seg)
+                    dec.conservative += 1
+                else:
+                    dec.kept.append(seg)
+            sp.set(pruned=len(dec.pruned), kept=len(dec.kept),
+                   conservative=dec.conservative)
+        with self._mu:
+            self._lookups += 1
+        return dec
+
+    # -- lifecycle -----------------------------------------------------------
+    def flush(self):
+        self.store.flush()
+
+    def stats(self) -> dict:
+        with self._mu:
+            builds, build_s = self._builds, self._build_s
+            lookups, invalidated = self._lookups, self._invalidated
+        return {
+            "index_sketches": len(self.store),
+            "index_builds": builds,
+            "index_build_s": build_s,
+            "index_lookups": lookups,
+            "index_invalidated": invalidated,
+            "index_bytes": self.store.total_bytes(),
+        }

@@ -1,0 +1,250 @@
+"""On-disk sketch store: small append-only logs behind a keyed index.
+
+Mirrors the segment store's crash-safety contract at sketch scale
+(records are ~100 bytes, not MB): ``root/log-XXXX.bin`` append-only
+record logs + ``root/index.msgpack`` mapping key -> (log, offset,
+length).  Every log file starts with a versioned magic header, so an
+attach can reject a foreign or corrupt directory instead of decoding
+garbage.  ``flush()`` is the durability ack point: a sketch is only
+acknowledged (and only survives a crash) once the index referencing it
+has been atomically replaced on disk.
+
+Crash recovery on a writable load:
+
+* the active log is truncated back to the length the durable index
+  recorded — a torn or unacked record tail (the bytes a crash mid-append
+  left behind) is discarded, never half-read;
+* log files the index no longer references are swept (the garbage a
+  crash may leave on either side of a compaction).
+
+``readonly=True`` attaches without any mutation — no truncation, no
+sweep, writes raise — safe for inspecting an index another process owns.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+
+import msgpack
+
+_MAGIC = b"VIDX0001"          # 8-byte versioned log header
+_LOG_LIMIT = 4 * 1024 * 1024
+
+
+class IndexStore:
+    def __init__(self, root: str, auto_compact_frac: float | None = 0.5,
+                 auto_compact_min_bytes: int = 1 << 14,
+                 readonly: bool = False):
+        if auto_compact_frac is not None and not 0 < auto_compact_frac <= 1:
+            raise ValueError(f"auto_compact_frac must be in (0, 1], "
+                             f"got {auto_compact_frac}")
+        self.root = root
+        self.readonly = readonly
+        if not readonly:
+            os.makedirs(root, exist_ok=True)
+        self.auto_compact_frac = None if readonly else auto_compact_frac
+        self.auto_compact_min_bytes = auto_compact_min_bytes
+        self._mu = threading.Lock()
+        self._index: dict[str, tuple[int, int, int]] = {}  # guarded-by: _mu
+        self._log_id = 0    # guarded-by: _mu
+        self._log_size = 0  # guarded-by: _mu (0 = log not created yet)
+        self._live_bytes = 0  # guarded-by: _mu (sum of indexed lengths)
+        self._dead_bytes = 0  # guarded-by: _mu (unreferenced log bytes)
+        self._gen = 0  # guarded-by: _mu (compact() bump; detects rewrites)
+        self.compactions = 0  # guarded-by: _mu
+        self.truncated_bytes = 0  # guarded-by: _mu (torn tail cut at load)
+        self._load()
+
+    # -- persistence --------------------------------------------------------
+    def _index_path(self) -> str:
+        return os.path.join(self.root, "index.msgpack")
+
+    def _log_path(self, lid: int) -> str:
+        return os.path.join(self.root, f"log-{lid:04d}.bin")
+
+    def _check_header(self, lid: int):
+        with open(self._log_path(lid), "rb") as f:
+            head = f.read(len(_MAGIC))
+        if head != _MAGIC:
+            raise ValueError(f"not an index log (bad header): "
+                             f"{self._log_path(lid)}")
+
+    def _load(self):
+        if not os.path.exists(self._index_path()):
+            return
+        with open(self._index_path(), "rb") as f:
+            raw = msgpack.unpackb(f.read())
+        self._index = {k: tuple(v) for k, v in raw["index"].items()}
+        self._log_id = raw["log_id"]
+        self._log_size = raw["log_size"]
+        self._live_bytes = sum(v[2] for v in self._index.values())
+        self._dead_bytes = raw.get("dead_bytes", 0)
+        for lid in {v[0] for v in self._index.values()}:
+            self._check_header(lid)
+        if self.readonly:
+            return  # truncation and the orphan sweep mutate; owner's job
+        # discard the torn/unacked tail of the active log: bytes past the
+        # length the durable index recorded were never acknowledged (the
+        # ack is the index flush), so cutting them loses nothing and
+        # guarantees no half-written record is ever addressable
+        path = self._log_path(self._log_id)
+        if os.path.exists(path):
+            self._check_header(self._log_id)
+            actual = os.path.getsize(path)
+            if actual > self._log_size:
+                with open(path, "r+b") as f:
+                    f.truncate(self._log_size)
+                self.truncated_bytes += actual - self._log_size
+        live = {v[0] for v in self._index.values()} | {self._log_id}
+        for name in os.listdir(self.root):
+            if name.startswith("log-") and name.endswith(".bin"):
+                lid = int(name[4:-4])
+                if lid not in live:
+                    os.remove(os.path.join(self.root, name))
+
+    def flush(self):
+        """Make every put durable — the sketch ack point."""
+        if self.readonly:
+            return  # nothing of ours to persist
+        with self._mu:
+            self._flush_locked()
+
+    def _flush_locked(self):
+        blob = msgpack.packb({
+            "index": {k: list(v) for k, v in self._index.items()},
+            "log_id": self._log_id, "log_size": self._log_size,
+            "dead_bytes": self._dead_bytes,
+        })
+        tmp = self._index_path() + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, self._index_path())  # atomic
+
+    def _check_writable(self):
+        if self.readonly:
+            raise RuntimeError(f"read-only IndexStore at {self.root}")
+
+    # -- KV API --------------------------------------------------------------
+    def put(self, key: str, value: bytes):
+        self._check_writable()
+        with self._mu:
+            if self._log_size + len(value) > _LOG_LIMIT and self._log_size:
+                self._log_id += 1
+                self._log_size = 0
+            lid = self._log_id
+            path = self._log_path(lid)
+            with open(path, "ab") as f:
+                if f.tell() == 0:
+                    f.write(_MAGIC)
+                offset = f.tell()
+                f.write(value)
+            self._log_size = offset + len(value)
+            old = self._index.get(key)
+            if old is not None:
+                self._dead_bytes += old[2]
+                self._live_bytes -= old[2]
+            self._index[key] = (lid, offset, len(value))
+            self._live_bytes += len(value)
+            self._maybe_compact_locked()
+
+    def get(self, key: str) -> bytes:
+        # optimistic read (the segment store's idiom): snapshot the entry
+        # under the lock, read the log without it, verify no compaction
+        # rewrote the layout mid-read
+        while True:
+            with self._mu:
+                gen = self._gen
+                lid, offset, length = self._index[key]
+                path = self._log_path(lid)
+            try:
+                with open(path, "rb") as f:
+                    f.seek(offset)
+                    blob = f.read(length)
+            except FileNotFoundError:
+                with self._mu:
+                    if self._gen != gen:
+                        continue  # compacted away mid-read; retry
+                raise
+            with self._mu:
+                if self._gen == gen:
+                    return blob
+
+    def delete(self, key: str) -> bool:
+        self._check_writable()
+        with self._mu:
+            entry = self._index.pop(key, None)
+            if entry is None:
+                return False
+            self._dead_bytes += entry[2]
+            self._live_bytes -= entry[2]
+            self._maybe_compact_locked()
+            return True
+
+    def __contains__(self, key: str) -> bool:
+        with self._mu:
+            return key in self._index
+
+    def __len__(self) -> int:
+        with self._mu:
+            return len(self._index)
+
+    def keys(self, prefix: str = "") -> list[str]:
+        with self._mu:
+            return sorted(k for k in self._index if k.startswith(prefix))
+
+    def total_bytes(self) -> int:
+        with self._mu:
+            return self._live_bytes
+
+    # -- compaction ----------------------------------------------------------
+    def _maybe_compact_locked(self):
+        if self.auto_compact_frac is None:
+            return
+        if (self._dead_bytes >= self.auto_compact_min_bytes
+                and self._dead_bytes > self.auto_compact_frac
+                * max(1, self._live_bytes + self._dead_bytes)):
+            self._compact_locked()
+
+    def compact(self):
+        self._check_writable()
+        with self._mu:
+            self._compact_locked()
+
+    def _compact_locked(self):
+        """Crash-safe rewrite into *fresh* log ids: the new index is made
+        durable pointing at the new logs before the old logs are deleted,
+        so a crash at any point leaves a readable store (new logs are
+        orphans before the flush; old logs after it)."""
+        old_lids = {v[0] for v in self._index.values()} | {self._log_id}
+        base = self._log_id + 1
+        items = sorted(self._index.items())
+        new_index, li, size = {}, 0, 0
+        out = open(self._log_path(base), "wb")
+        out.write(_MAGIC)
+        size = len(_MAGIC)
+        for key, (olid, off, ln) in items:
+            with open(self._log_path(olid), "rb") as f:
+                f.seek(off)
+                blob = f.read(ln)
+            if size + ln > _LOG_LIMIT and size > len(_MAGIC):
+                out.close()
+                li += 1
+                out = open(self._log_path(base + li), "wb")
+                out.write(_MAGIC)
+                size = len(_MAGIC)
+            new_index[key] = (base + li, size, ln)
+            out.write(blob)
+            size += ln
+        out.close()
+        self._index = new_index
+        self._log_id, self._log_size = base + li, size
+        self._live_bytes = sum(v[2] for v in new_index.values())
+        self._dead_bytes = 0
+        self._gen += 1
+        self.compactions += 1
+        self._flush_locked()  # durable before the destructive deletes
+        for lid in old_lids:
+            path = self._log_path(lid)
+            if os.path.exists(path):
+                os.remove(path)

@@ -63,12 +63,19 @@ def recovery_rank_for(config, spec, profiler=None) -> dict[str, float]:
 @dataclasses.dataclass(order=True)
 class TranscodeTask:
     """One deferred materialization, ordered most-expensive-to-recover
-    first (the head of the queue is the format the fleet misses most)."""
+    first (the head of the queue is the format the fleet misses most).
+    ``kind="sketch"`` tasks build semantic-index sketches instead of
+    blobs (repro.index): same queue, same budget accounting, ordered
+    right after their source format's own transcode (sort-key suffix);
+    ``op`` names the sketched operator and ``sf_id`` the source format
+    the sketch decodes from."""
     sort_key: tuple
     stream: str = dataclasses.field(compare=False)
     seg: int = dataclasses.field(compare=False)
     sf_id: str = dataclasses.field(compare=False)
     est_s: float = dataclasses.field(compare=False, default=0.0)
+    kind: str = dataclasses.field(compare=False, default="transcode")
+    op: str = dataclasses.field(compare=False, default="")
 
 
 class BudgetLease:
@@ -163,6 +170,9 @@ class IngestScheduler:
         self.write_backs = 0          # guarded-by: _mu (blobs persisted)
         self.write_back_s = 0.0       # guarded-by: _mu (budget charge)
         self.write_backs_skipped = 0  # guarded-by: _mu (no credit)
+        self._index = None            # semantic index (attach_sketcher)
+        self.sketches = 0             # guarded-by: _mu (sketch tasks done)
+        self.sketch_s = 0.0           # guarded-by: _mu (budget charge)
         self._h_golden = Histogram()     # per-segment golden encode seconds
         self._h_transcode = Histogram()  # per-task background encode seconds
         self._on_ingest: list = []   # callbacks(stream, seg) after golden
@@ -193,6 +203,28 @@ class IngestScheduler:
         (the erosion executor uses this to place segments in age cohorts)."""
         self._on_ingest.append(cb)
 
+    def attach_sketcher(self, index) -> None:
+        """Attach a semantic index (``repro.index.SemanticIndex``): every
+        admitted segment also enqueues one budget-charged sketch task per
+        indexed op, priced and shed exactly like transcodes.  Re-ingest
+        invalidates the segment's existing sketches first."""
+        self._index = index
+
+    def _sketch_tasks_locked(self, stream: str, seg: int,
+                             golden_dt: float) -> int:
+        """Enqueue missing-sketch tasks for one segment (caller holds
+        ``_mu``).  Returns how many were enqueued."""
+        n = 0
+        for op_name in self._index.ops:
+            src_sf = self._index.specs[op_name][2]
+            task = TranscodeTask(
+                self._sort_key(src_sf, seg, stream) + (1,), stream, seg,
+                src_sf, est_s=self._estimate_sketch(op_name, golden_dt),
+                kind="sketch", op=op_name)
+            bisect.insort(self._queue, task)
+            n += 1
+        return n
+
     def ingest(self, stream: str, seg: int, frames_u8,
                ingest_fidelity: FidelityOption | None = None) -> float:
         """Admit one arriving segment: golden written durably before
@@ -200,6 +232,15 @@ class IngestScheduler:
         Returns the golden (durability) latency in seconds."""
         src_f = ingest_fidelity or FidelityOption()
         self.fallback.invalidate(stream, seg)  # re-ingest: stale memos die
+        if self._index is not None:
+            self._index.invalidate(stream, seg)  # footage may differ now
+        for sf_id in self.store.formats:
+            # re-ingest: derived blobs of the old footage must not outlive
+            # the new golden, or transcode tasks would skip them as
+            # already-materialized and queries keep serving stale frames
+            if (sf_id != self.golden_id
+                    and self.store.has_segment(stream, seg, sf_id)):
+                self.store.erode(stream, sf_id, segments=[seg], count=1)
         with _span("ingest.golden", stream=stream, seg=seg) as sp:
             t0 = time.perf_counter()
             blob = self.store.encode_format(
@@ -227,6 +268,8 @@ class IngestScheduler:
                     self._sort_key(sf_id, seg, stream), stream, seg, sf_id,
                     est_s=self._estimate(sf_id, golden_dt))
                 bisect.insort(self._queue, task)
+            if self._index is not None:
+                self._sketch_tasks_locked(stream, seg, golden_dt)
             self._shed_over_cap_locked()
             self._work.notify_all()
         for cb in self._on_ingest:
@@ -249,6 +292,15 @@ class IngestScheduler:
         ratio = (self.spec.raw_bytes_per_segment(f)
                  / max(1, self.spec.raw_bytes_per_segment(g)))
         return max(1e-4, golden_dt * ratio)
+
+    def _estimate_sketch(self, op_name: str, golden_dt: float) -> float:
+        """Expected seconds for one sketch build: observed EMA once
+        available, else a fraction of the golden encode (cascade-head ops
+        decode a cheap format and run the cheapest operators)."""
+        got = self._est_s.get("sketch:" + op_name)
+        if got is not None:
+            return got
+        return max(1e-4, 0.2 * golden_dt)
 
     def _shed_over_cap_locked(self):
         if self.shed_debt_s is None:
@@ -354,7 +406,7 @@ class IngestScheduler:
             streams = sorted({k.split(":", 1)[0]
                               for k in self.store.backend.keys()})
         with self._mu:
-            have = {(t.stream, t.seg, t.sf_id)
+            have = {(t.stream, t.seg, t.kind, t.op or t.sf_id)
                     for t in self._queue + self._shed}
             golden_dt = self._est_s.get(self.golden_id,
                                         0.05 * self.spec.segment_seconds)
@@ -373,7 +425,7 @@ class IngestScheduler:
                     for sf_id in self.store.formats:
                         if sf_id == self.golden_id:
                             continue
-                        if (stream, seg, sf_id) in have:
+                        if (stream, seg, "transcode", sf_id) in have:
                             continue
                         if self.store.has_segment(stream, seg, sf_id):
                             continue
@@ -381,6 +433,23 @@ class IngestScheduler:
                             self._sort_key(sf_id, seg, stream), stream,
                             seg, sf_id,
                             est_s=self._estimate(sf_id, golden_dt))
+                        bisect.insort(self._queue, task)
+                        n += 1
+                    if self._index is None:
+                        continue
+                    # index backfill rides the same queue: sketches for
+                    # pre-index (or crash-lost unacked) footage
+                    for op_name in self._index.ops:
+                        if (stream, seg, "sketch", op_name) in have:
+                            continue
+                        if self._index.has_sketch(stream, seg, op_name):
+                            continue
+                        src_sf = self._index.specs[op_name][2]
+                        task = TranscodeTask(
+                            self._sort_key(src_sf, seg, stream) + (1,),
+                            stream, seg, src_sf,
+                            est_s=self._estimate_sketch(op_name, golden_dt),
+                            kind="sketch", op=op_name)
                         bisect.insort(self._queue, task)
                         n += 1
             self._video_s_arrived += adopted_video_s
@@ -408,7 +477,30 @@ class IngestScheduler:
             return None
         return self._queue.pop(0)
 
+    def _run_sketch(self, task: TranscodeTask):
+        """Build one sketch (budget-charged like a transcode).  The build
+        decodes over the fallback chain when its source format is still
+        queued, so sketch order vs transcode order never matters for
+        correctness — reconstruction is bit-exact."""
+        if self._index is None or self._index.has_sketch(
+                task.stream, task.seg, task.op):
+            return  # detached, or raced with another builder
+        dt = self._index.build(self.store, task.stream, task.seg, task.op)
+        with self._mu:
+            self.sketches += 1
+            self.sketch_s += dt
+            self._spent_s += dt
+            if self.budget_x is not None:
+                self._credit -= dt
+            key = "sketch:" + task.op
+            prev = self._est_s.get(key)
+            self._est_s[key] = (dt if prev is None else
+                                (1 - self._ema) * prev + self._ema * dt)
+
     def _run_task(self, task: TranscodeTask):
+        if task.kind == "sketch":
+            self._run_sketch(task)
+            return
         if self.store.has_segment(task.stream, task.seg, task.sf_id):
             return  # raced with another materializer
         # bill only this level's decode+encode: an unmaterialized parent
@@ -530,10 +622,16 @@ class IngestScheduler:
                 per_format[sid] = {"pending": 0, "est_debt_s": 0.0,
                                    "shed": 0,
                                    "recovery_cost": self._rank.get(sid, 0.0)}
+            sketch_pending = 0
             for t in self._queue:
+                if t.kind != "transcode":  # sketches tracked separately
+                    sketch_pending += 1
+                    continue
                 per_format[t.sf_id]["pending"] += 1
                 per_format[t.sf_id]["est_debt_s"] += t.est_s
             for t in self._shed:
+                if t.kind != "transcode":
+                    continue
                 per_format[t.sf_id]["shed"] += 1
             total_video = sum(st.video_seconds
                               for st in self._streams.values())
@@ -554,6 +652,9 @@ class IngestScheduler:
                 "write_back_s": self.write_back_s,
                 "write_backs_skipped": self.write_backs_skipped,
                 "video_seconds": total_video,
+                "sketches": self.sketches,
+                "sketch_s": self.sketch_s,
+                "sketch_pending": sketch_pending,
             }
         # the histogram and fallback sub-snapshots take their owners'
         # locks — never acquire those while holding _mu (lock-order

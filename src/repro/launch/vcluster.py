@@ -49,6 +49,10 @@ def main(argv=None):
                          "this global transcode budget (default: blocking "
                          "full materialization)")
     ap.add_argument("--erode-days", type=int, default=0)
+    ap.add_argument("--index", action="store_true",
+                    help="workers build shard-local semantic indexes at "
+                         "ingest and serve with exact predicate pushdown "
+                         "(requires --budget-x for the sketching tasks)")
     ap.add_argument("--verify", action="store_true",
                     help="rebuild the same content single-process and check "
                          "the cluster's answers are bit-identical")
@@ -61,7 +65,7 @@ def main(argv=None):
         obs.enable(True)
         obs.TRACER.pid = 0  # display convention: router=0, shard i -> i+1
 
-    cfg = demo_config()
+    cfg = demo_config(index_ops=("diff", "motion") if args.index else None)
     spec = IngestSpec()
     shutil.rmtree(args.root, ignore_errors=True)
     names = [DEFAULT_STREAMS[i % len(DEFAULT_STREAMS)] +
@@ -132,7 +136,6 @@ def main(argv=None):
                   f"over {st['sched_units']} units across shards "
                   f"(fusion ratio {st['sched_fusion_ratio']:.2f}, "
                   f"occupancy {st['sched_batch_occupancy']:.2f})")
-
         if coord is not None:
             coord.set_budget_x(None)
             n = coord.drain()
@@ -140,6 +143,18 @@ def main(argv=None):
             print(f"budget raised -> drained {n} transcodes "
                   f"(debt now {cst['debt_s']:.2f}s, "
                   f"write-backs {cst['write_backs']})")
+
+        if args.index:
+            # sketch tasks ride the budgeted transcode queue, so the index
+            # is complete only after the drain above — query again to show
+            # pushdown actually skipping segments
+            router.query_many(subs)
+            st = router.stats()
+            print(f"index: {st['index_sketches']} sketches across shards "
+                  f"({st['index_builds']} built, "
+                  f"{st['index_build_s']:.2f}s), pushdown pruned "
+                  f"{st['index_pruned_segments']} segments / "
+                  f"{st['index_pruned_bytes']} bytes before the decoder")
 
         if args.verify:
             ref = VideoStore(os.path.join(args.root, "ref"), spec)

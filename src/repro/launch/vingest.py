@@ -48,6 +48,11 @@ def main(argv=None):
     ap.add_argument("--erode-days", type=int, default=0,
                     help="after ingest, age the footage this many days "
                          "through the erosion executor")
+    ap.add_argument("--index", action="store_true",
+                    help="sketch cascade-head activations at ingest "
+                         "(budget-charged, shed-able tasks beside the "
+                         "transcodes) and serve with exact predicate "
+                         "pushdown")
     ap.add_argument("--trace", metavar="FILE", default=None,
                     help="enable span tracing and write a Chrome trace-event "
                          "JSON (load in Perfetto / chrome://tracing)")
@@ -56,7 +61,7 @@ def main(argv=None):
         from ..obs import enable
         enable(True)
 
-    cfg = demo_config()
+    cfg = demo_config(index_ops=("diff", "motion") if args.index else None)
     shutil.rmtree(args.root, ignore_errors=True)
     spec = IngestSpec()
     vs = VideoStore(os.path.join(args.root, "store"), spec)
@@ -83,6 +88,11 @@ def main(argv=None):
           f"transcode budget {budget_x:.2f}x")
 
     sched = IngestScheduler(vs, cfg, budget_x=budget_x)
+    index = None
+    if args.index:
+        from ..index import SemanticIndex
+        index = SemanticIndex(os.path.join(args.root, "index"), spec, cfg)
+        sched.attach_sketcher(index)
     executor = None
     if args.erode_days:
         plan = demo_erosion_plan(cfg, spec, args.erode_days)
@@ -92,7 +102,7 @@ def main(argv=None):
 
     sched.start()
     mid_results = []
-    with VStoreServer(vs, cfg, workers=args.workers) as srv:
+    with VStoreServer(vs, cfg, workers=args.workers, index=index) as srv:
         srv.attach_ingest(sched, executor)
         t0 = time.perf_counter()
         n_arrived = 0
@@ -137,6 +147,14 @@ def main(argv=None):
         print(f"\nbudget raised -> drained remaining debt in "
               f"{time.perf_counter() - t0:.2f}s "
               f"(debt now {sched.debt_seconds():.2f}s)")
+        if index is not None:
+            index.flush()
+            ist = sched.stats()
+            print(f"sketches: {ist['sketches']} built in "
+                  f"{ist['sketch_s']:.2f}s (budget-charged; "
+                  f"{ist['sketch_pending']} still pending), "
+                  f"{st['index_pruned_segments']} segments pruned "
+                  f"mid-ingest by pushdown")
 
         # verify: mid-ingest answers identical to the materialized store
         ok = True

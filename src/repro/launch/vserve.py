@@ -23,9 +23,11 @@ from ..serving import VStoreServer
 from ..videostore import VideoStore
 
 
-def demo_config(accuracies=(0.8, 0.9)) -> DerivedConfig:
+def demo_config(accuracies=(0.8, 0.9), index_ops=None) -> DerivedConfig:
     """Hand-built two-SF configuration (skips profiling so the launcher
-    starts in seconds; ``repro.core.derive_config`` is the real path)."""
+    starts in seconds; ``repro.core.derive_config`` is the real path).
+    ``index_ops`` enables ingest-time semantic indexing (repro.index) of
+    those cascade-head ops, e.g. ``("diff", "motion")``."""
     cf_diff = FidelityOption("good", 1.0, 270, 1 / 2)
     cf_snn = FidelityOption("good", 1.0, 360, 1 / 2)
     cf_motion = FidelityOption("bad", 1.0, 180, 1 / 5)
@@ -53,7 +55,8 @@ def demo_config(accuracies=(0.8, 0.9)) -> DerivedConfig:
         budget_met = True
 
     return DerivedConfig(plans=plans, nodes=[fast, golden],
-                         coalesce_log=_Log())
+                         coalesce_log=_Log(),
+                         index_ops=(tuple(index_ops) if index_ops else None))
 
 
 def demo_erosion_plan(cfg: DerivedConfig, spec: IngestSpec, days: int):
@@ -93,6 +96,16 @@ def main(argv=None):
                     help="max time a non-full fused batch waits for "
                          "co-batching partners (fairness knob for "
                          "--cross-query-batching)")
+    ap.add_argument("--index", action="store_true",
+                    help="build an ingest-time semantic index of the "
+                         "cascade-head ops and serve queries with exact "
+                         "predicate pushdown (skip sketched-inactive "
+                         "segments before the decoder)")
+    ap.add_argument("--pushdown", default="exact",
+                    choices=("exact", "conservative", "off"),
+                    help="pushdown mode for --index: exact (bit-identical "
+                         "results) or conservative (also prunes across "
+                         "knob mismatches; bounded recall loss)")
     ap.add_argument("--baseline", action="store_true",
                     help="also time the same workload as sequential "
                          "run_query calls")
@@ -104,7 +117,7 @@ def main(argv=None):
         from ..obs import enable
         enable(True)
 
-    cfg = demo_config()
+    cfg = demo_config(index_ops=("diff", "motion") if args.index else None)
     shutil.rmtree(args.root, ignore_errors=True)
     spec = IngestSpec()
     vs = VideoStore(os.path.join(args.root, "store"), spec)
@@ -116,6 +129,19 @@ def main(argv=None):
     print(f"ingested {args.segments} segments x {len(vs.formats)} formats "
           f"in {time.perf_counter() - t0:.1f}s "
           f"({vs.storage_bytes(args.stream)} bytes)")
+
+    index = None
+    if args.index:
+        from ..index import SemanticIndex
+        index = SemanticIndex(os.path.join(args.root, "index"), spec, cfg)
+        t0 = time.perf_counter()
+        for seg in range(args.segments):
+            for op in cfg.index_ops:
+                index.build(vs, args.stream, seg, op)
+        index.flush()
+        print(f"indexed {cfg.index_ops} sketches for {args.segments} "
+              f"segments in {time.perf_counter() - t0:.1f}s "
+              f"({index.store.total_bytes()} bytes)")
 
     segs = list(range(args.segments))
     mix = [("A", a) for a in (0.8, 0.9)] + [("B", a) for a in (0.8, 0.9)]
@@ -145,7 +171,8 @@ def main(argv=None):
                       batch_segments=args.batch_segments,
                       collapse=not args.no_collapse,
                       cross_query_batching=args.cross_query_batching,
-                      batch_max_wait_ms=args.batch_max_wait_ms) as srv:
+                      batch_max_wait_ms=args.batch_max_wait_ms,
+                      index=index, pushdown=args.pushdown) as srv:
         t0 = time.perf_counter()
         results = srv.run_batch(subs)
         wall = time.perf_counter() - t0
@@ -172,6 +199,12 @@ def main(argv=None):
     print(f"planner: {stats['decodes']} decodes, "
           f"{stats['coalesced_cfs']} CFs coalesced, "
           f"{stats['collapsed']} queries collapsed")
+    if args.index:
+        print(f"index: {stats['index_sketches']} sketches, "
+              f"{stats['index_lookups']} lookups -> "
+              f"{stats['index_pruned_segments']} segments / "
+              f"{stats['index_pruned_bytes']} bytes pruned before the "
+              f"decoder ({stats['index_pruned_conservative']} conservative)")
     if args.cross_query_batching:
         print(f"scheduler: {stats['sched_detect_calls']} fused detects over "
               f"{stats['sched_units']} units "

@@ -23,7 +23,7 @@ import numpy as np
 from ..analytics.batch import DEFAULT_BATCH_SHAPES, BatchedConsumer
 from ..analytics.operators import _positions
 from ..analytics.query import (QueryResult, StageStats, _active_frame_mask,
-                               stage_specs)
+                               apply_pushdown, stage_specs)
 from ..obs import trace as obs
 
 
@@ -32,7 +32,8 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
                   prefetch_depth: int = 1,
                   batch_segments: int = 4,
                   batch_shapes: tuple[int, ...] | None = None,
-                  scheduler=None) -> QueryResult:
+                  scheduler=None, index=None, pushdown: str = "exact",
+                  deadline_ms: float | None = None) -> QueryResult:
     """Execute a cascade with retrieval/consumption overlap.
 
     ``retriever`` has ``store.retrieve``'s signature (the serving layer
@@ -53,6 +54,14 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
     ``frames`` are exact only summed across the server's queries.
     ``StageStats.consume_s`` then counts time blocked on the shared
     scheduler's futures, mirroring ``retrieve_s``.
+
+    ``index`` enables predicate pushdown (see ``apply_pushdown`` in
+    repro.analytics.query): sketched-inactive segments are pruned before
+    any retrieval or prefetch — ``"exact"`` mode is bit-identical to the
+    unpruned run, ``"conservative"`` also prunes across knob mismatches.
+    ``deadline_ms`` is the query's SLO slack, forwarded to the shared
+    scheduler so this query's units are admitted in deadline order (EDF)
+    within the consumption queues instead of at the uniform max-wait.
     """
     if batch_segments < 0:
         raise ValueError(f"batch_segments must be >= 0, got {batch_segments}")
@@ -62,6 +71,11 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
                                 DEFAULT_BATCH_SHAPES)
                 if batch_segments and scheduler is None else None)
     group = batch_segments
+    specs = stage_specs(config, query, accuracy)
+    n_total = len(segments)  # video_seconds covers pruned segments too
+    segments, (n_pruned, pruned_bytes, n_cons) = apply_pushdown(
+        store, index, stream, segments, specs, accuracy, pushdown)
+    deadline_s = None if deadline_ms is None else deadline_ms / 1e3
     stages: list[StageStats] = []
     active: dict[int, set] | None = None
     items_all: set = set()
@@ -81,7 +95,7 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
 
     with ThreadPoolExecutor(max_workers=max(1, prefetch_depth),
                             thread_name_prefix="vstore-prefetch") as pool:
-        for op_name, op, cf, sf_id in stage_specs(config, query, accuracy):
+        for op_name, op, cf, sf_id in specs:
             stage_span = obs.span(f"stage:{op_name}", op=op_name,
                                   cf=cf.name(), sf=sf_id)
             stage_span.__enter__()
@@ -135,7 +149,7 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
                         # it with other in-flight queries' work
                         fut, owner = scheduler.enqueue(
                             op_name, op, cf, stream, seg, sf_id,
-                            frames[sel], pos[sel])
+                            frames[sel], pos[sel], deadline_s=deadline_s)
                         waits.append((seg, fut, owner))
                         continue
                     if consumer is None:  # per-segment detect, exact shapes
@@ -181,6 +195,8 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
                            detect_calls=st.detect_calls)
             stage_span.__exit__(None, None, None)
 
-    dur = len(segments) * spec.segment_seconds
+    dur = n_total * spec.segment_seconds
     return QueryResult(items=items_all, stages=stages, video_seconds=dur,
-                       wall_s=time.perf_counter() - t_start)
+                       wall_s=time.perf_counter() - t_start,
+                       pruned_segments=n_pruned, pruned_bytes=pruned_bytes,
+                       pruned_conservative=n_cons)

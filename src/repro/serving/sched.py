@@ -14,9 +14,13 @@ Mechanics, in the order work flows:
 
 * **Per-(op, cf) queues.**  A work unit is one segment's activated frames
   for one cascade stage; units for the same ``(op, cf)`` are batchable (one
-  jit cache, one shape ladder) and queue together.  Queues are FIFO, so
-  within a queue the head is always the oldest — arrival order *is*
-  deadline order under a uniform max-wait.
+  jit cache, one shape ladder) and queue together.  Queues are kept in
+  deadline order (earliest-deadline-first *within* the queue, not just
+  across queues): under the uniform default max-wait that degenerates to
+  FIFO, but a query admitted with a per-query SLO (``deadline_s``) is
+  inserted ahead of laxer work that arrived earlier, so tight-deadline
+  units neither wait out the full batching timer behind bulk traffic nor
+  reorder anything when every query runs at the default.
 
 * **Cross-query work dedup.**  The unit's identity is
   ``(stream, seg, sf_id, op, cf, activated positions)``.  Store content is
@@ -66,7 +70,7 @@ from ..analytics.batch import DEFAULT_BATCH_SHAPES, BatchedConsumer
 from ..obs.trace import span as _span
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)  # identity eq: frames arrays don't compare
 class WorkUnit:
     """One segment's activated frames for one cascade stage of one query."""
     key: tuple                # (stream, seg, sf_id, op_name, cf, pos_bytes)
@@ -75,7 +79,7 @@ class WorkUnit:
     frames: np.ndarray
     positions: np.ndarray
     future: Future
-    deadline: float           # enqueue time + max_wait
+    deadline: float           # enqueue time + SLO slack (max_wait default)
     waiters: int = 1          # queries attached to this unit's future
 
 
@@ -137,8 +141,8 @@ class ConsumptionScheduler:
 
     # -- enqueue -------------------------------------------------------------
     def enqueue(self, op_name: str, op, cf, stream: str, seg: int,
-                sf_id: str, frames: np.ndarray, positions: np.ndarray
-                ) -> tuple[Future, bool]:
+                sf_id: str, frames: np.ndarray, positions: np.ndarray,
+                deadline_s: float | None = None) -> tuple[Future, bool]:
         """Queue one segment's activated frames for a fused detect; returns
         ``(future, owner)`` where the future resolves to ``(items,
         stats_share)`` with items in the segment's local position
@@ -146,26 +150,60 @@ class ConsumptionScheduler:
         stream/seg/sf/op/cf *and* activated positions) is shared instead of
         re-queued — then ``owner`` is False, and the caller must not count
         the stats share (exactly one owner per unit keeps server-wide sums
-        exact)."""
+        exact).
+
+        ``deadline_s`` is the query's SLO slack: the unit's batching
+        deadline becomes ``now + deadline_s`` instead of the uniform
+        ``now + max_wait_s``, and the unit is admitted in deadline order
+        within its queue (EDF), ahead of laxer work that arrived earlier.
+        Attaching to an existing unit *tightens* that unit's deadline if
+        the newcomer's is earlier — a shared detect serves its most
+        urgent waiter."""
         pos = np.asarray(positions, np.int64)
         key = (stream, int(seg), sf_id, op_name, cf, pos.tobytes())
         qkey = (op_name, cf)
+        wait = self.max_wait_s if deadline_s is None else max(0.0, deadline_s)
         with self._mu:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
+            deadline = time.perf_counter() + wait
             unit = self._by_key.get(key)
             if unit is not None:
                 unit.waiters += 1
                 self._deduped += 1
+                if deadline < unit.deadline:
+                    unit.deadline = deadline
+                    self._reinsert_locked(qkey, unit)
+                    self._work.notify()
                 return unit.future, False
             unit = WorkUnit(key=key, op=op, cf=cf, frames=frames,
                             positions=pos, future=Future(),
-                            deadline=time.perf_counter() + self.max_wait_s)
+                            deadline=deadline)
             self._by_key[key] = unit
-            self._queues.setdefault(qkey, deque()).append(unit)
+            self._insert_locked(qkey, unit)
             self._enqueued += 1
             self._work.notify()
             return unit.future, True
+
+    def _insert_locked(self, qkey: tuple, unit: WorkUnit) -> None:
+        """Deadline-ordered insert (EDF within the queue).  Uniform
+        deadlines append at the tail in O(1) — the scan only walks past
+        units a per-query SLO made laxer than the newcomer."""
+        q = self._queues.setdefault(qkey, deque())
+        i = len(q)
+        while i > 0 and q[i - 1].deadline > unit.deadline:
+            i -= 1
+        q.insert(i, unit)
+
+    def _reinsert_locked(self, qkey: tuple, unit: WorkUnit) -> None:
+        """Re-position a still-queued unit whose deadline just tightened
+        (dedup attach).  The unit may already be dispatched and gone from
+        its queue — then there is nothing to reorder."""
+        q = self._queues.get(qkey)
+        if q is None or unit not in q:
+            return
+        q.remove(unit)
+        self._insert_locked(qkey, unit)
 
     # -- dispatcher ----------------------------------------------------------
     def _pick_locked(self, now: float, max_shape: int

@@ -54,13 +54,17 @@ class QueryRequest:
     # the server starts a fresh trace if tracing is enabled
     trace_id: int = 0
     parent_span: int = 0
+    # per-query SLO slack in ms; 0 means "no deadline" — the consumption
+    # scheduler then batches this query's units at the uniform max-wait
+    deadline_ms: float = 0.0
 
     def to_wire(self) -> dict:
         return {"query": self.query, "stream": self.stream,
                 "segments": [int(s) for s in self.segments],
                 "accuracy": float(self.accuracy), "block": self.block,
                 "trace_id": int(self.trace_id),
-                "parent_span": int(self.parent_span)}
+                "parent_span": int(self.parent_span),
+                "deadline_ms": float(self.deadline_ms)}
 
     @staticmethod
     def from_wire(d: dict) -> "QueryRequest":
@@ -68,7 +72,8 @@ class QueryRequest:
                             [int(s) for s in d["segments"]],
                             float(d["accuracy"]), bool(d.get("block", False)),
                             int(d.get("trace_id", 0)),
-                            int(d.get("parent_span", 0)))
+                            int(d.get("parent_span", 0)),
+                            float(d.get("deadline_ms", 0.0)))
 
 
 def recovery_rank_for(config, spec, profiler=None) -> dict[str, float]:
@@ -103,7 +108,8 @@ class VStoreServer:
                  attach: bool = False, collapse: bool = True,
                  cache_policy: str = "lru",
                  cross_query_batching: bool = False,
-                 batch_max_wait_ms: float = 4.0):
+                 batch_max_wait_ms: float = 4.0,
+                 index=None, pushdown: str = "exact"):
         """``cache_policy`` selects the decoded-segment cache's eviction
         order: ``"lru"`` (default) or ``"erosion"`` — evict the entry whose
         storage format is cheapest to recover (``recovery_rank_for``), so
@@ -117,15 +123,27 @@ class VStoreServer:
         *across* concurrent queries and duplicate ``(stream, segment, op,
         cf)`` work dedups at frame granularity (see sched.py).
         ``batch_max_wait_ms`` bounds how long a non-full fused batch may
-        wait for co-batching partners — the fairness knob."""
+        wait for co-batching partners — the fairness knob.
+
+        ``index`` (a ``repro.index.SemanticIndex``) enables predicate
+        pushdown: sketched-inactive segments are pruned before retrieval.
+        ``pushdown`` sets the mode every query runs at — ``"exact"``
+        (bit-identical results), ``"conservative"`` (also prunes across
+        knob mismatches when the sketch's accuracy dominates; bounded
+        recall loss, surfaced in ``QueryResult.pruned_conservative``), or
+        ``"off"``."""
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
         if cache_policy not in ("lru", "erosion"):
             raise ValueError(f"unknown cache_policy {cache_policy!r}")
+        if pushdown not in ("exact", "conservative", "off"):
+            raise ValueError(f"unknown pushdown mode {pushdown!r}")
         self.store = store
         self.config = config
+        self.index = index
+        self.pushdown = pushdown
         rank = (recovery_rank_for(config, store.spec)
                 if cache_policy == "erosion" else None)
         self.cache = DecodedSegmentCache(cache_bytes, recovery_rank=rank)
@@ -162,14 +180,18 @@ class VStoreServer:
     # -- submission ----------------------------------------------------------
     def submit(self, query: str, stream: str, segments: list[int],
                accuracy: float, block: bool = False,
-               trace: tuple[int, int] = (0, 0)) -> QueryTicket:
+               trace: tuple[int, int] = (0, 0),
+               deadline_ms: float | None = None) -> QueryTicket:
         """Admit one cascade query; returns a ticket whose ``result()``
         yields the QueryResult.  Rejects with AdmissionError at capacity
         unless ``block`` (then waits for a slot).  An identical query
         already in flight is collapsed: the ticket shares its execution
         (and consumes no worker slot).  ``trace`` is an optional
         ``(trace_id, parent_span)`` context the execution's spans parent
-        under (a collapsed duplicate keeps the leader's context)."""
+        under (a collapsed duplicate keeps the leader's context).
+        ``deadline_ms`` is this query's SLO slack — its consumption units
+        are admitted in deadline order within the shared scheduler's
+        queues instead of at the uniform batching max-wait."""
         live_key = (query, stream, tuple(segments), accuracy)
         # resolved before taking an admission slot so a bad query name
         # raises without leaking in-flight accounting
@@ -210,7 +232,8 @@ class VStoreServer:
         self.planner.register_query(requests)
         try:
             self._pool.submit(self._run, fut, query, stream, segments,
-                              accuracy, requests, live_key, trace)
+                              accuracy, requests, live_key, trace,
+                              deadline_ms)
         except BaseException as e:  # pool shut down: roll back the slot
             self.planner.release_query(requests)
             with self._mu:
@@ -230,7 +253,7 @@ class VStoreServer:
         self.metrics.inc("video_seconds", res.video_seconds)
 
     def _run(self, fut, query, stream, segments, accuracy, requests,
-             live_key, trace=(0, 0)) -> None:
+             live_key, trace=(0, 0), deadline_ms=None) -> None:
         try:
             # adopt the caller's trace context (a router's rpc span when
             # the request came over the wire) and wrap the execution in a
@@ -245,10 +268,18 @@ class VStoreServer:
                                     prefetch_depth=self.prefetch_depth,
                                     batch_segments=self.batch_segments,
                                     batch_shapes=self.batch_shapes,
-                                    scheduler=self.sched)
+                                    scheduler=self.sched,
+                                    index=self.index,
+                                    pushdown=self.pushdown,
+                                    deadline_ms=deadline_ms)
             self.metrics.inc("completed")
             self.metrics.inc("video_seconds", res.video_seconds)
             self.metrics.inc("query_wall_s", res.wall_s)
+            if res.pruned_segments:
+                self.metrics.inc("index_pruned_segments", res.pruned_segments)
+                self.metrics.inc("index_pruned_bytes", res.pruned_bytes)
+                self.metrics.inc("index_pruned_conservative",
+                                 res.pruned_conservative)
             self._h_latency.observe(res.wall_s)
             self.drift.observe(accuracy, res)
             fut.set_result(res)
@@ -267,7 +298,8 @@ class VStoreServer:
         shard worker calls after unpacking a router frame)."""
         return self.submit(req.query, req.stream, req.segments, req.accuracy,
                            block=req.block,
-                           trace=(req.trace_id, req.parent_span))
+                           trace=(req.trace_id, req.parent_span),
+                           deadline_ms=req.deadline_ms or None)
 
     def run_batch(self, submissions: list[tuple], block: bool = True
                   ) -> list[QueryResult]:
@@ -321,6 +353,14 @@ class VStoreServer:
         planner = self.planner.stats()
         sched = (self.sched.stats() if self.sched is not None
                  else ConsumptionScheduler.zero_stats())
+        # index stats are always emitted (zeros without an index) so the
+        # cluster rollup sums the same keys on every shard; the pruned_*
+        # counters accrue on the metrics registry as queries complete
+        index = {"index_sketches": 0, "index_builds": 0,
+                 "index_build_s": 0.0, "index_lookups": 0,
+                 "index_invalidated": 0, "index_bytes": 0}
+        if self.index is not None:
+            index.update(self.index.stats())
         with self._mu:
             inflight = self._inflight
         # live occupancy as *gauges* (last-write-wins point-in-time reads,
@@ -359,6 +399,12 @@ class VStoreServer:
             "dct_backend": dct_backend(),
             "gauges": snap["gauges"],
             **sched,
+            **index,
+            "index_pruned_segments":
+                int(counters.get("index_pruned_segments", 0)),
+            "index_pruned_bytes": int(counters.get("index_pruned_bytes", 0)),
+            "index_pruned_conservative":
+                int(counters.get("index_pruned_conservative", 0)),
             **planner,
         }
 

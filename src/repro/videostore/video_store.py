@@ -449,6 +449,15 @@ class VideoStore:
                 res.victims.append(int(s))
         return res
 
+    def segment_bytes(self, stream: str, seg: int, sf_id: str) -> int:
+        """Stored size of one materialized blob, 0 when absent (eroded or
+        not yet transcoded) — what predicate pushdown reports as bytes a
+        pruned segment never read."""
+        try:
+            return self.backend.size_of(_sf_key(sf_id, stream, seg))
+        except KeyError:
+            return 0
+
     def storage_bytes(self, stream: str | None = None) -> int:
         return self.backend.total_bytes(f"{stream}:" if stream else "")
 

@@ -1,0 +1,426 @@
+"""Semantic index subsystem (repro.index): IndexStore crash-safety,
+scheduler-driven sketch builds and backfill, and predicate pushdown —
+including the load-bearing property that exact-match pushdown is
+bit-identical to the unpruned cascade."""
+
+import os
+
+import numpy as np
+import pytest
+
+from _hyp_compat import given, settings, st
+from repro.analytics import generate_segment
+from repro.analytics.query import run_query
+from repro.core.coalesce import SFNode
+from repro.core.configure import DerivedConfig
+from repro.core.consumption import Consumer, ConsumerPlan
+from repro.core.knobs import (GOLDEN_CODING, RAW, CodingOption,
+                              FidelityOption, IngestSpec)
+from repro.index import IndexStore, SemanticIndex, SketchRecord, sketch_specs
+from repro.index.sketch import _key, segment_buckets
+from repro.ingest import IngestScheduler
+from repro.videostore import VideoStore
+
+SPEC = IngestSpec()
+
+# full sampling: at 1/5 the per-frame change rate (score / gap) never
+# clears Diff's threshold, so every sketch would be empty
+CF_LOW = FidelityOption("bad", 1.0, 180, 1.0)
+CF_MID = FidelityOption("good", 1.0, 360, 1 / 2)
+CF_HI = FidelityOption("best", 1.0, 540, 1.0)  # golden: richer-eq the rest
+
+
+def _mini_config(index_ops=("diff",)) -> DerivedConfig:
+    """Three-format chain with query A's cascade subscribed across it and
+    ingest-time indexing of the cascade head (hand-built: no profiling)."""
+    plans = [
+        ConsumerPlan(Consumer("diff", 0.8), CF_LOW, 0.85, 2000.0),
+        ConsumerPlan(Consumer("snn", 0.8), CF_MID, 0.86, 400.0),
+        ConsumerPlan(Consumer("nn", 0.8), CF_HI, 0.82, 30.0),
+    ]
+    nodes = [
+        SFNode(CF_LOW, RAW, [plans[0]]),
+        SFNode(CF_MID, CodingOption("fast", 10), [plans[1]]),
+        SFNode(CF_HI, GOLDEN_CODING, [plans[2]], golden=True),
+    ]
+
+    class _Log:
+        ingest_cost = storage_cost = 0.0
+        rounds = []
+        budget_met = True
+
+    _Log.nodes = nodes
+    return DerivedConfig(plans=plans, nodes=nodes, coalesce_log=_Log(),
+                         index_ops=tuple(index_ops))
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return _mini_config()
+
+
+def _static_frames() -> np.ndarray:
+    """A segment with nothing happening: zero diff/motion activations, so
+    its sketch is empty and pushdown may prune it."""
+    return np.full((SPEC.frames_per_segment, SPEC.height, SPEC.width), 127,
+                   np.uint8)
+
+
+def _busy_frames() -> np.ndarray:
+    """Alternate-frame brightness flicker: a global mean-abs-diff of
+    60/255 per frame, far over Diff's threshold and immune to the
+    smoothing the quality knob applies — every bucket activates,
+    deterministically (scene simulation is too marginal at sketch
+    knobs to guarantee that)."""
+    frames = np.full((SPEC.frames_per_segment, SPEC.height, SPEC.width),
+                     100, np.uint8)
+    frames[::2] += 60
+    return frames
+
+
+def _store(tmp_path, cfg, active=(0,), static=(1, 2)) -> VideoStore:
+    vs = VideoStore(str(tmp_path / "vs"), SPEC)
+    vs.set_formats(cfg.storage_formats())
+    for seg in active:
+        vs.ingest_segment("jackson", seg, _busy_frames())
+    for seg in static:
+        vs.ingest_segment("jackson", seg, _static_frames())
+    return vs
+
+
+def _index_for(tmp_path, cfg, vs, segments) -> SemanticIndex:
+    idx = SemanticIndex(str(tmp_path / "idx"), SPEC, cfg)
+    for seg in segments:
+        for op in idx.ops:
+            idx.build(vs, "jackson", seg, op)
+    idx.flush()
+    return idx
+
+
+# -- IndexStore crash-safety -------------------------------------------------
+
+def test_index_store_roundtrip_and_reload(tmp_path):
+    s = IndexStore(str(tmp_path / "i"))
+    s.put("a", b"alpha")
+    s.put("b", b"beta")
+    s.flush()
+    assert s.get("a") == b"alpha" and len(s) == 2
+    assert s.keys("a") == ["a"]
+    again = IndexStore(str(tmp_path / "i"))
+    assert again.get("b") == b"beta" and len(again) == 2
+
+
+def test_index_store_truncates_unacked_tail(tmp_path):
+    """A crash after put but before flush: the record is unacked; reload
+    discards the log tail instead of serving (or tripping over) it."""
+    s = IndexStore(str(tmp_path / "i"))
+    s.put("acked", b"durable")
+    s.flush()
+    s.put("unacked", b"lost-by-crash")  # no flush: crash swallows it
+    again = IndexStore(str(tmp_path / "i"))
+    assert "acked" in again and "unacked" not in again
+    assert again.truncated_bytes == len(b"lost-by-crash")
+    # the truncation is real: a new put lands where the torn tail was
+    again.put("next", b"fresh")
+    again.flush()
+    assert IndexStore(str(tmp_path / "i")).get("next") == b"fresh"
+
+
+def test_index_store_torn_record_never_addressable(tmp_path):
+    """Garbage appended to the active log (a torn final write) is cut on
+    reload — every indexed record remains byte-exact."""
+    s = IndexStore(str(tmp_path / "i"))
+    s.put("k", b"value")
+    s.flush()
+    log = next(n for n in os.listdir(s.root) if n.startswith("log-"))
+    with open(os.path.join(s.root, log), "ab") as f:
+        f.write(b"\xff" * 17)  # half-written record
+    again = IndexStore(str(tmp_path / "i"))
+    assert again.get("k") == b"value"
+    assert again.truncated_bytes == 17
+
+
+def test_index_store_rejects_foreign_log(tmp_path):
+    s = IndexStore(str(tmp_path / "i"))
+    s.put("k", b"v")
+    s.flush()
+    log = next(n for n in os.listdir(s.root) if n.startswith("log-"))
+    path = os.path.join(s.root, log)
+    with open(path, "r+b") as f:
+        f.write(b"NOTANIDX")
+    with pytest.raises(ValueError, match="bad header"):
+        IndexStore(str(tmp_path / "i"))
+
+
+def test_index_store_sweeps_orphan_logs(tmp_path):
+    s = IndexStore(str(tmp_path / "i"))
+    s.put("k", b"v")
+    s.flush()
+    orphan = os.path.join(s.root, "log-0099.bin")
+    with open(orphan, "wb") as f:
+        f.write(b"VIDX0001garbage-from-a-crashed-compaction")
+    again = IndexStore(str(tmp_path / "i"))
+    assert not os.path.exists(orphan)
+    assert again.get("k") == b"v"
+
+
+def test_index_store_readonly_never_mutates(tmp_path):
+    s = IndexStore(str(tmp_path / "i"))
+    s.put("k", b"v")
+    s.flush()
+    s.put("tail", b"unflushed")
+    orphan = os.path.join(s.root, "log-0099.bin")
+    with open(orphan, "wb") as f:
+        f.write(b"VIDX0001x")
+    sizes = {n: os.path.getsize(os.path.join(s.root, n))
+             for n in os.listdir(s.root)}
+    ro = IndexStore(str(tmp_path / "i"), readonly=True)
+    assert ro.get("k") == b"v"
+    with pytest.raises(RuntimeError, match="read-only"):
+        ro.put("x", b"y")
+    with pytest.raises(RuntimeError, match="read-only"):
+        ro.delete("k")
+    assert os.path.exists(orphan)  # no sweep
+    assert sizes == {n: os.path.getsize(os.path.join(s.root, n))
+                     for n in os.listdir(s.root)}  # no truncation
+
+
+def test_index_store_compaction_preserves_records(tmp_path):
+    s = IndexStore(str(tmp_path / "i"), auto_compact_frac=None)
+    for i in range(50):
+        s.put(f"k{i:02d}", bytes([i]) * 40)
+    for i in range(0, 50, 2):
+        s.delete(f"k{i:02d}")
+    s.put("k01", b"rewritten")  # overwrite: more dead bytes
+    before = {k: s.get(k) for k in s.keys()}
+    s.compact()
+    assert s.compactions == 1
+    assert {k: s.get(k) for k in s.keys()} == before
+    # durable across reload, and the old logs are gone
+    again = IndexStore(str(tmp_path / "i"))
+    assert {k: again.get(k) for k in again.keys()} == before
+
+
+def test_index_store_auto_compacts_on_dead_fraction(tmp_path):
+    s = IndexStore(str(tmp_path / "i"), auto_compact_frac=0.5,
+                   auto_compact_min_bytes=64)
+    for _ in range(8):
+        s.put("hot", os.urandom(64))  # every overwrite deadens 64 bytes
+    assert s.compactions >= 1
+    assert len(s) == 1
+
+
+# -- sketch build + prune ----------------------------------------------------
+
+def test_sketch_specs_resolve_head_knobs(cfg):
+    specs = sketch_specs(cfg)
+    assert set(specs) == {"diff"}
+    _op, cf, sf_id, acc = specs["diff"]
+    assert cf == CF_LOW and sf_id == cfg.subscription(CF_LOW)
+    assert acc == 0.8
+    with pytest.raises(KeyError):
+        sketch_specs(cfg, ops=("ocr",))  # no plan in the mini config
+
+
+def test_build_records_activations(tmp_path, cfg):
+    vs = _store(tmp_path, cfg)
+    idx = _index_for(tmp_path, cfg, vs, [0, 1, 2])
+    busy = idx.get("jackson", 0, "diff")
+    quiet = idx.get("jackson", 1, "diff")
+    assert busy.buckets and busy.items > 0
+    assert busy.n_buckets == segment_buckets(SPEC)
+    assert quiet.buckets == () and quiet.items == 0
+    assert quiet.quantiles == (0.0, 0.0, 0.0, 0.0)
+
+
+def test_prune_exact_only_on_matching_knobs(tmp_path, cfg):
+    vs = _store(tmp_path, cfg)
+    idx = _index_for(tmp_path, cfg, vs, [0, 1, 2])
+    _op, cf, sf_id, _acc = idx.specs["diff"]
+    dec = idx.prune("jackson", [0, 1, 2, 7], "diff", cf, sf_id, 0.8)
+    assert dec.kept == [0, 7] and dec.pruned == [1, 2]
+    assert dec.missing == 1 and dec.conservative == 0
+    # knob mismatch: exact mode must keep the empty-sketch segments
+    other = FidelityOption("good", 0.5, 360, 1 / 2)
+    dec = idx.prune("jackson", [1, 2], "diff", other, sf_id, 0.8)
+    assert dec.kept == [1, 2] and not dec.pruned
+
+
+def test_prune_conservative_requires_dominating_accuracy(tmp_path, cfg):
+    vs = _store(tmp_path, cfg)
+    idx = _index_for(tmp_path, cfg, vs, [1])
+    _op, _cf, sf_id, _acc = idx.specs["diff"]
+    other = FidelityOption("good", 0.5, 360, 1 / 2)
+    # sketch accuracy 0.8 >= query 0.8: conservative prunes the mismatch
+    dec = idx.prune("jackson", [1], "diff", other, sf_id, 0.8,
+                    mode="conservative")
+    assert dec.pruned == [1] and dec.conservative == 1
+    # query wants more accuracy than the sketch was built at: keep
+    dec = idx.prune("jackson", [1], "diff", other, sf_id, 0.95,
+                    mode="conservative")
+    assert dec.kept == [1] and dec.conservative == 0
+    with pytest.raises(ValueError):
+        idx.prune("jackson", [1], "diff", other, sf_id, 0.8, mode="bogus")
+
+
+def test_run_query_pushdown_exact_bit_identical(tmp_path, cfg):
+    """Pushdown over real street scenes (which survive the whole cascade:
+    the identity is over a non-empty item set) mixed with static
+    segments pushdown prunes."""
+    vs = VideoStore(str(tmp_path / "vs"), SPEC)
+    vs.set_formats(cfg.storage_formats())
+    for seg in (1, 5, 6):  # scenes with diff activations AND cascade items
+        frames, _ = generate_segment("jackson", seg, SPEC)
+        vs.ingest_segment("jackson", seg, frames)
+    for seg in (0, 2, 3):
+        vs.ingest_segment("jackson", seg, _static_frames())
+    segs = [0, 1, 2, 3, 5, 6]
+    idx = _index_for(tmp_path, cfg, vs, segs)
+    plain = run_query(vs, cfg, "A", "jackson", segs, 0.8)
+    pushed = run_query(vs, cfg, "A", "jackson", segs, 0.8, index=idx)
+    assert plain.items  # non-trivial identity
+    assert pushed.items == plain.items
+    assert pushed.pruned_segments == 3 and pushed.pruned_bytes > 0
+    assert pushed.pruned_conservative == 0
+    assert pushed.video_seconds == plain.video_seconds  # pruned still count
+    # the pruned segments were never retrieved by stage 0
+    assert pushed.stages[0].segments_scanned \
+        == plain.stages[0].segments_scanned - 3
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=5),
+       st.sets(st.integers(0, 4), max_size=5),
+       st.sampled_from(["A"]))
+def test_pushdown_bit_identity_property(tmp_path_factory, layout, subset,
+                                        query):
+    """THE pushdown contract: for any mix of busy/static segments and any
+    queried subset, exact-mode pushdown returns bit-identical items."""
+    tmp = tmp_path_factory.mktemp("prop")
+    cfg = _mini_config()
+    vs = VideoStore(str(tmp / "vs"), SPEC)
+    vs.set_formats(cfg.storage_formats())
+    for seg, busy in enumerate(layout):
+        vs.ingest_segment("jackson", seg,
+                          _busy_frames() if busy else _static_frames())
+    idx = SemanticIndex(str(tmp / "idx"), SPEC, cfg)
+    for seg in range(len(layout)):
+        idx.build(vs, "jackson", seg, "diff")
+    segs = sorted(s for s in subset if s < len(layout))
+    plain = run_query(vs, cfg, query, "jackson", list(segs), 0.8)
+    pushed = run_query(vs, cfg, query, "jackson", list(segs), 0.8, index=idx)
+    assert pushed.items == plain.items
+    n_static = sum(1 for s in segs if not layout[s])
+    assert pushed.pruned_segments == n_static
+
+
+# -- scheduler integration ---------------------------------------------------
+
+def test_scheduler_builds_sketches_under_budget(tmp_path, cfg):
+    vs = VideoStore(str(tmp_path / "vs"), SPEC)
+    vs.set_formats(cfg.storage_formats())
+    idx = SemanticIndex(str(tmp_path / "idx"), SPEC, cfg)
+    sched = IngestScheduler(vs, cfg, budget_x=0.0)  # nothing runs yet
+    sched.attach_sketcher(idx)
+    for seg in range(2):
+        sched.ingest("jackson", seg, _busy_frames())
+    st = sched.stats()
+    assert st["sketch_pending"] == 2 and st["sketches"] == 0
+    assert not idx.has_sketch("jackson", 0, "diff")
+    sched.drain()
+    st = sched.stats()
+    assert st["sketches"] == 2 and st["sketch_pending"] == 0
+    assert st["sketch_s"] > 0
+    assert all(idx.has_sketch("jackson", s, "diff") for s in (0, 1))
+    # sketch work was charged to the budget like a transcode
+    assert idx.stats()["index_builds"] == 2
+
+
+def test_scheduler_sketch_orders_after_source_transcode(tmp_path, cfg):
+    """A sketch task sorts immediately after its source format's transcode
+    of the same segment (tuple-prefix ordering), so the build usually
+    decodes a materialized blob instead of walking the fallback chain."""
+    vs = VideoStore(str(tmp_path / "vs"), SPEC)
+    vs.set_formats(cfg.storage_formats())
+    idx = SemanticIndex(str(tmp_path / "idx"), SPEC, cfg)
+    sched = IngestScheduler(vs, cfg, budget_x=0.0)
+    sched.attach_sketcher(idx)
+    sched.ingest("jackson", 0, _busy_frames())
+    src = idx.specs["diff"][2]
+    with sched._mu:
+        kinds = [(t.sf_id, t.kind) for t in sched._queue]
+    assert (src, "sketch") in kinds
+    assert kinds.index((src, "sketch")) == kinds.index((src, "transcode")) + 1
+
+
+def test_scheduler_reingest_invalidates_sketch(tmp_path, cfg):
+    vs = VideoStore(str(tmp_path / "vs"), SPEC)
+    vs.set_formats(cfg.storage_formats())
+    idx = SemanticIndex(str(tmp_path / "idx"), SPEC, cfg)
+    sched = IngestScheduler(vs, cfg)
+    sched.attach_sketcher(idx)
+    sched.ingest("jackson", 0, _busy_frames())
+    sched.drain()
+    assert idx.get("jackson", 0, "diff").buckets  # busy footage
+    sched.ingest("jackson", 0, _static_frames())  # same segment, new footage
+    assert not idx.has_sketch("jackson", 0, "diff")  # stale sketch dropped
+    sched.drain()
+    assert idx.get("jackson", 0, "diff").buckets == ()  # rebuilt from new bytes
+    assert idx.stats()["index_invalidated"] == 1
+
+
+def test_adopt_missing_backfills_sketches(tmp_path, cfg):
+    """Footage ingested before the index existed (or whose sketch a crash
+    lost) gets sketch tasks from the same backlog sweep as transcodes."""
+    vs = _store(tmp_path, cfg, active=(0,), static=(1,))
+    idx = SemanticIndex(str(tmp_path / "idx"), SPEC, cfg)
+    sched = IngestScheduler(vs, cfg)
+    sched.attach_sketcher(idx)
+    n = sched.adopt_missing(["jackson"])
+    # every format is materialized (blocking ingest): the 2 missing
+    # sketches are the whole backlog
+    assert n == 2 and sched.stats()["sketch_pending"] == 2
+    # idempotent: queued tasks are not re-adopted
+    assert sched.adopt_missing(["jackson"]) == 0
+    sched.drain()
+    assert idx.get("jackson", 0, "diff").buckets
+    assert idx.get("jackson", 1, "diff").buckets == ()
+    assert sched.adopt_missing(["jackson"]) == 0  # everything materialized
+
+
+def test_sketch_survives_erosion_bit_exact(tmp_path, cfg):
+    """Eroding the sketch's source format must NOT invalidate sketches:
+    fallback reconstruction is bit-exact, so the pruned query still
+    matches the unpruned one over the eroded store."""
+    vs = _store(tmp_path, cfg, active=(0,), static=(1, 2))
+    idx = _index_for(tmp_path, cfg, vs, [0, 1, 2])
+    src = idx.specs["diff"][2]
+    # materialize everything, then erode the sketch source format
+    sched = IngestScheduler(vs, cfg)
+    sched.adopt_missing(["jackson"])
+    sched.drain()
+    vs.erode("jackson", src, 1.0)
+    assert not vs.has_segment("jackson", 0, src)
+    assert idx.has_sketch("jackson", 0, "diff")  # survived
+    plain = run_query(vs, cfg, "A", "jackson", [0, 1, 2], 0.8)
+    pushed = run_query(vs, cfg, "A", "jackson", [0, 1, 2], 0.8, index=idx)
+    assert pushed.items == plain.items and pushed.pruned_segments == 2
+
+
+def test_index_reload_serves_acked_sketches(tmp_path, cfg):
+    vs = _store(tmp_path, cfg, active=(0,), static=(1,))
+    idx = _index_for(tmp_path, cfg, vs, [0, 1])
+    reloaded = SemanticIndex(str(tmp_path / "idx"), SPEC, cfg)
+    assert reloaded.get("jackson", 0, "diff") == idx.get("jackson", 0, "diff")
+    assert reloaded.get("jackson", 1, "diff") == idx.get("jackson", 1, "diff")
+    pushed = run_query(vs, cfg, "A", "jackson", [0, 1], 0.8, index=reloaded)
+    assert pushed.pruned_segments == 1
+
+
+def test_missing_lists_backfill_pairs(tmp_path, cfg):
+    vs = _store(tmp_path, cfg, active=(0,), static=(1,))
+    idx = SemanticIndex(str(tmp_path / "idx"), SPEC, cfg)
+    assert idx.missing("jackson", [0, 1]) == [(0, "diff"), (1, "diff")]
+    idx.build(vs, "jackson", 0, "diff")
+    assert idx.missing("jackson", [0, 1]) == [(1, "diff")]
+    assert _key("jackson", "diff", 0) in idx.store

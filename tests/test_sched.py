@@ -3,7 +3,9 @@ concurrent queries through one scheduler return items bit-identical to
 sequential ``run_query`` (property-tested over mixed ops, accuracies and
 overlapping/disjoint segment sets, Diff included); duplicate work dedups at
 frame granularity with exact leader-attributed accounting; a lone low-rate
-unit meets the max-wait bound under duplicate-heavy load on another queue."""
+unit meets the max-wait bound under duplicate-heavy load on another queue;
+SLO deadlines reorder admission within a queue (EDF) without changing any
+query's items."""
 
 import functools
 import tempfile
@@ -173,6 +175,84 @@ def test_lone_unit_meets_max_wait_bound():
     finally:
         stop.set()
         sched.close()
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware admission: deadlines reorder within the queue (EDF)
+# ---------------------------------------------------------------------------
+
+def test_deadline_admission_is_edf_within_queue():
+    """Tight-deadline work is admitted ahead of laxer work that arrived
+    earlier; attaching a duplicate with an earlier deadline tightens the
+    shared unit (it serves its most urgent waiter); a laxer duplicate
+    changes nothing."""
+    sched = ConsumptionScheduler(IngestSpec(), max_wait_ms=10_000.0)
+    op = _CountingOp()
+    cf = FidelityOption("good", 1.0, 270, 1 / 2)
+    frames = np.zeros((4, 16, 16), np.uint8)
+    pos = np.arange(4, dtype=np.int64)
+    sched.producer_inc("op", cf)  # gate dispatch so order is observable
+    try:
+        sched.enqueue("op", op, cf, "s", 0, "sf", frames, pos)  # max-wait
+        sched.enqueue("op", op, cf, "s", 1, "sf", frames, pos, deadline_s=5.0)
+        sched.enqueue("op", op, cf, "s", 2, "sf", frames, pos, deadline_s=1.0)
+        with sched._mu:
+            order = [u.key[1] for u in sched._queues[("op", cf)]]
+        assert order == [2, 1, 0]  # EDF, not arrival order
+        # duplicate of seg 0 with a tighter deadline: the shared unit moves
+        fut, owner = sched.enqueue("op", op, cf, "s", 0, "sf", frames, pos,
+                                   deadline_s=0.5)
+        assert not owner  # attached, not re-queued
+        with sched._mu:
+            order = [u.key[1] for u in sched._queues[("op", cf)]]
+        assert order == [0, 2, 1]
+        # a laxer duplicate must NOT relax the unit back
+        sched.enqueue("op", op, cf, "s", 1, "sf", frames, pos,
+                      deadline_s=60.0)
+        with sched._mu:
+            order = [u.key[1] for u in sched._queues[("op", cf)]]
+        assert order == [0, 2, 1]
+    finally:
+        sched.producer_dec("op", cf)
+        sched.close()
+
+
+def test_deadline_overrides_max_wait_release():
+    """A unit with a tight SLO deadline dispatches when *its* deadline
+    expires, not the queue-wide max-wait — even while its producer is
+    still registered."""
+    sched = ConsumptionScheduler(IngestSpec(), max_wait_ms=10_000.0)
+    op = _CountingOp()
+    cf = FidelityOption("good", 1.0, 270, 1 / 2)
+    frames = np.zeros((8, 16, 16), np.uint8)
+    pos = np.arange(8, dtype=np.int64)
+    sched.producer_inc("op", cf)
+    try:
+        t0 = time.perf_counter()
+        fut, owner = sched.enqueue("op", op, cf, "s", 0, "sf", frames, pos,
+                                   deadline_s=0.05)
+        items, _share = fut.result(timeout=10)
+        waited = time.perf_counter() - t0
+        assert owner and items == set()
+        assert op.calls == [8]
+        assert waited < 2.0, waited  # nowhere near the 10s max-wait
+    finally:
+        sched.producer_dec("op", cf)
+        sched.close()
+
+
+def test_slo_deadline_queries_bit_identical():
+    """deadline_ms threads request -> server -> executor -> scheduler and
+    only reorders work: items stay exactly the sequential answers."""
+    vs, cfg = _built_store()
+    segs = list(range(N_SEGS))
+    with VStoreServer(vs, cfg, workers=2, cross_query_batching=True) as srv:
+        t1 = srv.submit("A", "jackson", segs, 0.8, block=True,
+                        deadline_ms=5.0)
+        t2 = srv.submit("B", "jackson", segs, 0.8, block=True)
+        r1, r2 = t1.result(120), t2.result(120)
+    assert r1.items == _golden("A", tuple(segs), 0.8)
+    assert r2.items == _golden("B", tuple(segs), 0.8)
 
 
 def test_enqueue_after_close_raises():

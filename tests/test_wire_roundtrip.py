@@ -22,6 +22,7 @@ from repro.core.configure import DerivedConfig
 from repro.core.consumption import Consumer, ConsumerPlan
 from repro.core.erosion import ErosionPlan
 from repro.core.knobs import CodingOption, FidelityOption, IngestSpec
+from repro.index import SketchRecord
 from repro.obs.trace import Span
 from repro.serving.server import QueryRequest
 
@@ -119,10 +120,16 @@ def _check_erosion_plan():
 FACTORIES = {
     "QueryRequest": lambda: _eq_roundtrip(
         QueryRequest("A", "cam0", [1, 2, 3], 0.9, block=True,
-                     trace_id=7, parent_span=9)),
+                     trace_id=7, parent_span=9, deadline_ms=12.5)),
     "QueryResult": lambda: _eq_roundtrip(
         QueryResult(items={(3, 0.5, "car"), (4, 0.25, "bus")},
-                    stages=[_stage()], video_seconds=12.0, wall_s=0.75)),
+                    stages=[_stage()], video_seconds=12.0, wall_s=0.75,
+                    pruned_segments=3, pruned_bytes=4096,
+                    pruned_conservative=1)),
+    "SketchRecord": lambda: _eq_roundtrip(
+        SketchRecord(op="diff", cf=_cf(), sf_id="sf1", accuracy=0.9,
+                     n_buckets=8, buckets=(1, 3, 5), items=7,
+                     quantiles=(1.0, 2.0, 3.0, 4.0))),
     "StageStats": lambda: _eq_roundtrip(_stage()),
     # Span has __slots__ and identity equality — compare wire dicts
     "Span": lambda: _wire_eq_roundtrip(_span()),
