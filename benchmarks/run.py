@@ -74,6 +74,7 @@ def main(argv=None) -> None:
         B.bench_decode_path,
         B.bench_fig13_overhead,
         B.bench_obs_overhead,
+        B.bench_telemetry_overhead,
         bench_roofline,
     ]
     if args.only:

@@ -66,6 +66,68 @@ def _wire_scalar(x):
 
 
 @dataclasses.dataclass
+class QueryCost:
+    """Per-query resource attribution: what *this* query cost the system.
+
+    The serving stack already tracks every one of these globally (planner
+    decode counters, cache stats, scheduler leader shares); this ledger
+    attributes them to the query that incurred them.  Fused-batch detect
+    accounting follows the PR 8 leader-share convention — a dispatch is
+    charged to the batch's leading unit's query — so summing the ledgers
+    across a server's queries equals the true fused cost (per-query values
+    are exact only in aggregate, like ``StageStats``).  Wall-clock fields:
+    ``queue_wait_s`` is admission-to-start wait under the server,
+    ``sched_wait_s`` is time blocked on shared-scheduler futures; deadline
+    fields are filled when the query ran under a ``deadline_ms`` SLO."""
+    decode_bytes: int = 0        # compressed bytes read off the store
+    decode_chunks: int = 0
+    decoded_frames: int = 0      # frames retrieval delivered
+    detect_frames: int = 0       # operator rows consumed (leader share)
+    detect_calls: int = 0        # fused op.detect dispatches (leader share)
+    cache_hits: int = 0          # decoded-segment cache: exact hits
+    cache_richer_hits: int = 0   # served bit-exactly from a richer CF
+    cache_inflight_hits: int = 0  # joined another query's in-flight decode
+    cache_misses: int = 0        # real decodes this query triggered
+    queue_wait_s: float = 0.0
+    sched_wait_s: float = 0.0
+    deadline_ms: float = 0.0     # 0 = ran without a deadline
+    deadline_slack_s: float = 0.0
+    deadline_met: bool = True
+
+    def to_wire(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_wire(d: dict) -> "QueryCost":
+        return QueryCost(**d)
+
+    def add(self, o: "QueryCost") -> None:
+        """Roll another query's (or sub-query's) ledger into this one:
+        counters and waits sum; deadline fields keep the worst case (the
+        laxest deadline, the smallest slack, met only if all met)."""
+        self.decode_bytes += o.decode_bytes
+        self.decode_chunks += o.decode_chunks
+        self.decoded_frames += o.decoded_frames
+        self.detect_frames += o.detect_frames
+        self.detect_calls += o.detect_calls
+        self.cache_hits += o.cache_hits
+        self.cache_richer_hits += o.cache_richer_hits
+        self.cache_inflight_hits += o.cache_inflight_hits
+        self.cache_misses += o.cache_misses
+        self.queue_wait_s += o.queue_wait_s
+        self.sched_wait_s += o.sched_wait_s
+        if o.deadline_ms:
+            if self.deadline_ms:
+                self.deadline_ms = max(self.deadline_ms, o.deadline_ms)
+                self.deadline_slack_s = min(self.deadline_slack_s,
+                                            o.deadline_slack_s)
+            else:
+                self.deadline_ms = o.deadline_ms
+                self.deadline_slack_s = o.deadline_slack_s
+            self.deadline_met = self.deadline_met and o.deadline_met
+
+
+@dataclasses.dataclass
 class QueryResult:
     items: set
     stages: list[StageStats]
@@ -78,6 +140,9 @@ class QueryResult:
     pruned_segments: int = 0
     pruned_bytes: int = 0
     pruned_conservative: int = 0
+    # per-query resource attribution (telemetry): filled by the executors,
+    # deadline fields by the serving layer, rolled up by the router
+    cost: QueryCost = dataclasses.field(default_factory=QueryCost)
 
     def to_wire(self) -> dict:
         """Plain-scalar form of the result (item tuples become lists; a
@@ -90,6 +155,7 @@ class QueryResult:
             "pruned_segments": int(self.pruned_segments),
             "pruned_bytes": int(self.pruned_bytes),
             "pruned_conservative": int(self.pruned_conservative),
+            "cost": self.cost.to_wire(),
         }
 
     @staticmethod
@@ -100,7 +166,9 @@ class QueryResult:
             video_seconds=d["video_seconds"], wall_s=d["wall_s"],
             pruned_segments=d.get("pruned_segments", 0),
             pruned_bytes=d.get("pruned_bytes", 0),
-            pruned_conservative=d.get("pruned_conservative", 0))
+            pruned_conservative=d.get("pruned_conservative", 0),
+            cost=(QueryCost.from_wire(d["cost"]) if d.get("cost")
+                  else QueryCost()))
 
     @property
     def pipelined_speed(self) -> float:
@@ -153,6 +221,26 @@ def apply_pushdown(store, index, stream: str, segments: list[int],
     return dec.kept, (len(dec.pruned), nbytes, dec.conservative)
 
 
+def _charge_fetch(cost: QueryCost, fcost: dict, n_frames: int,
+                  n_fetches: int = 1) -> None:
+    """Fold one retrieval's cost dict into a query ledger.  The cache
+    kind tag (``"hit"``/``"richer"``/``"inflight"``/``"miss"``) comes from
+    the serving planner's fetch; a raw store retrieve carries no tag and
+    counts as misses — it decoded for real."""
+    cost.decode_bytes += int(fcost.get("bytes", 0))
+    cost.decode_chunks += int(fcost.get("chunks", 0))
+    cost.decoded_frames += int(fcost.get("frames", n_frames))
+    kind = fcost.get("cache")
+    if kind == "hit":
+        cost.cache_hits += n_fetches
+    elif kind == "richer":
+        cost.cache_richer_hits += n_fetches
+    elif kind == "inflight":
+        cost.cache_inflight_hits += n_fetches
+    else:
+        cost.cache_misses += n_fetches
+
+
 def _active_frame_mask(frames_pos: np.ndarray, active_buckets: set | None,
                        spec: IngestSpec) -> np.ndarray:
     if active_buckets is None:
@@ -203,6 +291,7 @@ def run_query(store, config, query: str, stream: str, segments: list[int],
     stages: list[StageStats] = []
     active: dict[int, set] | None = None  # per segment active buckets
     items_all: set = set()
+    cost = QueryCost()
     t_start = time.perf_counter()
 
     for op_name, op, cf, sf_id in specs:
@@ -219,11 +308,17 @@ def run_query(store, config, query: str, stream: str, segments: list[int],
                 group = segs[g0:g0 + batch_segments]
                 t0 = time.perf_counter()
                 if retriever is None:
-                    frames_list, _cost = store.retrieve_many(
+                    frames_list, gcost = store.retrieve_many(
                         stream, group, sf_id, cf)
+                    _charge_fetch(cost, gcost,
+                                  sum(len(f) for f in frames_list),
+                                  n_fetches=len(group))
                 else:
-                    frames_list = [retriever(stream, s, sf_id, cf)[0]
-                                   for s in group]
+                    frames_list = []
+                    for s in group:
+                        frames, fcost = retriever(stream, s, sf_id, cf)
+                        frames_list.append(frames)
+                        _charge_fetch(cost, fcost, len(frames))
                 st.retrieve_s += time.perf_counter() - t0
                 pending = []
                 for seg, frames in zip(group, frames_list):
@@ -240,6 +335,8 @@ def run_query(store, config, query: str, stream: str, segments: list[int],
                 st.detect_calls += cstats.detect_calls
                 st.frames += cstats.frames
                 st.batched_frames += cstats.batched_frames
+                cost.detect_calls += cstats.detect_calls
+                cost.detect_frames += cstats.frames
                 for seg, items in per_seg.items():
                     stage_items |= {(seg,) + it for it in items}
                     next_active[seg] = {it[1] for it in items}
@@ -249,8 +346,9 @@ def run_query(store, config, query: str, stream: str, segments: list[int],
                     continue  # early stage filtered this segment entirely
                 st.segments_scanned += 1
                 t0 = time.perf_counter()
-                frames, _cost = fetch(stream, seg, sf_id, cf)
+                frames, fcost = fetch(stream, seg, sf_id, cf)
                 st.retrieve_s += time.perf_counter() - t0
+                _charge_fetch(cost, fcost, len(frames))
 
                 mask = _active_frame_mask(pos, None if active is None
                                           else active.get(seg, set()), spec)
@@ -263,6 +361,8 @@ def run_query(store, config, query: str, stream: str, segments: list[int],
                 st.consume_s += time.perf_counter() - t0
                 st.detect_calls += 1
                 st.frames += int(mask.sum())
+                cost.detect_calls += 1
+                cost.detect_frames += int(mask.sum())
                 stage_items |= {(seg,) + it for it in items}
                 next_active[seg] = {it[1] for it in items}
 
@@ -275,4 +375,4 @@ def run_query(store, config, query: str, stream: str, segments: list[int],
     return QueryResult(items=items_all, stages=stages, video_seconds=dur,
                        wall_s=time.perf_counter() - t_start,
                        pruned_segments=n_pruned, pruned_bytes=pruned_bytes,
-                       pruned_conservative=n_cons)
+                       pruned_conservative=n_cons, cost=cost)

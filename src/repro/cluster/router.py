@@ -35,8 +35,9 @@ import zlib
 from concurrent.futures import ThreadPoolExecutor
 
 from ..analysis.runtime import allow_block as _allow_block
-from ..analytics.query import QueryResult
+from ..analytics.query import QueryCost, QueryResult
 from ..obs import drift as obs_drift
+from ..obs import telemetry as obs_telemetry
 from ..obs import trace as obs
 from ..obs.metrics import Histogram
 from ..serving.server import QueryRequest
@@ -79,6 +80,7 @@ def merge_results(per_stream: dict[str, QueryResult]) -> QueryResult:
     stages = None
     vsec, wall = 0.0, 0.0
     pruned_segs = pruned_bytes = pruned_cons = 0
+    cost = None
     for stream in sorted(per_stream):
         r = per_stream[stream]
         items |= {(stream,) + tuple(it) for it in r.items}
@@ -87,6 +89,10 @@ def merge_results(per_stream: dict[str, QueryResult]) -> QueryResult:
         pruned_segs += r.pruned_segments
         pruned_bytes += r.pruned_bytes
         pruned_cons += r.pruned_conservative
+        if cost is None:
+            cost = dataclasses.replace(r.cost)
+        else:
+            cost.add(r.cost)
         if stages is None:
             stages = [dataclasses.replace(s) for s in r.stages]
         else:
@@ -102,7 +108,8 @@ def merge_results(per_stream: dict[str, QueryResult]) -> QueryResult:
                        video_seconds=vsec, wall_s=wall,
                        pruned_segments=pruned_segs,
                        pruned_bytes=pruned_bytes,
-                       pruned_conservative=pruned_cons)
+                       pruned_conservative=pruned_cons,
+                       cost=cost or QueryCost())
 
 
 class ShardHost:
@@ -361,10 +368,25 @@ class ShardRouter:
         # i mod ncpu): the per-shard process is the unit of parallelism,
         # and unpinned runtimes' spin threads oversubscribe small hosts
         pin = self.opts.pop("pin_cores", False)
+        # opts["telemetry_dir"]: every worker samples its own crash-safe
+        # series into <dir>/shard-NN.vtl (a respawn reopens the same log,
+        # truncating any torn tail); attach_telemetry adds the router's
+        # cluster-merged <dir>/cluster.vtl beside them
+        self._telemetry_dir = self.opts.pop("telemetry_dir", None)
+        self._telemetry: obs_telemetry.TelemetrySampler | None = None
+        if self._telemetry_dir:
+            os.makedirs(self._telemetry_dir, exist_ok=True)
+
+        def host_opts(i: int) -> dict:
+            extra: dict = {"pin_core": i} if pin else {}
+            if self._telemetry_dir:
+                extra["telemetry_path"] = os.path.join(
+                    self._telemetry_dir, f"shard-{i:02d}.vtl")
+            return self.opts | extra if extra else self.opts
+
         self.hosts = [
             ShardHost(i, os.path.join(root, f"shard-{i:02d}"),
-                      self._sock_dir, cfg_wire, spec_wire,
-                      self.opts | {"pin_core": i} if pin else self.opts, ctx)
+                      self._sock_dir, cfg_wire, spec_wire, host_opts(i), ctx)
             for i in range(n_shards)]
         self._pool = ThreadPoolExecutor(
             max_workers=max(2 * n_shards, 8),
@@ -386,6 +408,10 @@ class ShardRouter:
         return self
 
     def close(self) -> None:
+        if self._telemetry is not None:
+            # final merged sample while workers can still answer a scrape
+            self._telemetry.stop(final=True)
+            self._telemetry = None
         futs = [self._pool.submit(h.close) for h in self.hosts]
         for f in futs:
             f.result()
@@ -419,13 +445,17 @@ class ShardRouter:
         return v["golden_s"]
 
     def _sub_query(self, query: str, stream: str, segments, accuracy,
-                   ctx: tuple[int, int] | None = None) -> QueryResult:
+                   ctx: tuple[int, int] | None = None,
+                   deadline_ms: float | None = None,
+                   slo_class: str = "") -> QueryResult:
         """One per-stream sub-query.  ``ctx`` is the scatter root's trace
         context — runs on pool threads, so it is passed explicitly and
         activated here; the worker ships the sub-query's spans back and
         they are absorbed into the router's ring re-based onto its clock
         (pid = shard idx + 1; pid 0 is the router itself)."""
-        req = QueryRequest(query, stream, list(segments), accuracy)
+        req = QueryRequest(query, stream, list(segments), accuracy,
+                           deadline_ms=deadline_ms or 0.0,
+                           slo_class=slo_class)
         host = self.host_of(stream)
         with obs.TRACER.activate(*(ctx or (0, 0))):
             v = host.call_retry("query", request=req.to_wire())
@@ -436,37 +466,52 @@ class ShardRouter:
         return QueryResult.from_wire(v)
 
     def query(self, query: str, streams, segments: list[int],
-              accuracy: float) -> QueryResult:
+              accuracy: float, deadline_ms: float | None = None,
+              slo_class: str = "") -> QueryResult:
         """Execute one cascade.  ``streams`` may be a single stream name
         (routed to its shard; result identical to single-process
         ``run_query``) or a list (scatter one sub-query per stream to the
         owning shards, gather, merge deterministically — see
-        ``merge_results`` for the tagging)."""
+        ``merge_results`` for the tagging).  ``deadline_ms``/``slo_class``
+        ride the request to the owning shards: each sub-query runs under
+        the deadline (EDF in the shard's consumption queues, hit/miss
+        accounted in the shard's SLO telemetry); a class without an
+        explicit deadline derives one shard-side from the profiled speeds
+        (classes come from ``opts["slo_classes"]``, so every shard derives
+        identically)."""
         with obs.span("query", query=query, accuracy=accuracy):
             ctx = obs.TRACER.current() if obs.TRACER.enabled else None
             if isinstance(streams, str):
                 return self._sub_query(query, streams, segments, accuracy,
-                                       ctx)
+                                       ctx, deadline_ms, slo_class)
             futs = {s: self._pool.submit(self._sub_query, query, s, segments,
-                                         accuracy, ctx) for s in streams}
+                                         accuracy, ctx, deadline_ms,
+                                         slo_class) for s in streams}
             return merge_results({s: f.result() for s, f in futs.items()})
 
     def query_many(self, submissions: list[tuple]) -> list[QueryResult]:
         """Scatter a batch of ``(query, stream(s), segments, accuracy)``
         submissions across the cluster concurrently; gather results in
-        submission order.  Multi-stream submissions are flattened into
-        per-stream sub-queries *here* — pool tasks never submit into their
-        own (bounded) pool, which would deadlock once every worker thread
-        held an outer task blocked on queued inner ones."""
+        submission order.  A submission may carry a fifth element — a dict
+        with ``deadline_ms`` and/or ``slo_class`` — to run under an SLO.
+        Multi-stream submissions are flattened into per-stream sub-queries
+        *here* — pool tasks never submit into their own (bounded) pool,
+        which would deadlock once every worker thread held an outer task
+        blocked on queued inner ones."""
         tracing = obs.TRACER.enabled
         plans = []  # per submission: (single, [(stream, future)], root span)
-        for q, streams, segments, acc in submissions:
+        for sub in submissions:
+            q, streams, segments, acc = sub[:4]
+            slo = sub[4] if len(sub) > 4 else {}
             root = obs.TRACER.start_span("query", query=q,
                                          accuracy=acc) if tracing else None
             ctx = (root.trace_id, root.span_id) if root else None
             names = [streams] if isinstance(streams, str) else list(streams)
             futs = [(s, self._pool.submit(self._sub_query, q, s, segments,
-                                          acc, ctx)) for s in names]
+                                          acc, ctx,
+                                          slo.get("deadline_ms"),
+                                          slo.get("slo_class", "")))
+                    for s in names]
             plans.append((isinstance(streams, str), futs, root))
         out = []
         for single, futs, root in plans:
@@ -498,6 +543,8 @@ class ShardRouter:
         keep each knob's worst observation across shards."""
         per_shard = self.broadcast("stats")
         rollup_keys = ("completed", "rejected", "failed", "collapsed",
+                       "deadline_hits", "deadline_misses",
+                       "sched_deadline_hits", "sched_deadline_misses",
                        "inflight", "video_seconds", "query_wall_s",
                        "decodes", "coalesced_cfs", "inflight_hits",
                        "decode_bytes", "decode_chunks", "cache_bytes",
@@ -552,6 +599,48 @@ class ShardRouter:
             "gauges": gauges,
             **total,
         }
+
+    def telemetry_scrape(self) -> dict:
+        """One cluster-merged telemetry frame body: every *live* shard's
+        ``telemetry`` op answer merged with ``obs.telemetry.merge_frames``
+        (counters sum, histogram buckets sum — percentiles recomputed,
+        never averaged), plus per-shard health rows.  Dead shards are
+        skipped, not respawned — a monitoring read must never mutate the
+        cluster (``call``, not ``call_retry``)."""
+        parts: list[dict | None] = []
+        shards = []
+        for h in self.hosts:
+            alive = h.process is not None and h.process.is_alive()
+            body = None
+            if alive:
+                try:
+                    body = h.call("telemetry")
+                except (ConnectionError, ShardError):
+                    alive = False
+            parts.append(body)
+            shards.append({"shard": h.idx, "alive": alive,
+                           "generation": h.generation,
+                           "restarts": h.restarts})
+        merged = obs_telemetry.merge_frames([p for p in parts if p])
+        merged["shards"] = shards
+        return merged
+
+    def attach_telemetry(self, interval_s: float = 1.0
+                         ) -> obs_telemetry.TelemetrySampler:
+        """Start the router's cluster-merged series: a sampler scraping
+        every shard each interval into ``<telemetry_dir>/cluster.vtl``
+        (the workers' own per-shard logs already run — this is the merged
+        view ``vtop`` leads with).  Requires ``opts["telemetry_dir"]``;
+        stopped (with a final sample) by ``close``."""
+        if not self._telemetry_dir:
+            raise RuntimeError("router built without opts['telemetry_dir']")
+        if self._telemetry is None:
+            log = obs_telemetry.TelemetryLog(
+                os.path.join(self._telemetry_dir, "cluster.vtl"))
+            self._telemetry = obs_telemetry.TelemetrySampler(
+                self.telemetry_scrape, log, interval_s=interval_s)
+            self._telemetry.start()
+        return self._telemetry
 
     def harvest_spans(self) -> int:
         """Pull every worker's remaining ringed spans (background

@@ -25,6 +25,8 @@ Protocol ops (request ``{"op": ..., **args}`` -> ``{"ok": True, "value":
 ``set_budget``     grant a new budget share to the worker's lease
 ``erode_advance``  move the erosion day clock; returns the report
 ``stats``          the server's aggregate stats (+ shard identity)
+``telemetry``      one telemetry frame body (metrics + SLO + alerts);
+                   ``sample_telemetry`` forces a durable local sample
 ``spans``          drain the worker's trace ring (wire-form span dicts)
 ``flush``/``shutdown``
 
@@ -137,6 +139,22 @@ class _ShardStack:
             batch_max_wait_ms=opts.get("batch_max_wait_ms", 4.0),
             index=self.index,
             pushdown=opts.get("pushdown", "exact"))
+        # SLO classes registered cluster-wide: the router forwards them in
+        # opts so every shard derives the identical deadline for a class
+        for name, kw in (opts.get("slo_classes") or {}).items():
+            self.server.register_slo(name, **kw)
+        # continuous telemetry (repro.obs.telemetry): the sampler snapshots
+        # this shard's registry into an append-only crash-safe log beside
+        # the others in the cluster's telemetry dir; the router's merged
+        # series is scraped via op_telemetry
+        self.telemetry = None
+        tpath = opts.get("telemetry_path")
+        if tpath:
+            from ..obs import telemetry as tel
+            self.telemetry = tel.TelemetrySampler(
+                self.server.telemetry_body, tel.TelemetryLog(tpath),
+                interval_s=float(opts.get("telemetry_interval_s", 1.0)))
+            self.telemetry.start()
         self.scheduler = None
         self.erosion = None
         if opts.get("ingest"):
@@ -275,6 +293,20 @@ class _ShardStack:
         st["generation"] = self.generation
         return st
 
+    def op_telemetry(self, req: dict) -> dict:
+        """One telemetry frame body (metrics snapshot + SLO state +
+        drained alerts) — the router scrapes every shard with this and
+        writes the cluster-merged series."""
+        return self.server.telemetry_body()
+
+    def op_sample_telemetry(self, req: dict) -> int | None:
+        """Force one synchronous durable sample into the shard's own log
+        (deterministic test/bench hook; the interval loop is the normal
+        path).  Returns the acked seq, or None without a sampler."""
+        if self.telemetry is None:
+            return None
+        return self.telemetry.sample_now()
+
     def op_flush(self, req: dict) -> None:
         self.store.flush()
         self._flush_index()
@@ -282,6 +314,10 @@ class _ShardStack:
     def close(self):
         if self.scheduler is not None:
             self.scheduler.stop()
+        if self.telemetry is not None:
+            # final synchronous sample while the server is still up, so a
+            # clean shutdown's last counters reach the durable series
+            self.telemetry.stop(final=True)
         self.server.close()
         self.store.flush()
         self._flush_index()

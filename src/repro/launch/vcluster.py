@@ -59,6 +59,13 @@ def main(argv=None):
     ap.add_argument("--trace", metavar="FILE", default=None,
                     help="trace every shard plus the router and write one "
                          "merged Chrome trace-event JSON (Perfetto-loadable)")
+    ap.add_argument("--telemetry", metavar="DIR", default=None,
+                    help="every shard samples a crash-safe telemetry series "
+                         "into DIR/shard-NN.vtl and the router scrapes a "
+                         "cluster-merged DIR/cluster.vtl; watch live with "
+                         "python -m repro.launch.vtop --telemetry DIR")
+    ap.add_argument("--telemetry-interval", type=float, default=1.0,
+                    help="telemetry sampling interval in seconds")
     args = ap.parse_args(argv)
     if args.trace:
         from ..obs import trace as obs
@@ -79,6 +86,9 @@ def main(argv=None):
                     batch_max_wait_ms=args.batch_max_wait_ms)
     if args.trace:
         opts["trace"] = True
+    if args.telemetry:
+        opts["telemetry_dir"] = args.telemetry
+        opts["telemetry_interval_s"] = args.telemetry_interval
     if args.budget_x is not None:
         opts.update(ingest=True, budget_x=args.budget_x,
                     materialize_on_read=True)
@@ -91,6 +101,8 @@ def main(argv=None):
 
     with ShardRouter(os.path.join(args.root, "cluster"), cfg, args.shards,
                      spec=spec, opts=opts) as router:
+        if args.telemetry:
+            router.attach_telemetry(interval_s=args.telemetry_interval)
         coord = (ClusterIngest(router, budget_x=args.budget_x)
                  if args.budget_x is not None else None)
         by_shard: dict[int, list[str]] = {}
@@ -189,6 +201,11 @@ def main(argv=None):
             n = export_trace(args.trace, process_names=names_by_pid)
             print(f"wrote {n} spans across {args.shards + 1} processes "
                   f"to {args.trace}")
+
+    if args.telemetry:
+        print(f"telemetry: {args.shards} shard logs + cluster.vtl in "
+              f"{args.telemetry} (view: python -m repro.launch.vtop "
+              f"--telemetry {args.telemetry})")
 
 
 if __name__ == "__main__":

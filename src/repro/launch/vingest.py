@@ -56,6 +56,12 @@ def main(argv=None):
     ap.add_argument("--trace", metavar="FILE", default=None,
                     help="enable span tracing and write a Chrome trace-event "
                          "JSON (load in Perfetto / chrome://tracing)")
+    ap.add_argument("--telemetry", metavar="DIR", default=None,
+                    help="sample a crash-safe telemetry series into "
+                         "DIR/server.vtl; watch live with python -m "
+                         "repro.launch.vtop --telemetry DIR")
+    ap.add_argument("--telemetry-interval", type=float, default=1.0,
+                    help="telemetry sampling interval in seconds")
     args = ap.parse_args(argv)
     if args.trace:
         from ..obs import enable
@@ -104,6 +110,13 @@ def main(argv=None):
     mid_results = []
     with VStoreServer(vs, cfg, workers=args.workers, index=index) as srv:
         srv.attach_ingest(sched, executor)
+        sampler = None
+        if args.telemetry:
+            from ..obs.telemetry import TelemetryLog, TelemetrySampler
+            sampler = TelemetrySampler(
+                srv.telemetry_body,
+                TelemetryLog(os.path.join(args.telemetry, "server.vtl")),
+                interval_s=args.telemetry_interval).start()
         t0 = time.perf_counter()
         n_arrived = 0
         for arr in interleave(sources, pace_x=args.pace_x):
@@ -165,6 +178,12 @@ def main(argv=None):
             print(f"  query {q} over {len(segs)} seg: {len(res.items)} items "
                   f"mid-ingest, identical={same}")
         print(f"mid-ingest answers identical to materialized store: {ok}")
+        if sampler is not None:
+            sampler.stop(final=True)
+            print(f"telemetry: {sampler.samples} frames in "
+                  f"{os.path.join(args.telemetry, 'server.vtl')} "
+                  f"(view: python -m repro.launch.vtop --telemetry "
+                  f"{args.telemetry})")
 
     if executor is not None:
         b0 = vs.storage_bytes()

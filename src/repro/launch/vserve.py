@@ -112,6 +112,12 @@ def main(argv=None):
     ap.add_argument("--trace", metavar="FILE", default=None,
                     help="enable span tracing and write a Chrome trace-event "
                          "JSON (load in Perfetto / chrome://tracing)")
+    ap.add_argument("--telemetry", metavar="DIR", default=None,
+                    help="sample a crash-safe telemetry series into "
+                         "DIR/server.vtl; watch live with python -m "
+                         "repro.launch.vtop --telemetry DIR")
+    ap.add_argument("--telemetry-interval", type=float, default=1.0,
+                    help="telemetry sampling interval in seconds")
     args = ap.parse_args(argv)
     if args.trace:
         from ..obs import enable
@@ -173,10 +179,19 @@ def main(argv=None):
                       cross_query_batching=args.cross_query_batching,
                       batch_max_wait_ms=args.batch_max_wait_ms,
                       index=index, pushdown=args.pushdown) as srv:
+        sampler = None
+        if args.telemetry:
+            from ..obs.telemetry import TelemetryLog, TelemetrySampler
+            sampler = TelemetrySampler(
+                srv.telemetry_body,
+                TelemetryLog(os.path.join(args.telemetry, "server.vtl")),
+                interval_s=args.telemetry_interval).start()
         t0 = time.perf_counter()
         results = srv.run_batch(subs)
         wall = time.perf_counter() - t0
         stats = srv.stats()
+        if sampler is not None:
+            sampler.stop(final=True)
 
     for (q, _s, sg, acc), res in zip(subs, results):
         calls = sum(s.detect_calls for s in res.stages)
@@ -215,6 +230,11 @@ def main(argv=None):
         from ..obs import export_trace
         n = export_trace(args.trace, process_names={os.getpid(): "vserve"})
         print(f"wrote {n} spans to {args.trace}")
+    if args.telemetry:
+        print(f"telemetry: {sampler.samples} frames in "
+              f"{os.path.join(args.telemetry, 'server.vtl')} "
+              f"(view: python -m repro.launch.vtop --telemetry "
+              f"{args.telemetry})")
     return results
 
 

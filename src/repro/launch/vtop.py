@@ -1,0 +1,226 @@
+"""Live telemetry dashboard: ``python -m repro.launch.vtop``.
+
+Read-only: tails a telemetry directory (the ``*.vtl`` logs that
+``--telemetry DIR`` makes vserve/vingest/vcluster write) or scrapes a
+shard socket's ``telemetry`` op, and renders a text dashboard — query
+throughput and latency percentiles, SLO hit/miss + burn rate per class,
+cache/decode/scheduler counters, deduplicated alerts, and per-shard
+health rows from the router's cluster-merged series.  It never writes:
+``read_frames`` skips a torn tail without truncating it, so pointing
+vtop at a live (or crashed) writer is always safe.
+
+    python -m repro.launch.vtop --telemetry /tmp/vtl          # tail dir
+    python -m repro.launch.vtop --telemetry /tmp/vtl --once   # one frame
+    python -m repro.launch.vtop --sock /tmp/cluster/shard-00.sock
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import socket
+import time
+
+from ..obs.telemetry import read_frames
+
+
+def load_series(dirname: str) -> dict[str, list[dict]]:
+    """Read every ``*.vtl`` log under ``dirname`` -> ``{name: frames}``
+    (name = file stem; unreadable/empty logs are skipped, not fatal —
+    a worker may be mid-first-write)."""
+    out: dict[str, list[dict]] = {}
+    for path in sorted(glob.glob(os.path.join(dirname, "*.vtl"))):
+        name = os.path.splitext(os.path.basename(path))[0]
+        try:
+            frames = read_frames(path)
+        except Exception:  # noqa: BLE001 — partial header mid-create
+            continue
+        if frames:
+            out[name] = frames
+    return out
+
+
+def scrape_sock(path: str) -> dict:
+    """One ``telemetry`` op against a shard/worker unix socket."""
+    from ..cluster import wire
+    s = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    try:
+        s.connect(path)
+        wire.send_msg(s, {"op": "telemetry"})
+        resp = wire.recv_msg(s)
+    finally:
+        s.close()
+    if not resp.get("ok"):
+        raise ConnectionError(f"telemetry scrape failed: "
+                              f"{resp.get('error')}")
+    body = resp["value"] or {}
+    body.setdefault("t", time.time())
+    return body
+
+
+def _counters(frame: dict) -> dict:
+    return (frame.get("metrics") or {}).get("counters") or {}
+
+
+def _rate(frames: list[dict], key: str) -> float:
+    """Current rate of a monotone counter: delta over the last two
+    frames' wall-clock span (0 if the series is too short/stalled)."""
+    if len(frames) < 2:
+        return 0.0
+    a, b = frames[-2], frames[-1]
+    dt = float(b.get("t", 0)) - float(a.get("t", 0))
+    if dt <= 0:
+        return 0.0
+    return (_counters(b).get(key, 0) - _counters(a).get(key, 0)) / dt
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024 or unit == "TB":
+            return f"{n:.0f}{unit}" if unit == "B" else f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}TB"
+
+
+def _ms(v: float) -> str:
+    return f"{v * 1e3:.0f}ms" if v < 10 else f"{v:.1f}s"
+
+
+def render_source(name: str, frames: list[dict]) -> list[str]:
+    """Dashboard lines for one log's series (pure text; unit-testable)."""
+    last = frames[-1]
+    m = last.get("metrics") or {}
+    c = m.get("counters") or {}
+    g = m.get("gauges") or {}
+    h = m.get("histograms") or {}
+    slo = last.get("slo") or {}
+    span = float(last.get("t", 0)) - float(frames[0].get("t", 0))
+    lines = [f"{name}: {len(frames)} frames over {span:.0f}s "
+             f"(seq {last.get('seq', '?')})"]
+    if "sources" in last:
+        lines[-1] += f", merged from {last['sources']} shards"
+
+    done = c.get("completed", 0)
+    if done or c.get("failed") or c.get("rejected"):
+        lines.append(
+            f"  queries   {done:.0f} done ({_rate(frames, 'completed'):.1f}/s)"
+            f", {c.get('failed', 0):.0f} failed, "
+            f"{c.get('collapsed', 0):.0f} collapsed, "
+            f"{c.get('rejected', 0):.0f} rejected, "
+            f"inflight {g.get('inflight', 0):.0f}")
+    lat = h.get("query_latency_s")
+    if lat and lat.get("count"):
+        qw = h.get("queue_wait_s") or {}
+        lines.append(
+            f"  latency   p50 {_ms(lat['p50'])}  p95 {_ms(lat['p95'])}  "
+            f"p99 {_ms(lat['p99'])}  max {_ms(lat['max'])}"
+            f"   queue-wait p95 {_ms(qw.get('p95', 0.0))}")
+
+    hits, misses = c.get("deadline_hits", 0), c.get("deadline_misses", 0)
+    if hits or misses:
+        late = h.get("deadline_lateness_s") or {}
+        lines.append(f"  slo       {hits:.0f} hit / {misses:.0f} missed "
+                     f"deadlines, lateness p95 "
+                     f"{_ms(late.get('p95', 0.0))}")
+    for cls, row in sorted((slo.get("classes") or {}).items()):
+        burn = row.get("burn", 0.0)
+        flag = "  << BURNING" if burn > 1.0 else ""
+        lines.append(
+            f"  slo[{cls}] burn {burn:.2f} "
+            f"(window {row.get('window_misses', 0)}/"
+            f"{row.get('window_total', 0)} missed, budget "
+            f"{row.get('target_miss_frac', 0) * 100:.1f}% over "
+            f"{row.get('window_s', 0):.0f}s){flag}")
+
+    lookups = c.get("cache_lookups", 0)
+    if lookups:
+        hit = c.get("cache_hits", 0) + c.get("cache_richer_hits", 0)
+        lines.append(f"  cache     {hit / lookups * 100:.0f}% hit "
+                     f"({hit:.0f}/{lookups:.0f}), "
+                     f"{c.get('cache_evictions', 0):.0f} evictions")
+    if c.get("decodes"):
+        lines.append(f"  decode    {c['decodes']:.0f} decodes / "
+                     f"{_fmt_bytes(c.get('decode_bytes', 0))} / "
+                     f"{c.get('decode_chunks', 0):.0f} chunks, "
+                     f"{c.get('coalesced_cfs', 0):.0f} CFs coalesced, "
+                     f"{c.get('inflight_hits', 0):.0f} inflight hits")
+    if c.get("sched_units"):
+        lines.append(f"  sched     {c.get('sched_detect_calls', 0):.0f} "
+                     f"fused detects / {c['sched_units']:.0f} units "
+                     f"({c.get('sched_deduped', 0):.0f} deduped), "
+                     f"occupancy {g.get('batch_occupancy', 0):.2f}")
+
+    shards = last.get("shards")
+    if shards:
+        rows = []
+        for s in shards:
+            state = "up" if s.get("alive") else "DOWN"
+            rows.append(f"{s.get('shard')}:{state}"
+                        f"/g{s.get('generation', 0)}"
+                        f"/r{s.get('restarts', 0)}")
+        lines.append("  shards    " + "  ".join(rows))
+
+    # alerts accumulate over the tail of the series, newest last
+    seen: list[dict] = []
+    for f in frames[-30:]:
+        seen.extend(f.get("alerts") or [])
+    for a in seen[-5:]:
+        lines.append(f"  alert[{a.get('severity', '?')}] "
+                     f"{a.get('key')}: {a.get('message')}")
+    return lines
+
+
+def render(series: dict[str, list[dict]], clock=time.time) -> str:
+    """The full dashboard for a set of series.  ``cluster`` (the router's
+    merged log) renders first; per-shard logs follow."""
+    if not series:
+        return "vtop: no telemetry frames yet"
+    order = sorted(series, key=lambda n: (n != "cluster", n))
+    stamp = max(float(s[-1].get("t", 0)) for s in series.values())
+    age = max(0.0, clock() - stamp) if stamp else 0.0
+    out = [f"vtop — {len(series)} series, last sample {age:.0f}s ago"]
+    for name in order:
+        out.append("")
+        out.extend(render_source(name, series[name]))
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="live dashboard over VStore telemetry logs")
+    src = ap.add_mutually_exclusive_group(required=True)
+    src.add_argument("--telemetry", metavar="DIR",
+                     help="telemetry directory to tail (*.vtl logs)")
+    src.add_argument("--sock", metavar="PATH",
+                     help="scrape a live worker unix socket's "
+                          "'telemetry' op instead of reading logs")
+    ap.add_argument("--interval", type=float, default=2.0,
+                    help="refresh interval in seconds")
+    ap.add_argument("--once", action="store_true",
+                    help="render one frame and exit (no screen clear)")
+    args = ap.parse_args(argv)
+
+    scraped: list[dict] = []
+
+    def snap() -> dict[str, list[dict]]:
+        if args.telemetry:
+            return load_series(args.telemetry)
+        scraped.append(scrape_sock(args.sock))
+        del scraped[:-120]  # bound the live-scrape history
+        return {"live": list(scraped)}
+
+    if args.once:
+        print(render(snap()))
+        return 0
+    try:
+        while True:
+            text = render(snap())
+            print("\x1b[H\x1b[2J" + text, flush=True)
+            time.sleep(args.interval)
+    except KeyboardInterrupt:
+        return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,447 @@
+"""Continuous telemetry: a crash-safe metric time-series plus SLO
+accounting primitives.
+
+PR 6 gave the tree point-in-time ``stats()`` snapshots; this module makes
+them *continuous*.  A ``TelemetrySampler`` snapshots a source (the
+server's metrics registry, or the router's cluster-merged scrape) on an
+interval into a ``TelemetryLog`` — an append-only on-disk series with the
+same durability discipline as ``repro.index.IndexStore``:
+
+* magic + version header (``VTEL0001``), then length-prefixed msgpack
+  frames;
+* every append is flushed and fsync'd before it returns — an acked frame
+  survives SIGKILL;
+* a writable reopen scans the log and truncates the torn tail (a frame a
+  crash cut short) back to the last intact frame, then continues the
+  sequence; readers stop at the tail without ever mutating the file.
+
+Frames are plain dicts (``{"t", "seq", "metrics", "slo", "alerts", ...}``)
+so the ``vtop`` dashboard, tests, and offline tooling all read the same
+bytes.  Cluster merging reuses ``Histogram.merge`` bucket-sum semantics —
+counters add, bucket vectors add, percentiles are recomputed from the
+merged buckets, never averaged across processes.
+
+SLO accounting: an ``SLOClass`` names an error budget
+(``target_miss_frac`` over ``window_s``) and a deadline-derivation slack;
+``derive_deadline_ms`` turns the class into a concrete ``deadline_ms``
+from the derived config's *profiled* per-knob speeds (the ROADMAP item:
+admission control translating an SLO class into per-stage deadline
+budgets); ``BurnRate`` tracks the windowed miss rate against the budget;
+``AlertDeduper`` turns persistent conditions (SLO burn, profile drift)
+into one alert per key per window instead of one per query.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+import threading
+import time
+
+import msgpack
+
+from .metrics import Histogram
+
+_MAGIC = b"VTEL0001"
+_LEN = struct.Struct(">I")
+#: sanity bound on one frame's payload — a length prefix beyond this is
+#: torn/corrupt tail, not a real frame
+MAX_FRAME = 16 << 20
+
+
+class TelemetryError(RuntimeError):
+    """The file is not a telemetry log (bad magic / wrong version)."""
+
+
+def _scan(buf: bytes):
+    """Walk ``buf`` (everything after the header) yielding
+    ``(end_offset, frame)`` for each intact frame; stops at the first
+    torn or undecodable tail."""
+    off, n = 0, len(buf)
+    while off + _LEN.size <= n:
+        (ln,) = _LEN.unpack_from(buf, off)
+        if ln > MAX_FRAME or off + _LEN.size + ln > n:
+            return  # torn length or torn payload
+        payload = buf[off + _LEN.size:off + _LEN.size + ln]
+        try:
+            frame = msgpack.unpackb(payload, raw=False,
+                                    strict_map_key=False)
+        except Exception:  # noqa: BLE001 — any decode failure = torn tail
+            return
+        if not isinstance(frame, dict):
+            return
+        off += _LEN.size + ln
+        yield off, frame
+
+
+def read_frames(path: str) -> list[dict]:
+    """Read every intact frame of a telemetry log (read-only: a torn tail
+    is skipped, never truncated — safe against a live writer and on
+    read-only media)."""
+    with open(path, "rb") as f:
+        head = f.read(len(_MAGIC))
+        if head != _MAGIC:
+            raise TelemetryError(f"{path}: not a telemetry log "
+                                 f"(magic {head!r})")
+        buf = f.read()
+    return [frame for _off, frame in _scan(buf)]
+
+
+class TelemetryLog:
+    """Append-only crash-safe frame log (one per process).
+
+    ``append`` stamps a monotone ``seq``, writes one length-prefixed
+    msgpack frame, and fsyncs before returning — the returned seq is the
+    durability ack.  Reopening an existing log truncates any torn tail
+    (``truncated_bytes`` records how much) and resumes the sequence.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        self._mu = threading.Lock()
+        self._closed = False        # guarded-by: _mu
+        self.truncated_bytes = 0    # torn tail dropped at open (read-only)
+        self.frames_recovered = 0   # intact frames found at open
+        if not os.path.exists(path) or os.path.getsize(path) == 0:
+            with open(path, "wb") as f:
+                f.write(_MAGIC)
+                f.flush()
+                os.fsync(f.fileno())
+        self._f = open(path, "r+b")  # guarded-by: _mu (after init)
+        head = self._f.read(len(_MAGIC))
+        if head != _MAGIC:
+            self._f.close()
+            raise TelemetryError(f"{path}: not a telemetry log "
+                                 f"(magic {head!r})")
+        buf = self._f.read()
+        good, last_seq = 0, 0
+        for off, frame in _scan(buf):
+            good = off
+            last_seq = int(frame.get("seq", last_seq))
+            self.frames_recovered += 1
+        if good < len(buf):
+            # a crash tore the tail mid-frame: drop it so the next append
+            # lands on a frame boundary (IndexStore's recovery discipline)
+            self.truncated_bytes = len(buf) - good
+            self._f.truncate(len(_MAGIC) + good)
+        self._f.seek(0, os.SEEK_END)
+        self._seq = last_seq  # guarded-by: _mu
+
+    def append(self, body: dict) -> int:
+        """Durably append one frame; returns its seq (the ack).  ``body``
+        is copied — the caller's dict is never mutated."""
+        with self._mu:
+            if self._closed:
+                raise TelemetryError(f"{self.path}: log is closed")
+            seq = self._seq + 1
+            frame = dict(body)
+            frame["seq"] = seq
+            payload = msgpack.packb(frame, use_bin_type=True)
+            self._f.write(_LEN.pack(len(payload)))
+            self._f.write(payload)
+            self._f.flush()
+            os.fsync(self._f.fileno())
+            self._seq = seq
+            return seq
+
+    @property
+    def seq(self) -> int:
+        with self._mu:
+            return self._seq
+
+    def close(self) -> None:
+        with self._mu:
+            if not self._closed:
+                self._closed = True
+                self._f.close()
+
+    def __enter__(self) -> "TelemetryLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class TelemetrySampler:
+    """Samples ``source()`` (a frame-body callable) into a
+    ``TelemetryLog`` every ``interval_s``.  ``sample_now()`` takes one
+    synchronous sample — tests and shutdown paths use it for a
+    deterministic final frame.  The source runs outside every lock (it
+    takes the registry/scheduler locks itself)."""
+
+    def __init__(self, source, log: TelemetryLog, interval_s: float = 1.0,
+                 clock=time.time):
+        if interval_s <= 0:
+            raise ValueError(f"interval_s must be > 0, got {interval_s}")
+        self.source = source
+        self.log = log
+        self.interval_s = float(interval_s)
+        self._clock = clock
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._mu = threading.Lock()
+        self._samples = 0   # guarded-by: _mu
+        self._errors = 0    # guarded-by: _mu
+
+    def start(self) -> "TelemetrySampler":
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._loop,
+                                            name="vstore-telemetry",
+                                            daemon=True)
+            self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            self.sample_now()
+
+    def sample_now(self) -> int | None:
+        """One sample: build a frame body from the source, stamp the wall
+        clock, durably append.  Returns the acked seq, or None if the
+        source or the append failed (failures are counted, not raised —
+        telemetry must never take the data path down)."""
+        try:
+            body = self.source()
+            body["t"] = float(self._clock())
+            seq = self.log.append(body)
+        except Exception:  # noqa: BLE001
+            with self._mu:
+                self._errors += 1
+            return None
+        with self._mu:
+            self._samples += 1
+        return seq
+
+    @property
+    def samples(self) -> int:
+        with self._mu:
+            return self._samples
+
+    @property
+    def errors(self) -> int:
+        with self._mu:
+            return self._errors
+
+    def stop(self, final: bool = True) -> None:
+        """Stop the loop; ``final`` takes one last synchronous sample (so
+        a clean shutdown's counters reach the log) before closing it."""
+        self._stop.set()
+        t = self._thread
+        if t is not None:
+            t.join()
+            self._thread = None
+        if final:
+            self.sample_now()
+        self.log.close()
+
+    close = stop
+
+
+# -- SLO classes / deadline derivation ---------------------------------------
+
+SLO_FIELDS = ("slack_x", "target_miss_frac", "window_s")
+
+
+class SLOClass:
+    """A named latency SLO: deadline slack over the *expected* cascade
+    time, and an error budget (miss fraction over a rolling window)."""
+
+    __slots__ = ("name", "slack_x", "target_miss_frac", "window_s")
+
+    def __init__(self, name: str, slack_x: float = 3.0,
+                 target_miss_frac: float = 0.01, window_s: float = 60.0):
+        if slack_x <= 0:
+            raise ValueError(f"slack_x must be > 0, got {slack_x}")
+        if not 0 < target_miss_frac <= 1:
+            raise ValueError("target_miss_frac must be in (0, 1], got "
+                             f"{target_miss_frac}")
+        self.name = name
+        self.slack_x = float(slack_x)
+        self.target_miss_frac = float(target_miss_frac)
+        self.window_s = float(window_s)
+
+
+def derive_deadline_ms(config, spec, ops, accuracy: float,
+                       n_segments: int, slack_x: float = 3.0) -> float:
+    """Translate an SLO class into a concrete per-query deadline from the
+    derived config's *profiled* per-knob speeds: each cascade stage's
+    expected consume time is ``video_seconds / consumer_speed(op, acc)``
+    (a conservative full-scan bound — early stages prune later ones, so
+    the real cascade is faster), summed over the stages and scaled by the
+    class's slack.  Returns milliseconds, ``submit(deadline_ms=...)``
+    ready."""
+    video_s = n_segments * spec.segment_seconds
+    expected = sum(video_s / config.consumer_speed(op, accuracy)
+                   for op in ops)
+    return slack_x * expected * 1e3
+
+
+class BurnRate:
+    """Windowed SLO burn: the observed miss fraction over the class's
+    rolling window divided by its error budget.  Burn > 1 means the
+    budget is being consumed faster than allotted — the alerting
+    threshold."""
+
+    def __init__(self, slo: SLOClass, clock=time.monotonic):
+        self.slo = slo
+        self._clock = clock
+        self._mu = threading.Lock()
+        self._events: list = []  # guarded-by: _mu — (t, missed) in window
+        self._hits = 0           # guarded-by: _mu (lifetime)
+        self._misses = 0         # guarded-by: _mu (lifetime)
+
+    def _prune_locked(self, now: float) -> None:
+        horizon = now - self.slo.window_s
+        i = 0
+        for i, (t, _m) in enumerate(self._events):
+            if t >= horizon:
+                break
+        else:
+            i = len(self._events)
+        if i:
+            del self._events[:i]
+
+    def record(self, missed: bool) -> None:
+        now = self._clock()
+        with self._mu:
+            self._events.append((now, bool(missed)))
+            if missed:
+                self._misses += 1
+            else:
+                self._hits += 1
+            self._prune_locked(now)
+
+    def snapshot(self) -> dict:
+        now = self._clock()
+        with self._mu:
+            self._prune_locked(now)
+            total = len(self._events)
+            misses = sum(1 for _t, m in self._events if m)
+            hits_life, misses_life = self._hits, self._misses
+        rate = misses / total if total else 0.0
+        return {"hits": hits_life, "misses": misses_life,
+                "window_total": total, "window_misses": misses,
+                "window_miss_rate": rate,
+                "burn": rate / self.slo.target_miss_frac,
+                "target_miss_frac": self.slo.target_miss_frac,
+                "window_s": self.slo.window_s}
+
+
+class AlertDeduper:
+    """Deduplicated alert events: ``emit`` records at most one alert per
+    key per ``window_s`` (a persistently-drifted knob or burning SLO
+    produces one alert per window, not one per sample); ``drain`` hands
+    the accumulated events to the telemetry frame."""
+
+    def __init__(self, window_s: float = 30.0, clock=time.monotonic,
+                 wall=time.time):
+        self.window_s = float(window_s)
+        self._clock = clock
+        self._wall = wall
+        self._mu = threading.Lock()
+        self._last: dict[str, float] = {}  # guarded-by: _mu
+        self._pending: list[dict] = []     # guarded-by: _mu
+
+    def emit(self, key: str, severity: str, message: str, **attrs) -> bool:
+        """Returns True if the alert was recorded, False if deduplicated
+        (the same key fired within the window)."""
+        now = self._clock()
+        with self._mu:
+            last = self._last.get(key)
+            if last is not None and now - last < self.window_s:
+                return False
+            self._last[key] = now
+            self._pending.append({"key": key, "severity": severity,
+                                  "message": message,
+                                  "t": float(self._wall()), **attrs})
+            return True
+
+    def drain(self) -> list[dict]:
+        with self._mu:
+            out, self._pending = self._pending, []
+            return out
+
+
+def drift_alert_candidates(report: dict) -> list[tuple[str, str, dict]]:
+    """Flatten a ``DriftDetector.report()`` into ``(key, message, attrs)``
+    per *drifted* knob — the deduper decides which actually emit."""
+    out = []
+    for section in ("consumption", "retrieval"):
+        for knob, row in (report.get(section) or {}).items():
+            if not row.get("drifted"):
+                continue
+            msg = (f"{section} knob {knob}: observed "
+                   f"{row.get('observed_x', 0.0):.1f}x vs expected "
+                   f"{row.get('expected_x', 0.0):.1f}x "
+                   f"(ratio {row.get('ratio', 0.0):.2f})")
+            out.append((f"drift:{section}:{knob}", msg,
+                        {"section": section, "knob": knob,
+                         "ratio": float(row.get("ratio", 0.0))}))
+    return out
+
+
+# -- cluster merge ------------------------------------------------------------
+
+def merge_frames(parts: list[dict]) -> dict:
+    """Merge per-process telemetry frame bodies into one cluster body.
+
+    Counters and gauges sum; histogram snapshots bucket-merge via
+    ``Histogram.merge`` (percentiles recomputed from the union buckets —
+    never averaged across shards); per-queue SLO hit/miss counts sum and
+    lateness histograms merge; per-class burn keeps the *worst* shard
+    (the drift-report convention: a cluster is burning if any shard is);
+    alerts concatenate tagged with their source index."""
+    parts = [p for p in parts if p]
+    counters: dict[str, float] = {}
+    gauges: dict[str, float] = {}
+    hists: dict[str, list] = {}
+    queues: dict[str, dict] = {}
+    classes: dict[str, dict] = {}
+    alerts: list[dict] = []
+    for i, p in enumerate(parts):
+        m = p.get("metrics") or {}
+        for k, v in (m.get("counters") or {}).items():
+            counters[k] = counters.get(k, 0) + v
+        for k, v in (m.get("gauges") or {}).items():
+            gauges[k] = gauges.get(k, 0) + v
+        for k, snap in (m.get("histograms") or {}).items():
+            hists.setdefault(k, []).append(snap)
+        slo = p.get("slo") or {}
+        for qk, row in (slo.get("queues") or {}).items():
+            agg = queues.setdefault(qk, {"hits": 0, "misses": 0,
+                                         "lateness": []})
+            agg["hits"] += row.get("hits", 0)
+            agg["misses"] += row.get("misses", 0)
+            if row.get("lateness"):
+                agg["lateness"].append(row["lateness"])
+        for name, row in (slo.get("classes") or {}).items():
+            agg = classes.get(name)
+            if agg is None:
+                classes[name] = dict(row)
+            else:
+                for k in ("hits", "misses", "window_total",
+                          "window_misses"):
+                    agg[k] = agg.get(k, 0) + row.get(k, 0)
+                # worst shard's burn is the cluster's burn
+                for k in ("burn", "window_miss_rate"):
+                    agg[k] = max(agg.get(k, 0.0), row.get(k, 0.0))
+        for a in (p.get("alerts") or []):
+            alerts.append({**a, "source": i})
+    return {
+        "metrics": {
+            "counters": counters,
+            "gauges": gauges,
+            "histograms": {k: Histogram.merge(v) for k, v in hists.items()},
+        },
+        "slo": {
+            "queues": {qk: {"hits": row["hits"], "misses": row["misses"],
+                            "lateness": Histogram.merge(row["lateness"])}
+                       for qk, row in queues.items()},
+            "classes": classes,
+        },
+        "alerts": alerts,
+        "sources": len(parts),
+    }

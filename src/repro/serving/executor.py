@@ -22,7 +22,8 @@ import numpy as np
 
 from ..analytics.batch import DEFAULT_BATCH_SHAPES, BatchedConsumer
 from ..analytics.operators import _positions
-from ..analytics.query import (QueryResult, StageStats, _active_frame_mask,
+from ..analytics.query import (QueryCost, QueryResult, StageStats,
+                               _active_frame_mask, _charge_fetch,
                                apply_pushdown, stage_specs)
 from ..obs import trace as obs
 
@@ -79,6 +80,7 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
     stages: list[StageStats] = []
     active: dict[int, set] | None = None
     items_all: set = set()
+    cost = QueryCost()
     t_start = time.perf_counter()
 
     tracing = obs.TRACER.enabled
@@ -117,6 +119,8 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
                 st.detect_calls += cstats.detect_calls
                 st.frames += cstats.frames
                 st.batched_frames += cstats.batched_frames
+                cost.detect_calls += cstats.detect_calls
+                cost.detect_frames += cstats.frames
                 for seg, items in per_seg.items():
                     stage_items |= {(seg,) + it for it in items}
                     next_active[seg] = {it[1] for it in items}
@@ -130,8 +134,9 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
             try:
                 for i, seg in enumerate(segs):
                     t0 = time.perf_counter()
-                    frames, _cost = futures.pop(i).result()
+                    frames, fcost = futures.pop(i).result()
                     st.retrieve_s += time.perf_counter() - t0
+                    _charge_fetch(cost, fcost, len(frames))
                     nxt = i + prefetch_depth
                     if nxt < len(segs):
                         futures[nxt] = pool.submit(fetch, stream, segs[nxt],
@@ -159,6 +164,8 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
                         st.consume_s += time.perf_counter() - t0
                         st.detect_calls += 1
                         st.frames += int(mask.sum())
+                        cost.detect_calls += 1
+                        cost.detect_frames += int(mask.sum())
                         stage_items |= {(seg,) + it for it in items}
                         next_active[seg] = {it[1] for it in items}
                         continue
@@ -179,11 +186,15 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
             for seg, fut, owner in waits:
                 t0 = time.perf_counter()
                 items, share = fut.result()
-                st.consume_s += time.perf_counter() - t0
+                waited = time.perf_counter() - t0
+                st.consume_s += waited
+                cost.sched_wait_s += waited
                 if owner and share is not None:  # unit led a fused dispatch
                     st.detect_calls += share.detect_calls
                     st.frames += share.frames
                     st.batched_frames += share.batched_frames
+                    cost.detect_calls += share.detect_calls
+                    cost.detect_frames += share.frames
                 stage_items |= {(seg,) + it for it in items}
                 next_active[seg] = {it[1] for it in items}
 
@@ -199,4 +210,4 @@ def run_pipelined(store, config, query: str, stream: str, segments: list[int],
     return QueryResult(items=items_all, stages=stages, video_seconds=dur,
                        wall_s=time.perf_counter() - t_start,
                        pruned_segments=n_pruned, pruned_bytes=pruned_bytes,
-                       pruned_conservative=n_cons)
+                       pruned_conservative=n_cons, cost=cost)

@@ -67,6 +67,7 @@ from concurrent.futures import Future
 import numpy as np
 
 from ..analytics.batch import DEFAULT_BATCH_SHAPES, BatchedConsumer
+from ..obs.metrics import Histogram
 from ..obs.trace import span as _span
 
 
@@ -81,6 +82,9 @@ class WorkUnit:
     future: Future
     deadline: float           # enqueue time + SLO slack (max_wait default)
     waiters: int = 1          # queries attached to this unit's future
+    slo: bool = False         # admitted with an explicit deadline_s — its
+    # dispatch lateness counts toward SLO accounting (uniform max-wait
+    # units don't: the batching timer firing at the deadline is by design)
 
 
 class ConsumptionScheduler:
@@ -114,6 +118,11 @@ class ConsumptionScheduler:
         self._detect_calls = 0    # guarded-by: _mu
         self._frames = 0          # guarded-by: _mu (real rows consumed)
         self._batched_frames = 0  # guarded-by: _mu (rows incl. padding)
+        # SLO accounting per (op, cf) queue: dispatch-vs-deadline hit/miss
+        # counts and a lateness histogram, for units admitted with an
+        # explicit deadline (telemetry surfaces these per queue)
+        self._slo_counts: dict[tuple, list] = {}  # guarded-by: _mu
+        self._slo_lateness: dict[tuple, Histogram] = {}  # guarded-by: _mu
         self._dispatcher = threading.Thread(target=self._dispatch_loop,
                                             name="vstore-sched",
                                             daemon=True)
@@ -171,6 +180,7 @@ class ConsumptionScheduler:
             if unit is not None:
                 unit.waiters += 1
                 self._deduped += 1
+                unit.slo = unit.slo or deadline_s is not None
                 if deadline < unit.deadline:
                     unit.deadline = deadline
                     self._reinsert_locked(qkey, unit)
@@ -178,7 +188,7 @@ class ConsumptionScheduler:
                 return unit.future, False
             unit = WorkUnit(key=key, op=op, cf=cf, frames=frames,
                             positions=pos, future=Future(),
-                            deadline=deadline)
+                            deadline=deadline, slo=deadline_s is not None)
             self._by_key[key] = unit
             self._insert_locked(qkey, unit)
             self._enqueued += 1
@@ -272,12 +282,28 @@ class ConsumptionScheduler:
             for u in batch:
                 u.future.set_exception(e)
             return
+        done = time.perf_counter()
+        observations: list[tuple[Histogram, float]] = []
         with self._mu:
             self._dispatches += 1
             self._dispatched_units += len(batch)
             self._detect_calls += cstats.detect_calls
             self._frames += cstats.frames
             self._batched_frames += cstats.batched_frames
+            for u in batch:
+                if not u.slo:
+                    continue
+                late = done - u.deadline
+                counts = self._slo_counts.setdefault(qkey, [0, 0])
+                counts[0 if late <= 0.0 else 1] += 1
+                hist = self._slo_lateness.get(qkey)
+                if hist is None:
+                    hist = self._slo_lateness[qkey] = Histogram()
+                observations.append((hist, max(0.0, late)))
+        # the scheduler lock stays a leaf: histogram observes (which take
+        # the histogram's own lock) run after _mu is released
+        for hist, late in observations:
+            hist.observe(late)
         for i, u in enumerate(batch):
             # accounting attributed to the batch leader: summing the
             # shares across a server's queries equals the true fused cost
@@ -293,7 +319,8 @@ class ConsumptionScheduler:
         return {k: 0 for k in (
             "sched_enqueued", "sched_deduped", "sched_dispatches",
             "sched_units", "sched_detect_calls", "sched_frames",
-            "sched_batched_frames", "sched_queue_depth")} | {
+            "sched_batched_frames", "sched_queue_depth",
+            "sched_deadline_hits", "sched_deadline_misses")} | {
             "sched_fusion_ratio": 0.0, "sched_batch_occupancy": 0.0}
 
     def stats(self) -> dict:
@@ -303,6 +330,8 @@ class ConsumptionScheduler:
             depth = sum(len(q) for q in self._queues.values())
             enq, dup = self._enqueued, self._deduped
             frames, batched = self._frames, self._batched_frames
+            hits = sum(c[0] for c in self._slo_counts.values())
+            misses = sum(c[1] for c in self._slo_counts.values())
             return {
                 "sched_enqueued": enq,
                 "sched_deduped": dup,
@@ -312,11 +341,29 @@ class ConsumptionScheduler:
                 "sched_frames": frames,
                 "sched_batched_frames": batched,
                 "sched_queue_depth": depth,
+                "sched_deadline_hits": hits,
+                "sched_deadline_misses": misses,
                 # share of demanded work served by an already-queued twin
                 "sched_fusion_ratio": dup / max(1, enq + dup),
                 # real rows per operator row: 1.0 = no padding waste
                 "sched_batch_occupancy": frames / max(1, batched),
             }
+
+    def slo_snapshot(self) -> dict:
+        """Per-(op, cf) SLO accounting, wire-safe: dispatch deadline
+        hit/miss counts plus the lateness distribution of units admitted
+        with an explicit deadline.  Keys are ``"op:cf_name"``; cluster
+        rollups sum the counts and bucket-merge the histograms
+        (``repro.obs.telemetry.merge_frames``)."""
+        with self._mu:
+            counts = {qk: list(c) for qk, c in self._slo_counts.items()}
+            hists = dict(self._slo_lateness)
+        out = {}
+        for (op_name, cf), c in counts.items():
+            out[f"{op_name}:{cf.name()}"] = {
+                "hits": c[0], "misses": c[1],
+                "lateness": hists[(op_name, cf)].snapshot()}
+        return out
 
     def close(self) -> None:
         with self._mu:

@@ -30,6 +30,8 @@ from ..codec.transform import dct_backend
 from ..obs import trace as obs
 from ..obs.drift import DriftDetector
 from ..obs.metrics import MetricsRegistry
+from ..obs.telemetry import (AlertDeduper, BurnRate, SLOClass,
+                             derive_deadline_ms, drift_alert_candidates)
 from .cache import DecodedSegmentCache
 from .executor import run_pipelined
 from .planner import Request, RetrievalPlanner
@@ -57,6 +59,10 @@ class QueryRequest:
     # per-query SLO slack in ms; 0 means "no deadline" — the consumption
     # scheduler then batches this query's units at the uniform max-wait
     deadline_ms: float = 0.0
+    # named SLO class ("" = none): when set and deadline_ms is 0, the
+    # server derives the deadline from the class's slack over the derived
+    # config's profiled per-knob speeds (see obs.telemetry)
+    slo_class: str = ""
 
     def to_wire(self) -> dict:
         return {"query": self.query, "stream": self.stream,
@@ -64,7 +70,8 @@ class QueryRequest:
                 "accuracy": float(self.accuracy), "block": self.block,
                 "trace_id": int(self.trace_id),
                 "parent_span": int(self.parent_span),
-                "deadline_ms": float(self.deadline_ms)}
+                "deadline_ms": float(self.deadline_ms),
+                "slo_class": self.slo_class}
 
     @staticmethod
     def from_wire(d: dict) -> "QueryRequest":
@@ -73,7 +80,8 @@ class QueryRequest:
                             float(d["accuracy"]), bool(d.get("block", False)),
                             int(d.get("trace_id", 0)),
                             int(d.get("parent_span", 0)),
-                            float(d.get("deadline_ms", 0.0)))
+                            float(d.get("deadline_ms", 0.0)),
+                            str(d.get("slo_class", "")))
 
 
 def recovery_rank_for(config, spec, profiler=None) -> dict[str, float]:
@@ -175,13 +183,52 @@ class VStoreServer:
         self.metrics = MetricsRegistry()
         self._h_latency = self.metrics.histogram("query_latency_s")
         self.drift = DriftDetector(config, store.spec)
+        # SLO accounting (repro.obs.telemetry): registered classes derive
+        # deadlines at admission; completions feed per-class burn windows
+        # and the deadline hit/miss counters + lateness histogram below;
+        # persistent conditions (burn > 1, drifted knobs) surface as
+        # deduplicated alert events in the telemetry stream
+        self._h_lateness = self.metrics.histogram("deadline_lateness_s")
+        self._h_queue_wait = self.metrics.histogram("queue_wait_s")
+        self.slo_classes: dict[str, SLOClass] = {}  # guarded-by: _mu
+        self._burn: dict[str, BurnRate] = {}        # guarded-by: _mu
+        self.alerts = AlertDeduper()
         self._t_up = time.perf_counter()
+
+    # -- SLO classes ---------------------------------------------------------
+    def register_slo(self, name: str, slack_x: float = 3.0,
+                     target_miss_frac: float = 0.01,
+                     window_s: float = 60.0) -> SLOClass:
+        """Register (or replace) a named SLO class.  A submission naming
+        the class without an explicit ``deadline_ms`` gets one derived
+        from the class's slack over the derived config's profiled
+        per-knob speeds (``obs.telemetry.derive_deadline_ms``); its
+        hit/miss outcome then feeds the class's windowed burn rate."""
+        slo = SLOClass(name, slack_x=slack_x,
+                       target_miss_frac=target_miss_frac, window_s=window_s)
+        with self._mu:
+            self.slo_classes[name] = slo
+            self._burn[name] = BurnRate(slo)
+        return slo
+
+    def derive_deadline(self, query: str, accuracy: float,
+                        n_segments: int, slo_class: str) -> float:
+        """The ``deadline_ms`` a class-tagged submission runs under."""
+        with self._mu:
+            slo = self.slo_classes.get(slo_class)
+        if slo is None:
+            raise KeyError(f"unknown SLO class {slo_class!r} "
+                           f"(registered: {sorted(self.slo_classes)})")
+        ops = [s[0] for s in stage_specs(self.config, query, accuracy)]
+        return derive_deadline_ms(self.config, self.store.spec, ops,
+                                  accuracy, n_segments, slo.slack_x)
 
     # -- submission ----------------------------------------------------------
     def submit(self, query: str, stream: str, segments: list[int],
                accuracy: float, block: bool = False,
                trace: tuple[int, int] = (0, 0),
-               deadline_ms: float | None = None) -> QueryTicket:
+               deadline_ms: float | None = None,
+               slo_class: str = "") -> QueryTicket:
         """Admit one cascade query; returns a ticket whose ``result()``
         yields the QueryResult.  Rejects with AdmissionError at capacity
         unless ``block`` (then waits for a slot).  An identical query
@@ -191,14 +238,22 @@ class VStoreServer:
         under (a collapsed duplicate keeps the leader's context).
         ``deadline_ms`` is this query's SLO slack — its consumption units
         are admitted in deadline order within the shared scheduler's
-        queues instead of at the uniform batching max-wait."""
+        queues instead of at the uniform batching max-wait.  ``slo_class``
+        names a registered SLO class (``register_slo``): without an
+        explicit ``deadline_ms`` the deadline is *derived* from the
+        class's slack over the profiled per-knob speeds, and the query's
+        hit/miss outcome feeds the class's windowed burn rate."""
         live_key = (query, stream, tuple(segments), accuracy)
         # resolved before taking an admission slot so a bad query name
-        # raises without leaking in-flight accounting
+        # (or an unknown SLO class) raises without leaking in-flight
+        # accounting
         requests = [Request(stream, seg, sf_id, cf)
                     for _op_name, _op, cf, sf_id in
                     stage_specs(self.config, query, accuracy)
                     for seg in segments]
+        if deadline_ms is None and slo_class:
+            deadline_ms = self.derive_deadline(query, accuracy,
+                                               len(segments), slo_class)
         with self._mu:
             if self._collapse and live_key in self._live:
                 self.metrics.inc("collapsed")
@@ -233,7 +288,7 @@ class VStoreServer:
         try:
             self._pool.submit(self._run, fut, query, stream, segments,
                               accuracy, requests, live_key, trace,
-                              deadline_ms)
+                              deadline_ms, slo_class, time.perf_counter())
         except BaseException as e:  # pool shut down: roll back the slot
             self.planner.release_query(requests)
             with self._mu:
@@ -253,7 +308,10 @@ class VStoreServer:
         self.metrics.inc("video_seconds", res.video_seconds)
 
     def _run(self, fut, query, stream, segments, accuracy, requests,
-             live_key, trace=(0, 0), deadline_ms=None) -> None:
+             live_key, trace=(0, 0), deadline_ms=None, slo_class="",
+             submitted_at=None) -> None:
+        queue_wait = (time.perf_counter() - submitted_at
+                      if submitted_at is not None else 0.0)
         try:
             # adopt the caller's trace context (a router's rpc span when
             # the request came over the wire) and wrap the execution in a
@@ -281,6 +339,26 @@ class VStoreServer:
                 self.metrics.inc("index_pruned_conservative",
                                  res.pruned_conservative)
             self._h_latency.observe(res.wall_s)
+            self._h_queue_wait.observe(queue_wait)
+            res.cost.queue_wait_s = queue_wait
+            if deadline_ms:
+                # query-level SLO outcome: the whole cascade against its
+                # deadline.  Hit/miss counters sum exactly across shards
+                # (the telemetry rollup's bit-exactness gate); lateness is
+                # distribution-valued and bucket-merges.
+                slack = deadline_ms / 1e3 - res.wall_s
+                missed = slack < 0
+                self.metrics.inc("deadline_misses" if missed
+                                 else "deadline_hits")
+                self._h_lateness.observe(max(0.0, -slack))
+                res.cost.deadline_ms = float(deadline_ms)
+                res.cost.deadline_slack_s = slack
+                res.cost.deadline_met = not missed
+                if slo_class:
+                    with self._mu:
+                        burn = self._burn.get(slo_class)
+                    if burn is not None:
+                        burn.record(missed)
             self.drift.observe(accuracy, res)
             fut.set_result(res)
         except BaseException as e:
@@ -299,7 +377,8 @@ class VStoreServer:
         return self.submit(req.query, req.stream, req.segments, req.accuracy,
                            block=req.block,
                            trace=(req.trace_id, req.parent_span),
-                           deadline_ms=req.deadline_ms or None)
+                           deadline_ms=req.deadline_ms or None,
+                           slo_class=req.slo_class)
 
     def run_batch(self, submissions: list[tuple], block: bool = True
                   ) -> list[QueryResult]:
@@ -383,6 +462,8 @@ class VStoreServer:
             "rejected": int(counters.get("rejected", 0)),
             "failed": int(counters.get("failed", 0)),
             "collapsed": int(counters.get("collapsed", 0)),
+            "deadline_hits": int(counters.get("deadline_hits", 0)),
+            "deadline_misses": int(counters.get("deadline_misses", 0)),
             "inflight": inflight,
             "video_seconds": video_seconds,
             "query_wall_s": counters.get("query_wall_s", 0.0),
@@ -406,6 +487,68 @@ class VStoreServer:
             "index_pruned_conservative":
                 int(counters.get("index_pruned_conservative", 0)),
             **planner,
+        }
+
+    # -- telemetry ------------------------------------------------------------
+    def _collect_alerts(self) -> list[dict]:
+        """Fold persistent conditions into the deduplicated alert stream
+        and drain it: one alert per drifted knob per window (not one per
+        query — the drift report flags the knob on every sample while it
+        under-performs) and one per SLO class whose burn exceeds its
+        budget."""
+        for key, msg, attrs in drift_alert_candidates(self.drift.report()):
+            self.alerts.emit(key, "warn", msg, **attrs)
+        with self._mu:
+            burns = list(self._burn.items())
+        for name, burn in burns:
+            snap = burn.snapshot()
+            if snap["burn"] > 1.0:
+                self.alerts.emit(
+                    f"slo_burn:{name}", "critical",
+                    f"SLO class {name} burning {snap['burn']:.1f}x its "
+                    f"error budget ({snap['window_misses']}/"
+                    f"{snap['window_total']} missed in window)",
+                    slo_class=name, burn=snap["burn"])
+        return self.alerts.drain()
+
+    def telemetry_body(self) -> dict:
+        """One telemetry frame body: the full metrics registry snapshot
+        (with the cache/planner/scheduler counters folded in, so the
+        series is self-contained), per-queue and per-class SLO state, and
+        the drained alert stream.  This is what the ``TelemetrySampler``
+        writes every interval and what the ``telemetry`` wire op returns
+        to the router's cluster scrape."""
+        cache = self.cache.stats_snapshot()
+        planner = self.planner.stats()
+        sched = (self.sched.stats() if self.sched is not None
+                 else ConsumptionScheduler.zero_stats())
+        with self._mu:
+            inflight = self._inflight
+            burns = list(self._burn.items())
+        self.metrics.set_gauge("inflight", inflight)
+        self.metrics.set_gauge("queue_depth", sched["sched_queue_depth"])
+        self.metrics.set_gauge("fusion_ratio", sched["sched_fusion_ratio"])
+        self.metrics.set_gauge("batch_occupancy",
+                               sched["sched_batch_occupancy"])
+        snap = self.metrics.snapshot()
+        counters = snap["counters"]
+        for k in ("hits", "richer_hits", "misses", "lookups", "evictions"):
+            counters[f"cache_{k}"] = cache.get(k, 0)
+        for k in ("decodes", "decode_bytes", "decode_chunks",
+                  "coalesced_cfs", "inflight_hits"):
+            counters[k] = planner.get(k, 0)
+        for k, v in sched.items():
+            if k not in ("sched_fusion_ratio", "sched_batch_occupancy",
+                         "sched_queue_depth"):
+                counters[k] = v
+        return {
+            "metrics": snap,
+            "slo": {
+                "queues": (self.sched.slo_snapshot()
+                           if self.sched is not None else {}),
+                "classes": {name: b.snapshot() for name, b in burns},
+            },
+            "alerts": self._collect_alerts(),
         }
 
     def close(self):

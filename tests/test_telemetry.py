@@ -1,0 +1,543 @@
+"""Continuous telemetry & SLO accounting: crash-safe log durability
+(append/fsync, torn-tail truncation, read-only tailing), sampler
+behavior, SLO deadline derivation from profiled speeds, burn-rate
+windows, alert dedup, per-query cost attribution, cluster merge
+bit-exactness (hypothesis property included), a SIGKILL'd shard whose
+log reopens cleanly, and the vtop dashboard."""
+
+import functools
+import os
+import struct
+import tempfile
+import time
+
+import pytest
+
+from _hyp_compat import given, settings, st
+from repro.analytics.query import QueryCost, run_query, stage_specs
+from repro.analytics.scene import generate_segment
+from repro.core.knobs import IngestSpec
+from repro.launch import vtop
+from repro.launch.vserve import demo_config
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.telemetry import (AlertDeduper, BurnRate, SLOClass,
+                                 TelemetryError, TelemetryLog,
+                                 TelemetrySampler, derive_deadline_ms,
+                                 drift_alert_candidates, merge_frames,
+                                 read_frames)
+from repro.serving import VStoreServer
+from repro.videostore import VideoStore
+
+N_SEGS = 2
+
+
+@functools.cache
+def _built_store():
+    root = tempfile.mkdtemp(prefix="repro_telemetry_")
+    spec = IngestSpec()
+    cfg = demo_config()
+    vs = VideoStore(root, spec)
+    vs.set_formats(cfg.storage_formats())
+    for seg in range(N_SEGS):
+        frames, _ = generate_segment("jackson", seg, spec)
+        vs.ingest_segment("jackson", seg, frames)
+    return vs, cfg
+
+
+# ---------------------------------------------------------------------------
+# TelemetryLog durability
+# ---------------------------------------------------------------------------
+
+def test_log_append_read_roundtrip(tmp_path):
+    path = str(tmp_path / "a.vtl")
+    with TelemetryLog(path) as log:
+        assert log.append({"t": 1.0, "x": 1}) == 1
+        assert log.append({"t": 2.0, "x": 2}) == 2
+        assert log.seq == 2
+    frames = read_frames(path)
+    assert [f["seq"] for f in frames] == [1, 2]
+    assert [f["x"] for f in frames] == [1, 2]
+
+
+def test_log_reopen_resumes_sequence(tmp_path):
+    path = str(tmp_path / "a.vtl")
+    with TelemetryLog(path) as log:
+        for i in range(3):
+            log.append({"i": i})
+    log2 = TelemetryLog(path)
+    assert log2.frames_recovered == 3
+    assert log2.truncated_bytes == 0
+    assert log2.append({"i": 3}) == 4
+    log2.close()
+    assert [f["seq"] for f in read_frames(path)] == [1, 2, 3, 4]
+
+
+def test_log_truncates_torn_tail_on_writable_reopen(tmp_path):
+    path = str(tmp_path / "a.vtl")
+    with TelemetryLog(path) as log:
+        log.append({"i": 0})
+        log.append({"i": 1})
+    # simulate a crash mid-append: a length prefix promising more bytes
+    # than were ever written
+    with open(path, "ab") as f:
+        f.write(struct.pack(">I", 1 << 20) + b"\x00\x01\x02")
+    log2 = TelemetryLog(path)
+    assert log2.frames_recovered == 2
+    assert log2.truncated_bytes == 7  # 4-byte length prefix + 3 torn bytes
+    assert log2.append({"i": 2}) == 3  # lands on a clean frame boundary
+    log2.close()
+    assert [f["i"] for f in read_frames(path)] == [0, 1, 2]
+
+
+def test_read_frames_skips_torn_tail_without_mutating(tmp_path):
+    path = str(tmp_path / "a.vtl")
+    with TelemetryLog(path) as log:
+        log.append({"i": 0})
+    with open(path, "ab") as f:
+        f.write(struct.pack(">I", 64) + b"short")
+    size = os.path.getsize(path)
+    frames = read_frames(path)
+    assert [f["i"] for f in frames] == [0]
+    assert os.path.getsize(path) == size  # read-only: tail untouched
+
+
+def test_log_rejects_bad_magic(tmp_path):
+    path = str(tmp_path / "junk.vtl")
+    with open(path, "wb") as f:
+        f.write(b"NOTATELEMETRYLOG")
+    with pytest.raises(TelemetryError):
+        read_frames(path)
+    with pytest.raises(TelemetryError):
+        TelemetryLog(path)
+
+
+def test_closed_log_refuses_appends(tmp_path):
+    log = TelemetryLog(str(tmp_path / "a.vtl"))
+    log.close()
+    with pytest.raises(TelemetryError):
+        log.append({})
+
+
+# ---------------------------------------------------------------------------
+# sampler
+# ---------------------------------------------------------------------------
+
+def test_sampler_sample_now_and_final_frame(tmp_path):
+    path = str(tmp_path / "s.vtl")
+    reg = MetricsRegistry()
+    reg.inc("completed", 5)
+
+    def body():
+        return {"metrics": reg.snapshot()}
+
+    s = TelemetrySampler(body, TelemetryLog(path), interval_s=30.0,
+                         clock=lambda: 123.0)
+    assert s.sample_now() == 1
+    s.stop(final=True)  # second (final) frame, then close
+    assert s.samples == 2
+    frames = read_frames(path)
+    assert len(frames) == 2
+    assert frames[0]["t"] == 123.0
+    assert frames[0]["metrics"]["counters"]["completed"] == 5
+
+
+def test_sampler_swallows_source_failures(tmp_path):
+    s = TelemetrySampler(lambda: 1 / 0, TelemetryLog(str(tmp_path / "e.vtl")),
+                         interval_s=30.0)
+    assert s.sample_now() is None
+    assert s.errors == 1 and s.samples == 0
+    s.stop(final=False)
+
+
+def test_sampler_background_loop(tmp_path):
+    path = str(tmp_path / "bg.vtl")
+    s = TelemetrySampler(lambda: {"x": 1}, TelemetryLog(path),
+                         interval_s=0.01).start()
+    deadline = time.monotonic() + 5.0
+    while s.samples < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    s.stop(final=True)
+    frames = read_frames(path)
+    assert len(frames) >= 4
+    assert [f["seq"] for f in frames] == list(range(1, len(frames) + 1))
+
+
+# ---------------------------------------------------------------------------
+# SLO classes / deadline derivation / burn / alerts
+# ---------------------------------------------------------------------------
+
+def test_slo_class_validation():
+    with pytest.raises(ValueError):
+        SLOClass("x", slack_x=0.0)
+    with pytest.raises(ValueError):
+        SLOClass("x", target_miss_frac=0.0)
+
+
+def test_derive_deadline_from_profiled_speeds():
+    """The satellite contract: a class-tagged query's deadline comes from
+    the DerivedConfig's *profiled* per-knob speeds — slack_x times the
+    sum of per-stage full-scan times at the chosen accuracy."""
+    cfg = demo_config()
+    spec = IngestSpec()
+    for q, acc in (("A", 0.8), ("B", 0.9)):
+        ops = [s[0] for s in stage_specs(cfg, q, acc)]
+        video_s = 3 * spec.segment_seconds
+        want = 2.5 * sum(video_s / cfg.consumer_speed(op, acc)
+                         for op in ops) * 1e3
+        got = derive_deadline_ms(cfg, spec, ops, acc, 3, slack_x=2.5)
+        assert got == pytest.approx(want)
+        assert got > 0
+
+
+def test_server_derive_deadline_matches_module_fn():
+    vs, cfg = _built_store()
+    with VStoreServer(vs, cfg, workers=1) as srv:
+        srv.register_slo("interactive", slack_x=4.0)
+        ops = [s[0] for s in stage_specs(cfg, "A", 0.8)]
+        want = derive_deadline_ms(cfg, vs.spec, ops, 0.8, N_SEGS,
+                                  slack_x=4.0)
+        assert srv.derive_deadline("A", 0.8, N_SEGS,
+                                   "interactive") == pytest.approx(want)
+        with pytest.raises(KeyError):
+            srv.derive_deadline("A", 0.8, N_SEGS, "nope")
+
+
+def test_burn_rate_windowing():
+    now = [0.0]
+    br = BurnRate(SLOClass("x", target_miss_frac=0.1, window_s=10.0),
+                  clock=lambda: now[0])
+    for _ in range(8):
+        br.record(False)
+    br.record(True)
+    br.record(True)
+    s = br.snapshot()
+    assert s["window_total"] == 10 and s["window_misses"] == 2
+    assert s["burn"] == pytest.approx(0.2 / 0.1)
+    now[0] = 11.0  # everything ages out of the window
+    s = br.snapshot()
+    assert s["window_total"] == 0 and s["burn"] == 0.0
+    assert s["hits"] == 8 and s["misses"] == 2  # lifetime counters stay
+
+
+def test_alert_deduper_window():
+    now = [0.0]
+    d = AlertDeduper(window_s=30.0, clock=lambda: now[0],
+                     wall=lambda: 99.0)
+    assert d.emit("k", "warn", "m1") is True
+    assert d.emit("k", "warn", "m2") is False  # deduped inside the window
+    assert d.emit("other", "warn", "m3") is True
+    now[0] = 31.0
+    assert d.emit("k", "warn", "m4") is True
+    drained = d.drain()
+    assert [a["message"] for a in drained] == ["m1", "m3", "m4"]
+    assert all(a["t"] == 99.0 for a in drained)
+    assert d.drain() == []
+
+
+def test_drift_alerts_dedup_across_reports():
+    report = {"consumption": {
+        "nn@0.9": {"drifted": True, "expected_x": 30.0, "observed_x": 10.0,
+                   "ratio": 0.33},
+        "diff@0.8": {"drifted": False, "expected_x": 1.0, "observed_x": 1.0,
+                     "ratio": 1.0}},
+        "retrieval": {}}
+    cands = drift_alert_candidates(report)
+    assert [k for k, _m, _a in cands] == ["drift:consumption:nn@0.9"]
+    now = [0.0]
+    d = AlertDeduper(window_s=30.0, clock=lambda: now[0])
+    emitted = [d.emit(k, "warn", m, **a) for k, m, a in cands]
+    # the same report scraped again inside the window adds nothing
+    emitted += [d.emit(k, "warn", m, **a) for k, m, a in cands]
+    assert emitted == [True, False]
+    assert len(d.drain()) == 1
+
+
+# ---------------------------------------------------------------------------
+# cluster merge semantics (incl. the hypothesis property)
+# ---------------------------------------------------------------------------
+
+def _body(counters=None, hist_vals=(), queues=None, classes=None,
+          alerts=()):
+    h = Histogram()
+    for v in hist_vals:
+        h.observe(v)
+    return {"metrics": {"counters": dict(counters or {}), "gauges": {},
+                        "histograms": {"query_latency_s": h.snapshot()}},
+            "slo": {"queues": queues or {}, "classes": classes or {}},
+            "alerts": list(alerts)}
+
+
+def test_merge_frames_sums_counters_and_keeps_worst_burn():
+    a = _body({"deadline_hits": 3, "deadline_misses": 1}, (0.1, 0.2),
+              classes={"x": {"hits": 3, "misses": 1, "window_total": 4,
+                             "window_misses": 1, "burn": 0.5,
+                             "window_miss_rate": 0.25}},
+              alerts=[{"key": "k1", "severity": "warn", "message": "m"}])
+    b = _body({"deadline_hits": 2, "deadline_misses": 4}, (0.4,),
+              classes={"x": {"hits": 2, "misses": 4, "window_total": 6,
+                             "window_misses": 4, "burn": 2.0,
+                             "window_miss_rate": 0.66}})
+    m = merge_frames([a, b])
+    c = m["metrics"]["counters"]
+    assert c["deadline_hits"] == 5 and c["deadline_misses"] == 5
+    assert m["metrics"]["histograms"]["query_latency_s"]["count"] == 3
+    cls = m["slo"]["classes"]["x"]
+    assert cls["hits"] == 5 and cls["misses"] == 5
+    assert cls["burn"] == 2.0  # worst shard, never averaged
+    assert m["alerts"] == [{"key": "k1", "severity": "warn",
+                            "message": "m", "source": 0}]
+    assert m["sources"] == 2
+
+
+def test_merge_frames_merges_slo_queues():
+    qa = {"nn:q1.00_c1.00_r720_s0.67": {
+        "hits": 2, "misses": 1, "lateness": _hist_snap([0.01])}}
+    qb = {"nn:q1.00_c1.00_r720_s0.67": {
+        "hits": 1, "misses": 0, "lateness": _hist_snap([0.5])}}
+    m = merge_frames([_body(queues=qa), _body(queues=qb)])
+    row = m["slo"]["queues"]["nn:q1.00_c1.00_r720_s0.67"]
+    assert row["hits"] == 3 and row["misses"] == 1
+    assert row["lateness"]["count"] == 2
+
+
+def _hist_snap(vals):
+    h = Histogram()
+    for v in vals:
+        h.observe(v)
+    return h.snapshot()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.lists(st.floats(0.0, 20.0, allow_nan=False,
+                                   allow_infinity=False),
+                         max_size=20), min_size=1, max_size=5))
+def test_merged_histogram_equals_single_process(shards):
+    """The bit-exactness property behind the cluster rollup: sharding the
+    observations across N processes and bucket-merging their snapshots
+    yields the same distribution as one process observing everything —
+    identical bucket counts, extrema, and (hence) percentiles."""
+    single = Histogram()
+    for vals in shards:
+        for v in vals:
+            single.observe(v)
+    merged = Histogram.merge([_hist_snap(vals) for vals in shards])
+    want = single.snapshot()
+    for k in ("count", "counts", "min", "max", "p50", "p95", "p99",
+              "bounds"):
+        assert merged[k] == want[k], k
+    assert merged["sum"] == pytest.approx(want["sum"])
+
+
+# ---------------------------------------------------------------------------
+# server SLO accounting + per-query cost attribution
+# ---------------------------------------------------------------------------
+
+def test_server_slo_accounting_and_query_cost():
+    vs, cfg = _built_store()
+    segs = list(range(N_SEGS))
+    run_query(vs, cfg, "A", "jackson", segs, 0.8)  # warm jit caches
+    with VStoreServer(vs, cfg, workers=2, collapse=False) as srv:
+        srv.register_slo("interactive", slack_x=50.0,
+                         target_miss_frac=0.5)
+        srv.register_slo("doomed", slack_x=50.0, target_miss_frac=0.01)
+        # generous derived deadline -> hit
+        hit = srv.submit("A", "jackson", segs, 0.8, block=True,
+                         slo_class="interactive").result(120)
+        # explicit impossible deadline -> miss, burns the tight class
+        miss = srv.submit("A", "jackson", segs, 0.8, block=True,
+                          deadline_ms=0.001, slo_class="doomed").result(120)
+        st_ = srv.stats()
+        body = srv.telemetry_body()
+    assert hit.cost.deadline_met and hit.cost.deadline_ms > 0
+    assert hit.cost.deadline_slack_s > 0
+    assert not miss.cost.deadline_met and miss.cost.deadline_slack_s < 0
+    assert st_["deadline_hits"] == 1 and st_["deadline_misses"] == 1
+    # cost attribution: the cold query decoded real bytes
+    first = hit if hit.cost.decode_bytes else miss
+    assert first.cost.decode_bytes > 0 and first.cost.decode_chunks > 0
+    assert first.cost.decoded_frames > 0
+    assert (hit.cost.detect_calls > 0 and hit.cost.detect_frames > 0)
+    total = QueryCost()
+    total.add(hit.cost)
+    total.add(miss.cost)
+    # the second identical query was served from cache/planner sharing:
+    # summed ledgers still account every fetch
+    assert (total.cache_hits + total.cache_richer_hits
+            + total.cache_inflight_hits + total.cache_misses) > 0
+    assert total.queue_wait_s >= 0.0
+    # telemetry frame: counters folded in, burn + alert for the miss
+    c = body["metrics"]["counters"]
+    assert c["deadline_hits"] == 1 and c["deadline_misses"] == 1
+    assert c["completed"] == 2
+    assert body["slo"]["classes"]["doomed"]["burn"] > 1.0
+    assert any(a["key"] == "slo_burn:doomed" for a in body["alerts"])
+    assert "query_latency_s" in body["metrics"]["histograms"]
+
+
+def test_scheduler_slo_snapshot_counts_deadlined_units():
+    vs, cfg = _built_store()
+    segs = list(range(N_SEGS))
+    with VStoreServer(vs, cfg, workers=2, collapse=False,
+                      cross_query_batching=True) as srv:
+        srv.submit("A", "jackson", segs, 0.8, block=True,
+                   deadline_ms=600_000.0).result(120)
+        srv.submit("A", "jackson", segs, 0.8, block=True).result(120)
+        snap = srv.sched.slo_snapshot()
+        st_ = srv.stats()
+    assert snap, "deadlined units must appear in the SLO snapshot"
+    hits = sum(r["hits"] for r in snap.values())
+    misses = sum(r["misses"] for r in snap.values())
+    assert hits > 0 and misses == 0  # 10-minute slack cannot miss
+    for row in snap.values():
+        assert row["lateness"]["count"] == row["hits"] + row["misses"]
+    assert st_["sched_deadline_hits"] == hits
+    assert st_["sched_deadline_misses"] == 0
+
+
+def test_query_cost_rides_the_wire():
+    from repro.analytics.query import QueryResult
+    from repro.cluster import pack, unpack
+    res = QueryResult(items={(1, 0.5, "car")}, stages=[],
+                      video_seconds=1.0, wall_s=0.5,
+                      cost=QueryCost(decode_bytes=7, deadline_ms=9.0,
+                                     deadline_met=False))
+    back = QueryResult.from_wire(unpack(pack(res.to_wire())))
+    assert back.cost == res.cost
+    # pre-cost peers (older wire frames) default to an empty ledger
+    d = res.to_wire()
+    del d["cost"]
+    assert QueryResult.from_wire(d).cost == QueryCost()
+
+
+# ---------------------------------------------------------------------------
+# cluster: per-shard logs, merged scrape, SIGKILL mid-sampling
+# ---------------------------------------------------------------------------
+
+def test_cluster_telemetry_survives_sigkill_mid_sampling(tmp_path):
+    """Workers sample their own crash-safe logs; the router's scrape
+    merges live shards with exact counter sums; a SIGKILL'd worker's log
+    reopens readable to the last fsync'd frame with a contiguous seq."""
+    from repro.cluster import ShardRouter
+    spec = IngestSpec()
+    cfg = demo_config()
+    tdir = str(tmp_path / "vtl")
+    streams = ["jackson", "tucson"]  # hash to shards 1 and 0
+    router = ShardRouter(str(tmp_path / "cluster"), cfg, 2, spec=spec,
+                         opts={"workers": 1, "telemetry_dir": tdir,
+                               "telemetry_interval_s": 0.05,
+                               "slo_classes": {
+                                   "interactive": {"slack_x": 50.0}}})
+    try:
+        router.start()
+        router.attach_telemetry(interval_s=0.05)
+        for s in streams:
+            router.ingest(s, 0, generate_segment(s, 0, spec)[0])
+        # distinct submissions: identical in-flight queries collapse onto
+        # one execution, which would (correctly) count one SLO outcome
+        subs = [("A", s, [0], acc, {"slo_class": "interactive"})
+                for s in streams for acc in (0.8, 0.9)]
+        router.query_many(subs)
+
+        # force one durable sample per worker, then check the merged
+        # scrape's deadline counters equal the per-shard sums bit-exactly
+        for h in router.hosts:
+            assert h.call("sample_telemetry") >= 1
+        parts = [h.call("telemetry") for h in router.hosts]
+        merged = router.telemetry_scrape()
+        for key in ("deadline_hits", "deadline_misses", "completed"):
+            want = sum(p["metrics"]["counters"].get(key, 0) for p in parts)
+            assert merged["metrics"]["counters"].get(key, 0) == want, key
+        assert merged["metrics"]["counters"]["deadline_hits"] == len(subs)
+        assert merged["sources"] == 2
+        assert all(s["alive"] for s in merged["shards"])
+
+        victim = router.host_of("jackson")
+        path = os.path.join(tdir, f"shard-{victim.idx:02d}.vtl")
+        deadline = time.monotonic() + 10.0
+        while len(read_frames(path)) < 3 and time.monotonic() < deadline:
+            time.sleep(0.02)
+        victim.kill()  # SIGKILL with the sampler loop mid-flight
+
+        # the dead worker's log reads cleanly to the last fsync'd frame
+        frames = read_frames(path)
+        assert len(frames) >= 3
+        assert [f["seq"] for f in frames] == list(range(1, len(frames) + 1))
+        assert frames[-1]["metrics"]["counters"]["deadline_hits"] >= 1
+
+        # a monitoring scrape skips the dead shard instead of respawning
+        merged2 = router.telemetry_scrape()
+        assert merged2["sources"] == 1
+        dead = [s for s in merged2["shards"] if not s["alive"]]
+        assert [s["shard"] for s in dead] == [victim.idx]
+        assert (victim.process is None
+                or not victim.process.is_alive())
+
+        # a writable reopen (what the respawned worker does) lands on a
+        # frame boundary and resumes the sequence
+        relog = TelemetryLog(path)
+        assert relog.frames_recovered == len(frames)
+        assert relog.append({"probe": True}) == len(frames) + 1
+        relog.close()
+    finally:
+        router.close()
+
+    # the router's own merged series reached cluster.vtl durably
+    cluster_frames = read_frames(os.path.join(tdir, "cluster.vtl"))
+    assert cluster_frames
+    assert [f["seq"] for f in cluster_frames] == \
+        list(range(1, len(cluster_frames) + 1))
+    assert cluster_frames[-1]["shards"]
+
+
+# ---------------------------------------------------------------------------
+# vtop
+# ---------------------------------------------------------------------------
+
+def test_vtop_render_sources():
+    frames = [
+        _body({"completed": 4, "deadline_hits": 3, "deadline_misses": 1,
+               "cache_lookups": 10, "cache_hits": 6, "decodes": 4,
+               "decode_bytes": 1 << 20},
+              (0.05, 0.1),
+              classes={"x": {"burn": 2.0, "window_misses": 1,
+                             "window_total": 4, "target_miss_frac": 0.01,
+                             "window_s": 60.0}},
+              alerts=[{"key": "slo_burn:x", "severity": "critical",
+                       "message": "budget exceeded"}]),
+    ]
+    frames[0]["t"] = 100.0
+    frames[0]["seq"] = 1
+    cluster = dict(frames[0])
+    cluster["shards"] = [{"shard": 0, "alive": True, "generation": 1,
+                          "restarts": 0},
+                         {"shard": 1, "alive": False, "generation": 2,
+                          "restarts": 1}]
+    cluster["sources"] = 2
+    out = vtop.render({"cluster": [cluster], "shard-00": frames},
+                      clock=lambda: 101.0)
+    assert "cluster" in out.splitlines()[2]  # merged series renders first
+    assert "3 hit / 1 missed" in out
+    assert "BURNING" in out
+    assert "slo_burn:x" in out
+    assert "0:up/g1/r0" in out and "1:DOWN/g2/r1" in out
+    assert "60% hit" in out
+    assert vtop.render({}) == "vtop: no telemetry frames yet"
+
+
+def test_vtop_rate_from_counter_deltas():
+    a = _body({"completed": 10})
+    b = _body({"completed": 25})
+    a["t"], b["t"] = 100.0, 105.0
+    assert vtop._rate([a, b], "completed") == pytest.approx(3.0)
+    assert vtop._rate([a], "completed") == 0.0
+
+
+def test_vtop_once_over_real_logs(tmp_path, capsys):
+    d = str(tmp_path)
+    with TelemetryLog(os.path.join(d, "server.vtl")) as log:
+        body = _body({"completed": 2})
+        body["t"] = 1.0
+        log.append(body)
+    assert vtop.main(["--telemetry", d, "--once"]) == 0
+    out = capsys.readouterr().out
+    assert "server: 1 frames" in out and "2 done" in out

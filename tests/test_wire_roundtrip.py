@@ -15,7 +15,7 @@ import os
 import pytest
 
 from _hyp_compat import given, settings, st
-from repro.analytics.query import QueryResult, StageStats
+from repro.analytics.query import QueryCost, QueryResult, StageStats
 from repro.cluster import wire
 from repro.core.coalesce import SFNode
 from repro.core.configure import DerivedConfig
@@ -118,14 +118,23 @@ def _check_erosion_plan():
 
 # name -> round-trip check; keep in sync with every discovered form
 FACTORIES = {
+    "QueryCost": lambda: _eq_roundtrip(
+        QueryCost(decode_bytes=4096, decode_chunks=3, decoded_frames=96,
+                  detect_frames=64, detect_calls=2, cache_hits=1,
+                  cache_richer_hits=1, cache_inflight_hits=1,
+                  cache_misses=2, queue_wait_s=0.125, sched_wait_s=0.25,
+                  deadline_ms=50.0, deadline_slack_s=0.01,
+                  deadline_met=False)),
     "QueryRequest": lambda: _eq_roundtrip(
         QueryRequest("A", "cam0", [1, 2, 3], 0.9, block=True,
-                     trace_id=7, parent_span=9, deadline_ms=12.5)),
+                     trace_id=7, parent_span=9, deadline_ms=12.5,
+                     slo_class="interactive")),
     "QueryResult": lambda: _eq_roundtrip(
         QueryResult(items={(3, 0.5, "car"), (4, 0.25, "bus")},
                     stages=[_stage()], video_seconds=12.0, wall_s=0.75,
                     pruned_segments=3, pruned_bytes=4096,
-                    pruned_conservative=1)),
+                    pruned_conservative=1,
+                    cost=QueryCost(decode_bytes=64, detect_frames=8))),
     "SketchRecord": lambda: _eq_roundtrip(
         SketchRecord(op="diff", cf=_cf(), sf_id="sf1", accuracy=0.9,
                      n_buckets=8, buckets=(1, 3, 5), items=7,
